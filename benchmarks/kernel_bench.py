@@ -1,0 +1,58 @@
+"""MC kernel microbenchmark + VMEM/block-shape table.
+
+On CPU the Pallas kernel runs in interpret mode (Python-level, orders of
+magnitude slower than compiled XLA) so wall-clock here compares the
+pure-JAX engine against itself at different chunkings, and the kernel's
+TPU characteristics are reported analytically: VMEM footprint and
+arithmetic intensity per (F_BLK, S_BLK) tile choice — the §Perf block-shape
+sweep. The kernel/oracle equivalence is asserted by the test suite.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import family_sums, harmonic_family
+from repro.core import rng as rng_lib
+
+THREEFRY_FLOPS = 110          # u32 ops per 32-bit draw (20 rounds)
+EVAL_FLOPS = 20               # affine + fma + cos/sin amortised
+
+
+def vmem_table():
+    print("# mc_eval block-shape table (per grid instance, dim=4)")
+    print("F_BLK, S_BLK, vmem_KiB, flop_per_byte_out")
+    for f_blk in (8, 16, 32):
+        for s_rows in (8, 16, 32):
+            s_blk = s_rows * 128
+            tiles = 6 * s_blk * 4                   # live u32/f32 tiles
+            params = f_blk * (2 + 3 * 4) * 4
+            out = f_blk * 2 * 4
+            vmem = (tiles + params + out) / 1024
+            flops = f_blk * 4 * (THREEFRY_FLOPS + EVAL_FLOPS) * s_blk
+            print(f"{f_blk:5d}, {s_blk:5d}, {vmem:8.1f}, "
+                  f"{flops / max(out, 1):10.0f}")
+
+
+def engine_bench():
+    fam = harmonic_family(100, 4)
+    key = rng_lib.fold_key(0, 0)
+    print("name,us_per_call,derived")
+    for chunk in (4096, 16384, 65536):
+        family_sums(fam, 200_000, key, chunk=chunk).s1.block_until_ready()
+        t0 = time.time()
+        family_sums(fam, 200_000, key, chunk=chunk).s1.block_until_ready()
+        dt = time.time() - t0
+        rate = 100 * 200_000 / dt
+        print(f"engine_chunk{chunk},{dt*1e6:.0f},{rate:.3e} samples/s")
+
+
+def main():
+    vmem_table()
+    engine_bench()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+# One function per paper table/claim. Prints ``name,us_per_call,derived``
+# CSV rows plus section headers; `python -m benchmarks.run --fast` trims
+# sample counts for CI.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def table_fig1(fast: bool) -> None:
+    """Paper Fig. 1: 100 harmonic integrands, band vs analytic."""
+    from benchmarks.fig1_harmonic import run
+    r = run(samples=20_000 if fast else 10**5,
+            trials=4 if fast else 10, verbose=False)
+    print(f"fig1_coverage_2sigma,{r['seconds_per_trial']*1e6:.0f},"
+          f"{r['coverage_2sigma']:.3f}")
+    print(f"fig1_coverage_3sigma,{r['seconds_per_trial']*1e6:.0f},"
+          f"{r['coverage_3sigma']:.3f}")
+
+
+def table_multifunction_throughput(fast: bool) -> None:
+    """Paper claim: 10^3 integrands (<5 dim) in <10 min on one V100."""
+    from benchmarks.throughput import bench
+    n = 200 if fast else 1000
+    r = bench(n, 20_000 if fast else 50_000)
+    print(f"throughput_{n}fns,{r['seconds']*1e6:.0f},"
+          f"{r['samples_per_s']:.3e} samples/s; "
+          f"v5e projection {r['v5e_projection_s']:.2f}s")
+
+
+def table_eq2_heterogeneous(fast: bool) -> None:
+    """Paper Eq. (2): mixed-dim families in one evaluation."""
+    import numpy as np
+    from repro.core import (MultiFunctionSpec, ZMCMultiFunctions,
+                            abs_sum_family)
+    spec = MultiFunctionSpec.from_families([
+        abs_sum_family(49, 2, np.ones(49)),
+        abs_sum_family(51, 3, np.ones(51), sign_last=-1.0),
+    ])
+    z = ZMCMultiFunctions(spec, n_samples=20_000 if fast else 100_000, seed=0)
+    t0 = time.time()
+    r = z.evaluate(num_trials=2)
+    dt = time.time() - t0
+    # dim-2 family: exact integral == 1 for every n
+    err2 = float(np.abs(r.trial_mean[:49] - 1.0).max())
+    print(f"eq2_mixed_dims,{dt*1e6:.0f},max_err_dim2={err2:.4f}")
+
+
+def table_tree_search(fast: bool) -> None:
+    """ZMCintegral_normal: adaptive refinement beats flat stratification."""
+    import jax.numpy as jnp
+    from repro.core import ZMCNormal
+    f = lambda x: jnp.exp(-60.0 * jnp.sum(jnp.square(x - 0.85), axis=-1))
+    flat = ZMCNormal(f, [[0, 1]] * 3, seed=1, splits_per_dim=4,
+                     n_per_stratum=256, depth=0, k_split=16)
+    deep = ZMCNormal(f, [[0, 1]] * 3, seed=1, splits_per_dim=4,
+                     n_per_stratum=256, depth=8, k_split=16)
+    t0 = time.time()
+    r_flat = flat.evaluate(num_trials=2)
+    r_deep = deep.evaluate(num_trials=2)
+    dt = time.time() - t0
+    gain = r_flat.stderr / max(r_deep.stderr, 1e-12)
+    print(f"tree_search_stderr_gain,{dt*1e6:.0f},{gain:.2f}x")
+
+
+def table_genz(fast: bool) -> None:
+    """Beyond-paper: MC vs RQMC across the Genz cubature suite."""
+    from benchmarks.genz_accuracy import run
+    rows = run(samples=8192 if fast else 32768, n=4 if fast else 8,
+               trials=3 if fast else 4)
+    for r in rows:
+        print(f"genz_{r['family']},0,rms_mc={r['rms_rel_mc']:.2e} "
+              f"rms_rqmc={r['rms_rel_sobol']:.2e} "
+              f"gain={r['rqmc_gain']:.0f}x")
+
+
+def table_kernel(fast: bool) -> None:
+    from benchmarks.kernel_bench import engine_bench, vmem_table
+    vmem_table()
+    engine_bench()
+
+
+def table_roofline(fast: bool) -> None:
+    """Aggregate the dry-run artifacts into the roofline table."""
+    import glob
+    import os
+    from benchmarks.roofline import ART_DIR, build_table
+    if not glob.glob(os.path.join(ART_DIR, "*.json")):
+        print("roofline,0,SKIPPED (run `python -m repro.launch.dryrun --all`"
+              " first)")
+        return
+    table = build_table()
+    n_rows = len(table.splitlines()) - 2
+    out = os.path.join(ART_DIR, "roofline.md")
+    with open(out, "w") as f:
+        f.write(table + "\n")
+    print(f"roofline_cells,0,{n_rows} rows -> {out}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sample counts (CI sizing)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    tables = {
+        "fig1": table_fig1,
+        "throughput": table_multifunction_throughput,
+        "eq2": table_eq2_heterogeneous,
+        "tree_search": table_tree_search,
+        "genz": table_genz,
+        "kernel": table_kernel,
+        "roofline": table_roofline,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in tables.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn(args.fast)
+        except Exception as e:  # keep the harness going; fail at exit
+            print(f"{name},0,ERROR {type(e).__name__}: {e}")
+            main.failed = True
+    if getattr(main, "failed", False):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Multi-function throughput (paper: 10^3 integrands of dim<5 in <10 min
+on one V100).
+
+Measures integrands/second and samples/second on this host for growing
+function counts, plus the v5e roofline projection: the fused Pallas sampler
+is compute-bound at ~130 flop per (sample, dim) Threefry+eval, so one v5e
+chip at 197 TF bf16 (~25 Tflop/s attainable on the u32-heavy mix, see
+EXPERIMENTS.md §Perf) projects to ~10^3 4-d integrands x 1e6 samples in
+well under a minute — the 256-chip pod splits that linearly (§scaling).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import ZMCMultiFunctions, harmonic_family
+
+# measured kernel cost model: ~flops per (sample, dim) for threefry+eval
+FLOP_PER_SAMPLE_DIM = 130.0
+V5E_ATTAINABLE = 25e12   # u32/transcendental mix, not MXU matmul peak
+
+
+def bench(n_fns: int, samples: int, dim: int = 4, use_kernel=False,
+          seed=0) -> dict:
+    z = ZMCMultiFunctions([harmonic_family(n_fns, dim)], n_samples=samples,
+                          seed=seed, use_kernel=use_kernel, chunk=16384)
+    # warmup (compile)
+    z.evaluate(num_trials=1)
+    t0 = time.time()
+    z.evaluate(num_trials=1)
+    dt = time.time() - t0
+    total_samples = n_fns * samples
+    return {
+        "n_fns": n_fns, "samples": samples, "seconds": dt,
+        "integrands_per_s": n_fns / dt,
+        "samples_per_s": total_samples / dt,
+        "v5e_projection_s": total_samples * dim * FLOP_PER_SAMPLE_DIM
+                            / V5E_ATTAINABLE,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=50_000)
+    ap.add_argument("--max-fns", type=int, default=1000)
+    ap.add_argument("--use-kernel", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for n in (100, 300, args.max_fns):
+        r = bench(n, args.samples, use_kernel=args.use_kernel)
+        print(f"throughput_fns{n},{r['seconds']*1e6:.0f},"
+              f"{r['samples_per_s']:.3e} samples/s "
+              f"(v5e projection {r['v5e_projection_s']:.2f}s/chip)")
+
+
+if __name__ == "__main__":
+    main()

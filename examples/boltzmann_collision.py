@@ -1,0 +1,76 @@
+"""The paper's physics motivation: batches of collision integrals.
+
+Solving a Boltzmann equation with radiation requires, per energy beam and
+per Feynman graph, a collision integral of the form
+
+    C(p) = Int d^3q  W(p, q) [ f(q) (1 - f(p)) - f(p) (1 - f(q)) ]
+
+Here we evaluate a (simplified, Maxwell-Juttner-weighted, 2->2 scattering)
+gain-term kernel for MANY beam energies p and TWO "graphs" (s-channel-like
+and t-channel-like angular weights) simultaneously — one
+ZMCMultiFunctions call, exactly the workload class v5.1 was built for.
+
+    PYTHONPATH=src python examples/boltzmann_collision.py
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IntegrandFamily, MultiFunctionSpec, ZMCMultiFunctions
+
+T = 1.0            # temperature (natural units)
+N_BEAMS = 32       # energy beams -> one integrand per beam per graph
+beam_p = np.linspace(0.2, 6.0, N_BEAMS).astype(np.float32)
+
+
+def _thermal(e):
+    return jnp.exp(-e / T)
+
+
+def gain_s_channel(x, prm):
+    """x = (|q|, cos(theta), phi); s-channel-ish |M|^2 ~ s^2/(s^2+1)."""
+    q, ct, _ = x[..., 0], x[..., 1], x[..., 2]
+    p = prm["p"]
+    s_mand = 2 * p * q * (1 - ct) + 0.5          # massless-ish invariant
+    m2 = jnp.square(s_mand) / (jnp.square(s_mand) + 1.0)
+    flux = q * q / (jnp.maximum(p, 1e-3))
+    return m2 * flux * _thermal(q) * (1 - 0.2 * _thermal(p))
+
+
+def gain_t_channel(x, prm):
+    """t-channel-ish: forward-peaked angular weight 1/(1 + (1-ct))^2."""
+    q, ct, _ = x[..., 0], x[..., 1], x[..., 2]
+    p = prm["p"]
+    w = 1.0 / jnp.square(2.0 - ct)
+    flux = q * q / (jnp.maximum(p, 1e-3))
+    return w * flux * _thermal(q) * (1 - 0.2 * _thermal(p))
+
+
+# domain: |q| in [0, 8T] (thermal support), cos(theta) in [-1,1], phi in [0,2pi]
+dom = np.array([[0.0, 8.0], [-1.0, 1.0], [0.0, 2 * np.pi]], np.float32)
+domains = np.broadcast_to(dom, (N_BEAMS, 3, 2)).copy()
+
+spec = MultiFunctionSpec.from_families([
+    IntegrandFamily(fn=gain_s_channel, params={"p": jnp.asarray(beam_p)},
+                    domains=jnp.asarray(domains), name="graph_s").validate(),
+    IntegrandFamily(fn=gain_t_channel, params={"p": jnp.asarray(beam_p)},
+                    domains=jnp.asarray(domains), name="graph_t").validate(),
+])
+
+zmc = ZMCMultiFunctions(spec, n_samples=200_000, seed=1)
+r = zmc.evaluate(num_trials=3)
+
+cs = r.trial_mean[:N_BEAMS]
+ct_ = r.trial_mean[N_BEAMS:]
+print("beam p,   C_s-channel,   C_t-channel,   (rel stderr)")
+for i in range(0, N_BEAMS, 4):
+    rel = r.trial_std[i] / max(abs(cs[i]), 1e-9)
+    print(f"{beam_p[i]:6.2f}   {cs[i]:12.5f}   {ct_[i]:12.5f}   ({rel:.1e})")
+
+# physics sanity: gain terms positive and decaying with beam energy at tail
+assert np.all(cs > 0) and np.all(ct_ > 0)
+assert cs[-1] < cs[N_BEAMS // 2]
+print("OK: per-graph collision terms evaluated for all beams in one call")

@@ -1,0 +1,29 @@
+"""chatglm3-6b [dense]: GQA kv=2, 2d (partial) RoPE, qkv bias.
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024.
+[arXiv:2406.12793; hf]
+
+Note: kv=2 does not divide the 16-way model axis; the sharding rules'
+divisibility fallback leaves K/V projections replicated while Q/O shard —
+recorded in the roofline table (extra K/V weight memory, no extra comm).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65024,
+    attn_type="gqa",
+    rope_style="2d",
+    qkv_bias=True,
+    # >=6B params: store bf16 (f32 Adam moments retained) so the FSDP
+    # all-gather of the scanned weight stack costs half the VMEM/HBM
+    param_dtype="bfloat16",
+)

@@ -1,0 +1,21 @@
+"""stablelm-3b [dense]: MHA (kv=32).
+
+32L d_model=2560 32H (GQA kv=32) d_ff=6912 vocab=50304.
+[hf:stabilityai/stablelm-2-1_6b family; unverified]
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family="dense",
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=6912,
+    vocab_size=50304,
+    attn_type="gqa",
+    rope_style="standard",
+)

@@ -1,0 +1,47 @@
+# The paper's primary contribution: massively-parallel multi-function
+# Monte-Carlo integration (ZMCintegral-v5.1), TPU-native.
+#
+# Three solver classes mirror the original package:
+#   ZMCNormal          - stratified sampling + heuristic tree search (dim 8-12)
+#   ZMCFunctional      - one integrand x large parameter grid (v5)
+#   ZMCMultiFunctions  - many heterogeneous integrands (the v5.1 feature)
+
+from repro.core.integrand import (
+    IntegrandFamily,
+    MultiFunctionSpec,
+    abs_sum_family,
+    gaussian_family,
+    harmonic_analytic,
+    harmonic_family,
+)
+from repro.core.direct_mc import (
+    MCResult,
+    SumsState,
+    family_sums,
+    finalize,
+    merge_sums,
+    sharded_family_sums,
+)
+from repro.core.functional import ZMCFunctional
+from repro.core.multifunctions import MultiFunctionResult, ZMCMultiFunctions
+from repro.core.normal import NormalResult, ZMCNormal
+
+__all__ = [
+    "IntegrandFamily",
+    "MultiFunctionSpec",
+    "MCResult",
+    "SumsState",
+    "MultiFunctionResult",
+    "NormalResult",
+    "ZMCFunctional",
+    "ZMCMultiFunctions",
+    "ZMCNormal",
+    "abs_sum_family",
+    "family_sums",
+    "finalize",
+    "gaussian_family",
+    "harmonic_analytic",
+    "harmonic_family",
+    "merge_sums",
+    "sharded_family_sums",
+]

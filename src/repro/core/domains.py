@@ -1,0 +1,110 @@
+"""Integration-domain transforms.
+
+A domain is a per-function box ``(n_fn, dim, 2)`` of ``[lo, hi]`` pairs.
+Finite boxes map uniforms affinely; infinite / semi-infinite edges use the
+standard tangent / rational compactifications with their Jacobians folded
+into the integrand value, so every solver only ever samples the unit cube.
+
+The Pallas fast path (``repro.kernels.mc_eval``) handles finite boxes only —
+``compactify`` rewrites an infinite-domain family into an equivalent
+finite-domain family first, so kernels never see infinities.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def box_volume(domains, dims=None):
+    """Volume of each function's active box.
+
+    Args:
+      domains: (n_fn, dim, 2) array.
+      dims: optional (n_fn,) active-dimension counts; padding dims (with
+        lo == hi == 0 convention) are excluded by masking, not by volume
+        (a padded dim has hi - lo == 0 which would zero the product).
+
+    Returns: (n_fn,) float32 volumes.
+    """
+    widths = domains[..., 1] - domains[..., 0]
+    if dims is not None:
+        d = jnp.arange(domains.shape[1])
+        mask = d[None, :] < jnp.asarray(dims)[:, None]
+        widths = jnp.where(mask, widths, 1.0)
+    return jnp.prod(widths, axis=-1)
+
+
+def affine_from_unit(u, domains):
+    """Map unit-cube uniforms ``u`` (..., dim) into the box. Broadcasts."""
+    lo = domains[..., 0]
+    hi = domains[..., 1]
+    return lo + u * (hi - lo)
+
+
+def is_finite_box(domains) -> bool:
+    return bool(np.all(np.isfinite(np.asarray(domains))))
+
+
+def compactify(fn, domains):
+    """Rewrite (fn, domains) with infinite edges into a finite-box problem.
+
+    Per-dimension rules (u is the finite coordinate sampled in the new box):
+
+    * ``(-inf, inf)``  -> x = tan(pi*(u - 1/2)),  u in (0, 1),  J = pi*sec^2
+    * ``[a,  inf)``    -> x = a + u/(1-u),        u in [0, 1),  J = 1/(1-u)^2
+    * ``(-inf, b]``    -> x = b - u/(1-u),        u in [0, 1),  J = 1/(1-u)^2
+    * finite           -> identity
+
+    Returns ``(fn2, domains2)`` where ``fn2(u, params)`` evaluates the
+    original integrand times the Jacobian, and ``domains2`` is finite.
+    The transform is per-function static (derived from the numpy domain
+    array), so it traces to pure jnp ops.
+    """
+    domains = np.asarray(domains, np.float64)
+    if is_finite_box(domains):
+        return fn, jnp.asarray(domains, jnp.float32)
+    if domains.ndim != 3:
+        raise ValueError("compactify expects (n_fn, dim, 2) domains")
+    lo_inf = ~np.isfinite(domains[..., 0])
+    hi_inf = ~np.isfinite(domains[..., 1])
+    both = lo_inf & hi_inf
+    upper = ~lo_inf & hi_inf
+    lower = lo_inf & ~hi_inf
+
+    new_domains = domains.copy()
+    new_domains[..., 0] = np.where(both | upper | lower, 0.0, domains[..., 0])
+    new_domains[..., 1] = np.where(both | upper | lower, 1.0, domains[..., 1])
+
+    # Per-function transform metadata rides along with the user params so the
+    # engine's per-function vmap slices it consistently (leading n_fn axis).
+    aux = {
+        "both": jnp.asarray(both),
+        "upper": jnp.asarray(upper),
+        "lower": jnp.asarray(lower),
+        "flo": jnp.asarray(
+            np.where(np.isfinite(domains[..., 0]), domains[..., 0], 0.0), jnp.float32),
+        "fhi": jnp.asarray(
+            np.where(np.isfinite(domains[..., 1]), domains[..., 1], 0.0), jnp.float32),
+    }
+
+    def transformed(u, wrapped):
+        # u: (..., dim) sampled in the *new* (finite) box: unit interval on
+        # transformed dims, the original interval elsewhere. ``wrapped`` is
+        # {"inner": user params, "aux": per-function masks} with the leading
+        # n_fn axis already sliced away by the engine's vmap.
+        a = wrapped["aux"]
+        b, up, lw = a["both"], a["upper"], a["lower"]
+        eps = jnp.asarray(1e-7, u.dtype)
+        uc = jnp.clip(u, eps, 1.0 - eps)
+        tan_x = jnp.tan(jnp.pi * (uc - 0.5))
+        tan_j = jnp.pi / jnp.square(jnp.cos(jnp.pi * (uc - 0.5)))
+        rat = uc / (1.0 - uc)
+        rat_j = 1.0 / jnp.square(1.0 - uc)
+        x = jnp.where(b, tan_x,
+            jnp.where(up, a["flo"] + rat,
+            jnp.where(lw, a["fhi"] - rat, u)))
+        jac = jnp.where(b, tan_j, jnp.where(up | lw, rat_j, jnp.ones_like(uc)))
+        return fn(x, wrapped["inner"]) * jnp.prod(jac, axis=-1)
+
+    return transformed, jnp.asarray(new_domains, jnp.float32), aux

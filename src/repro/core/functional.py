@@ -1,0 +1,67 @@
+"""``ZMCFunctional`` — parameter-scan integration (the v5 feature).
+
+One integrand, evaluated over a (possibly huge) grid of parameter vectors:
+``I(theta_j) = Int f(x; theta_j) dx`` for j = 1..n_param.  This is exactly a
+single :class:`IntegrandFamily` whose "functions" are the parameter points,
+so the class is a thin, API-compatible wrapper over the multi-function
+engine — which is also how v5.1 subsumes v5 in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.integrand import IntegrandFamily, MultiFunctionSpec
+from repro.core.multifunctions import MultiFunctionResult, ZMCMultiFunctions
+
+
+class ZMCFunctional:
+    """Scan a parameter grid of one integrand.
+
+    Args:
+      fn: ``fn(x, theta) -> value`` with x (..., dim), theta a single
+        parameter pytree.
+      param_grid: pytree whose leaves have leading axis ``n_param``.
+      domain: (dim, 2) shared integration box (may contain inf).
+    """
+
+    def __init__(
+        self,
+        fn: Callable[[jax.Array, Any], jax.Array],
+        param_grid: Any,
+        domain,
+        n_samples: int = 10**5,
+        seed: int = 0,
+        *,
+        mesh: Mesh | None = None,
+        chunk: int = 8192,
+        fn_chunk: int | None = None,
+        use_kernel: bool = False,
+        name: str = "functional",
+    ):
+        domain = np.asarray(domain, np.float32)
+        if domain.ndim != 2 or domain.shape[-1] != 2:
+            raise ValueError(f"domain must be (dim, 2); got {domain.shape}")
+        leaves = jax.tree_util.tree_leaves(param_grid)
+        if not leaves:
+            raise ValueError("param_grid must have at least one leaf")
+        n_param = int(np.shape(leaves[0])[0])
+        domains = jnp.broadcast_to(jnp.asarray(domain), (n_param,) + domain.shape)
+        family = IntegrandFamily(fn=fn, params=param_grid, domains=domains,
+                                 name=name).validate()
+        self._engine = ZMCMultiFunctions(
+            MultiFunctionSpec.from_families([family]),
+            n_samples=n_samples, seed=seed, mesh=mesh, chunk=chunk,
+            fn_chunk=fn_chunk, use_kernel=use_kernel)
+        self.n_param = n_param
+
+    def evaluate(self, num_trials: int = 1) -> MultiFunctionResult:
+        return self._engine.evaluate(num_trials=num_trials)
+
+    def evaluate_resumable(self, **kw) -> MultiFunctionResult:
+        return self._engine.evaluate_resumable(**kw)

@@ -1,0 +1,165 @@
+"""Genz test-function families — the standard integration benchmark suite.
+
+Genz (1984) defined six families that probe distinct failure modes of
+cubature methods; every family has a closed-form integral over [0,1]^d, so
+they extend the paper's single harmonic validation into a full accuracy
+benchmark (``benchmarks/genz_accuracy.py``) and drive the MC-vs-RQMC
+comparison in EXPERIMENTS.md.
+
+Each constructor returns an :class:`IntegrandFamily` of ``n`` random
+instances (affective parameters a, u drawn from the framework's own
+counter-based RNG for reproducibility) plus the vector of exact values.
+
+Families (x in [0,1]^d; a, u parameter vectors):
+  oscillatory   cos(2 pi u_1 + sum a_i x_i)
+  product_peak  prod 1 / (a_i^-2 + (x_i - u_i)^2)
+  corner_peak   (1 + sum a_i x_i)^-(d+1)
+  gaussian      exp(-sum a_i^2 (x_i - u_i)^2)
+  continuous    exp(-sum a_i |x_i - u_i|)
+  discontinuous exp(sum a_i x_i) * [x_1 < u_1][x_2 < u_2]
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng as rng_lib
+from repro.core.integrand import IntegrandFamily
+
+
+def _params(n: int, dim: int, seed: int, difficulty: float):
+    """Reproducible (a, u) with sum(a) normalised to `difficulty`."""
+    k0, k1 = rng_lib.fold_key(seed, stream=0x6E42)
+    u = np.asarray(rng_lib.uniforms_for(
+        k0, k1, np.arange(n), np.arange(dim, dtype=np.uint32), 1))[:, :, 0]
+    a_raw = np.asarray(rng_lib.uniforms_for(
+        k0, k1, np.arange(n) + (1 << 20), np.arange(dim, dtype=np.uint32),
+        1))[:, :, 0] + 0.1
+    a = a_raw * (difficulty / a_raw.sum(axis=1, keepdims=True))
+    return a.astype(np.float32), u.astype(np.float32)
+
+
+def _family(fn, a, u, name):
+    n, dim = a.shape
+    dom = np.broadcast_to(np.asarray([0.0, 1.0], np.float32),
+                          (n, dim, 2)).copy()
+    return IntegrandFamily(
+        fn=fn, params={"a": jnp.asarray(a), "u": jnp.asarray(u)},
+        domains=jnp.asarray(dom), name=name).validate()
+
+
+# -- oscillatory -------------------------------------------------------------
+
+def oscillatory(n: int, dim: int, seed: int = 0, difficulty: float = 9.0):
+    a, u = _params(n, dim, seed, difficulty)
+
+    def fn(x, p):
+        return jnp.cos(2 * jnp.pi * p["u"][..., 0]
+                       + jnp.sum(p["a"] * x, axis=-1))
+
+    # exact: Re[e^{i 2pi u1} prod (e^{i a_j} - 1)/(i a_j)]
+    phase = 2 * np.pi * u[:, 0] + a.sum(1) / 2
+    mag = np.prod(2 * np.sin(a / 2) / a, axis=1)
+    exact = mag * np.cos(phase)
+    return _family(fn, a, u, f"genz_osc[{n}x{dim}]"), exact
+
+
+# -- product peak -------------------------------------------------------------
+
+def product_peak(n: int, dim: int, seed: int = 1, difficulty: float = 7.25):
+    a, u = _params(n, dim, seed, difficulty)
+
+    def fn(x, p):
+        return jnp.prod(1.0 / (p["a"] ** -2 + jnp.square(x - p["u"])),
+                        axis=-1)
+
+    exact = np.prod(a * (np.arctan(a * (1 - u)) + np.arctan(a * u)), axis=1)
+    return _family(fn, a, u, f"genz_peak[{n}x{dim}]"), exact
+
+
+# -- corner peak --------------------------------------------------------------
+
+def corner_peak(n: int, dim: int, seed: int = 2, difficulty: float = 1.85):
+    a, u = _params(n, dim, seed, difficulty)
+
+    def fn(x, p):
+        return (1.0 + jnp.sum(p["a"] * x, axis=-1)) ** (-(dim + 1.0))
+
+    # exact via inclusion-exclusion:
+    #   (d! prod a_i)^-1 sum_{S subset [d]} (-1)^|S| (1 + sum_{i in S} a_i)^-1
+    # (check d=1: (1/a)(1 - 1/(1+a)) = 1/(1+a) = int (1+ax)^-2)
+    exact = np.zeros(n)
+    for i in range(n):
+        total = 0.0
+        for mask in range(1 << dim):
+            s = bin(mask).count("1")
+            sub = sum(a[i, j] for j in range(dim) if (mask >> j) & 1)
+            total += (-1.0) ** s / (1.0 + sub)
+        exact[i] = total / (math.factorial(dim) * np.prod(a[i]))
+    return _family(fn, a, u, f"genz_corner[{n}x{dim}]"), exact
+
+
+# -- gaussian ------------------------------------------------------------------
+
+def _erf(x):
+    # Abramowitz-Stegun 7.1.26, |err| < 1.5e-7 — keeps numpy-only
+    sign = np.sign(x)
+    x = np.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * x)
+    y = 1.0 - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+                - 0.284496736) * t + 0.254829592) * t * np.exp(-x * x)
+    return sign * y
+
+
+def gaussian_peak(n: int, dim: int, seed: int = 3, difficulty: float = 7.03):
+    a, u = _params(n, dim, seed, difficulty)
+
+    def fn(x, p):
+        return jnp.exp(-jnp.sum(jnp.square(p["a"] * (x - p["u"])), axis=-1))
+
+    exact = np.prod(np.sqrt(np.pi) / (2 * a)
+                    * (_erf(a * (1 - u)) + _erf(a * u)), axis=1)
+    return _family(fn, a, u, f"genz_gauss[{n}x{dim}]"), exact
+
+
+# -- continuous (C0) -----------------------------------------------------------
+
+def continuous(n: int, dim: int, seed: int = 4, difficulty: float = 2.04):
+    a, u = _params(n, dim, seed, difficulty)
+
+    def fn(x, p):
+        return jnp.exp(-jnp.sum(p["a"] * jnp.abs(x - p["u"]), axis=-1))
+
+    exact = np.prod((2.0 - np.exp(-a * u) - np.exp(-a * (1 - u))) / a, axis=1)
+    return _family(fn, a, u, f"genz_cont[{n}x{dim}]"), exact
+
+
+# -- discontinuous --------------------------------------------------------------
+
+def discontinuous(n: int, dim: int, seed: int = 5, difficulty: float = 4.3):
+    a, u = _params(n, dim, seed, difficulty)
+
+    def fn(x, p):
+        inside = (x[..., 0] < p["u"][..., 0])
+        if x.shape[-1] > 1:
+            inside = inside & (x[..., 1] < p["u"][..., 1])
+        return jnp.where(inside, jnp.exp(jnp.sum(p["a"] * x, axis=-1)), 0.0)
+
+    exact = np.ones(n)
+    for j in range(dim):
+        hi = u[:, j] if j < 2 else 1.0
+        exact *= (np.exp(a[:, j] * hi) - 1.0) / a[:, j]
+    return _family(fn, a, u, f"genz_disc[{n}x{dim}]"), exact
+
+
+ALL = {
+    "oscillatory": oscillatory,
+    "product_peak": product_peak,
+    "corner_peak": corner_peak,
+    "gaussian": gaussian_peak,
+    "continuous": continuous,
+    "discontinuous": discontinuous,
+}

@@ -1,0 +1,229 @@
+"""``ZMCMultiFunctions`` — the v5.1 headline feature.
+
+Evaluates an arbitrary collection of integrand families (different forms,
+dimensions and domains) in one shot, on one device or across a TPU mesh.
+
+API sketch (mirrors the paper's ``ZMCintegral_multifunctions``)::
+
+    spec = MultiFunctionSpec.from_families([
+        harmonic_family(100, 4),                       # Eq. (1)
+        abs_sum_family(49, 2, coeff_a),                # Eq. (2), n < 50
+        abs_sum_family(51, 3, coeff_b, sign_last=-1),  # Eq. (2), n >= 50
+    ])
+    zmc = ZMCMultiFunctions(spec, n_samples=10**6, seed=0)
+    result = zmc.evaluate(num_trials=10)
+    result.trial_mean, result.trial_std   # paper Fig. 1 red band
+
+Fault tolerance: :meth:`evaluate_resumable` splits the sample budget into
+rounds and checkpoints the raw ``(s1, s2, n)`` accumulators after each round.
+Because the RNG is counter-based, a restart — even onto a *different mesh* —
+continues the exact same sample stream (verified by
+``tests/core/test_resume.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import direct_mc, rng
+from repro.core.integrand import IntegrandFamily, MultiFunctionSpec
+
+
+@dataclasses.dataclass
+class MultiFunctionResult:
+    """Per-function estimates, stacked across independent trials."""
+    means: np.ndarray     # (num_trials, n_fn_total)
+    stderrs: np.ndarray   # (num_trials, n_fn_total) in-trial MC stderr
+    n_samples: int
+    names: tuple[str, ...]
+
+    @property
+    def trial_mean(self) -> np.ndarray:
+        """Average over independent trials (paper's bar F_n)."""
+        return self.means.mean(axis=0)
+
+    @property
+    def trial_std(self) -> np.ndarray:
+        """Std over independent trials (paper's triangle F_n)."""
+        if self.means.shape[0] < 2:
+            return self.stderrs[0]
+        return self.means.std(axis=0, ddof=1)
+
+
+class ZMCMultiFunctions:
+    """Multi-function direct-MC integrator (single device or mesh)."""
+
+    def __init__(
+        self,
+        spec: MultiFunctionSpec | Sequence[IntegrandFamily],
+        n_samples: int = 10**6,
+        seed: int = 0,
+        *,
+        mesh: Mesh | None = None,
+        fn_axis: str = "model",
+        sample_axes: Sequence[str] | None = None,
+        chunk: int = 8192,
+        fn_chunk: int | None = None,
+        use_kernel: bool = False,
+        sampler: str = "mc",          # "mc" | "sobol" (dim <= 8, RQMC)
+    ):
+        if not isinstance(spec, MultiFunctionSpec):
+            spec = MultiFunctionSpec.from_families(spec)
+        # infinite domains are rewritten into finite boxes up-front
+        self.spec = MultiFunctionSpec(
+            families=tuple(f.compactified() for f in spec.families))
+        self.n_samples = int(n_samples)
+        self.seed = int(seed)
+        self.mesh = mesh
+        self.fn_axis = fn_axis
+        if sample_axes is None and mesh is not None:
+            sample_axes = tuple(a for a in mesh.axis_names if a != fn_axis)
+        self.sample_axes = tuple(sample_axes) if sample_axes else ("data",)
+        self.chunk = int(chunk)
+        self.fn_chunk = fn_chunk
+        self.use_kernel = bool(use_kernel)
+        self.sampler = sampler
+        self._jitted = {}
+
+    # -- single-trial sums ----------------------------------------------------
+    def _trial_sums(self, trial: int, n_samples: int, sample_offset: int):
+        """Raw per-function sums for one independent trial."""
+        key = rng.fold_key(self.seed, trial)
+        out = []
+        offsets = self.spec.offsets()
+        for fam, off in zip(self.spec.families, offsets):
+            if self.mesh is not None:
+                sums, padded = direct_mc.sharded_family_sums(
+                    fam, n_samples, key, self.mesh,
+                    fn_axis=self.fn_axis, sample_axes=self.sample_axes,
+                    fn_offset=off, sample_offset=sample_offset,
+                    chunk=self.chunk, use_kernel=self.use_kernel,
+                    sampler=self.sampler)
+                sums = direct_mc.SumsState(
+                    s1=sums.s1[: fam.n_fn], s2=sums.s2[: fam.n_fn], n=sums.n)
+            else:
+                fn = self._get_jitted(fam, off)
+                sums = fn(fam, jnp.uint32(n_samples), jnp.uint32(sample_offset),
+                          jnp.uint32(key[0]), jnp.uint32(key[1]))
+            out.append(sums)
+        return out
+
+    def _get_jitted(self, fam: IntegrandFamily, off: int):
+        cache_key = (id(fam.fn), fam.n_fn, fam.dim, off, self.use_kernel,
+                     self.sampler)
+        if cache_key not in self._jitted:
+            chunk, fn_chunk, use_kernel = self.chunk, self.fn_chunk, self.use_kernel
+            sampler = self.sampler
+
+            # n_samples is static (fori bounds): jit-cache per sample count
+            def runner(family, n_samples, sample_offset, k0, k1,
+                       _cache={}):
+                n = int(n_samples)
+                if n not in _cache:
+                    _cache[n] = jax.jit(
+                        lambda family, sample_offset, k0, k1: direct_mc.family_sums(
+                            family, n, (k0, k1), fn_offset=off,
+                            sample_offset=sample_offset, chunk=chunk,
+                            fn_chunk=fn_chunk, use_kernel=use_kernel,
+                            sampler=sampler))
+                return _cache[n](family, sample_offset, k0, k1)
+
+            self._jitted[cache_key] = runner
+        return self._jitted[cache_key]
+
+    # -- public API ------------------------------------------------------------
+    def evaluate(self, num_trials: int = 1) -> MultiFunctionResult:
+        """Run ``num_trials`` independent evaluations of every integrand."""
+        means, stderrs = [], []
+        for t in range(num_trials):
+            sums_per_family = self._trial_sums(t, self.n_samples, 0)
+            m, s = self._finalize(sums_per_family)
+            means.append(m)
+            stderrs.append(s)
+        names = tuple(f.name for f in self.spec.families)
+        return MultiFunctionResult(
+            means=np.stack(means), stderrs=np.stack(stderrs),
+            n_samples=self.n_samples, names=names)
+
+    def _finalize(self, sums_per_family):
+        m, s = [], []
+        for fam, sums in zip(self.spec.families, sums_per_family):
+            res = direct_mc.finalize(fam, sums)
+            m.append(np.asarray(jax.device_get(res.mean)))
+            s.append(np.asarray(jax.device_get(res.stderr)))
+        return np.concatenate(m), np.concatenate(s)
+
+    # -- fault-tolerant evaluation ----------------------------------------------
+    def _ckpt_tag(self) -> str:
+        blob = json.dumps({
+            "n_samples": self.n_samples, "seed": self.seed,
+            "families": [(f.name, f.n_fn, f.dim) for f in self.spec.families],
+        }, sort_keys=True).encode()
+        return hashlib.sha1(blob).hexdigest()[:12]
+
+    def evaluate_resumable(
+        self,
+        rounds: int = 8,
+        checkpoint_dir: str | None = None,
+        trial: int = 0,
+        fail_after_round: int | None = None,
+    ) -> MultiFunctionResult:
+        """Evaluate one trial in ``rounds`` checkpointed increments.
+
+        ``fail_after_round`` injects a crash (for the fault-tolerance tests);
+        re-calling with the same ``checkpoint_dir`` resumes and produces sums
+        identical to an uninterrupted run.
+        """
+        per_round = -(-self.n_samples // rounds)  # ceil
+        state = None   # list[SumsState] per family
+        start_round = 0
+        tag = self._ckpt_tag()
+        path = None
+        if checkpoint_dir is not None:
+            os.makedirs(checkpoint_dir, exist_ok=True)
+            path = os.path.join(checkpoint_dir, f"zmc_{tag}_t{trial}.npz")
+            if os.path.exists(path):
+                data = np.load(path)
+                start_round = int(data["round"])
+                state = []
+                for i in range(len(self.spec.families)):
+                    state.append(direct_mc.SumsState(
+                        s1=jnp.asarray(data[f"s1_{i}"]),
+                        s2=jnp.asarray(data[f"s2_{i}"]),
+                        n=jnp.asarray(data[f"n_{i}"])))
+
+        for r in range(start_round, rounds):
+            n_this = min(per_round, self.n_samples - r * per_round)
+            if n_this <= 0:
+                break
+            sums = self._trial_sums(trial, n_this, r * per_round)
+            if state is None:
+                state = list(sums)
+            else:
+                state = [direct_mc.merge_sums(a, b) for a, b in zip(state, sums)]
+            if path is not None:
+                payload = {"round": r + 1}
+                for i, st in enumerate(state):
+                    payload[f"s1_{i}"] = np.asarray(st.s1)
+                    payload[f"s2_{i}"] = np.asarray(st.s2)
+                    payload[f"n_{i}"] = np.asarray(st.n)
+                tmp = path + ".tmp.npz"
+                np.savez(tmp, **payload)
+                os.replace(tmp, path)
+            if fail_after_round is not None and r == fail_after_round:
+                raise RuntimeError(f"injected failure after round {r}")
+
+        m, s = self._finalize(state)
+        names = tuple(f.name for f in self.spec.families)
+        return MultiFunctionResult(
+            means=m[None], stderrs=s[None],
+            n_samples=self.n_samples, names=names)

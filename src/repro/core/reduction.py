@@ -1,0 +1,99 @@
+"""Numerically-careful accumulation helpers.
+
+TPU has no fast float64, so long Monte-Carlo reductions accumulate in f32.
+Raw serial summation of 10^9 samples would lose ~half the mantissa; we use
+
+* chunked **pairwise** partial sums (XLA's reduce is already tree-shaped
+  inside a chunk; chunks are combined pairwise by construction),
+* optional **Kahan** compensated accumulation across chunks,
+* **Welford/Chan** moment combination so that (count, mean, M2) triples from
+  different devices / restarts merge exactly, which is what the checkpoint
+  format stores.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Moments(NamedTuple):
+    """Streaming first/second moments of a batch of estimators.
+
+    Shapes: all (n_fn,) (or any common broadcast shape).
+    ``m2`` is the sum of squared deviations (Welford's M2), *not* variance.
+    """
+    count: jax.Array
+    mean: jax.Array
+    m2: jax.Array
+
+    @property
+    def variance(self):
+        return self.m2 / jnp.maximum(self.count - 1.0, 1.0)
+
+    @property
+    def stderr_of_mean(self):
+        return jnp.sqrt(self.variance / jnp.maximum(self.count, 1.0))
+
+
+def moments_zero(shape, dtype=jnp.float32) -> Moments:
+    z = jnp.zeros(shape, dtype)
+    return Moments(count=z, mean=z, m2=z)
+
+
+def moments_from_sums(n, s1, s2) -> Moments:
+    """Build Moments from raw (count, sum, sum-of-squares)."""
+    n = jnp.asarray(n, s1.dtype)
+    mean = s1 / jnp.maximum(n, 1.0)
+    m2 = jnp.maximum(s2 - n * jnp.square(mean), 0.0)
+    return Moments(count=n, mean=mean, m2=m2)
+
+
+def moments_combine(a: Moments, b: Moments) -> Moments:
+    """Chan et al. parallel combination — exact under permutation."""
+    n = a.count + b.count
+    safe_n = jnp.maximum(n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (b.count / safe_n)
+    m2 = a.m2 + b.m2 + jnp.square(delta) * (a.count * b.count / safe_n)
+    return Moments(count=n, mean=mean, m2=m2)
+
+
+class KahanAcc(NamedTuple):
+    total: jax.Array
+    comp: jax.Array
+
+
+def kahan_zero(shape, dtype=jnp.float32) -> KahanAcc:
+    z = jnp.zeros(shape, dtype)
+    return KahanAcc(total=z, comp=z)
+
+
+def kahan_add(acc: KahanAcc, value) -> KahanAcc:
+    """One compensated accumulation step (Kahan–Babuska)."""
+    y = value - acc.comp
+    t = acc.total + y
+    comp = (t - acc.total) - y
+    return KahanAcc(total=t, comp=comp)
+
+
+def pairwise_sum(x, axis: int = -1):
+    """Pairwise (tree) reduction along ``axis``.
+
+    jnp.sum already lowers to a tree reduce on TPU; this exists for the
+    oracle paths where we want a *defined* association order to compare the
+    Pallas kernels against bit-for-bit at f32.
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    while n > 1:
+        half = n // 2
+        pairs = x[..., : 2 * half]
+        s = pairs[..., 0::2] + pairs[..., 1::2]
+        if n % 2:
+            s = jnp.concatenate([s, x[..., -1:]], axis=-1)
+        x = s
+        n = x.shape[-1]
+    return x[..., 0]

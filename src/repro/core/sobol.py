@@ -1,0 +1,114 @@
+"""Randomised Sobol quasi-Monte-Carlo sampling (beyond-paper upgrade).
+
+ZMCintegral uses plain pseudo-random MC: error ~ N^(-1/2).  A digitally
+shifted Sobol low-discrepancy sequence converges ~ N^(-1) (log N)^d on
+smooth integrands — at the paper's N = 10^6 that is orders of magnitude
+more accuracy for the *same* sample budget, i.e. a direct improvement of
+the paper's time-to-accuracy metric (measured in EXPERIMENTS.md §Perf
+iteration 9: ~30x stderr reduction on the Fig.-1 family).
+
+Implementation notes:
+
+* Direction numbers: Joe-Kuo D6 initialisation for dimensions 2..8
+  (dimension 1 is van der Corput).  Up to 8 dims covers the paper's
+  use-cases (the engine falls back to pseudo-random MC above that).
+* Gray-code construction evaluated *by index*: point i is the XOR of the
+  direction vectors selected by the bits of gray(i) — O(32) vector ops,
+  fully counter-addressed like the Threefry path, so sharding / resume /
+  elastic semantics are unchanged.
+* Randomisation: per-(function, dimension) digital shift derived from the
+  Threefry key — unbiased, and independent trials give a valid stderr.
+
+The same construction runs inside the Pallas kernel path (u32 XOR/shift
+ops only); the pure-jnp form here is the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng as rng_lib
+
+MAX_DIM = 8
+_BITS = 32
+
+# Joe-Kuo D6: (s, a, m[1..s]) per dimension (dim 1 handled separately)
+_JOE_KUO = {
+    2: (1, 0, [1]),
+    3: (2, 1, [1, 3]),
+    4: (3, 1, [1, 3, 1]),
+    5: (3, 2, [1, 1, 1]),
+    6: (4, 1, [1, 1, 3, 3]),
+    7: (4, 4, [1, 3, 5, 13]),
+    8: (5, 2, [1, 1, 5, 5, 17]),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def direction_vectors(dim: int) -> np.ndarray:
+    """(dim, 32) uint32 direction vectors V[d, j]."""
+    if dim > MAX_DIM:
+        raise ValueError(f"sobol supports dim <= {MAX_DIM}; got {dim}")
+    v = np.zeros((dim, _BITS), np.uint64)
+    # dimension 1: van der Corput
+    for j in range(_BITS):
+        v[0, j] = 1 << (31 - j)
+    for d in range(2, dim + 1):
+        s, a, m = _JOE_KUO[d]
+        row = v[d - 1]
+        for j in range(min(s, _BITS)):
+            row[j] = np.uint64(m[j]) << (31 - j)
+        for j in range(s, _BITS):
+            x = row[j - s] ^ (row[j - s] >> np.uint64(s))
+            for k in range(1, s):
+                if (a >> (s - 1 - k)) & 1:
+                    x ^= row[j - k]
+            row[j] = x
+    return v.astype(np.uint32)
+
+
+def sobol_bits(indices, dim: int):
+    """Raw Sobol integer points.
+
+    indices: uint32 array of point indices (any shape).
+    Returns uint32 array shaped indices.shape + (dim,).
+    """
+    v = jnp.asarray(direction_vectors(dim))           # (dim, 32)
+    idx = jnp.asarray(indices, jnp.uint32)
+    gray = idx ^ (idx >> np.uint32(1))
+
+    def body(j, acc):
+        bit = (gray >> jnp.uint32(j)) & np.uint32(1)
+        contrib = jnp.where(bit[..., None].astype(bool), v[:, j], 0)
+        return acc ^ contrib
+
+    acc0 = jnp.zeros(gray.shape + (dim,), jnp.uint32)
+    return jax.lax.fori_loop(0, _BITS, body, acc0)
+
+
+def shifts_for(k0, k1, fn_ids, dim: int):
+    """Per-(function, dim) digital-shift words from the Threefry key."""
+    fn_ids = jnp.asarray(fn_ids, jnp.uint32)
+    d = jnp.arange(dim, dtype=jnp.uint32)
+    c1 = (fn_ids[:, None] * np.uint32(rng_lib.DIM_STRIDE) + d[None, :])
+    # dedicated counter plane (c0 = 0xS0B01) so shifts never collide with
+    # the MC sample stream
+    c0 = jnp.full_like(c1, np.uint32(0x50B01))
+    return rng_lib.random_bits(k0, k1, c0, c1)        # (F, dim)
+
+
+def sobol_uniforms_for(k0, k1, fn_ids, sample_ids, n_dim: int):
+    """Drop-in replacement for rng.uniforms_for using shifted Sobol points.
+
+    Returns (F, S, n_dim) float32 in [0, 1).  The digital shift differs per
+    function (and per key), so trials/functions are independently
+    randomised while sharing one low-discrepancy stream.
+    """
+    pts = sobol_bits(jnp.asarray(sample_ids, jnp.uint32), n_dim)  # (S, dim)
+    shift = shifts_for(k0, k1, fn_ids, n_dim)                     # (F, dim)
+    mixed = pts[None, :, :] ^ shift[:, None, :]
+    return rng_lib.bits_to_uniform(mixed)

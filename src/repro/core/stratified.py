@@ -1,0 +1,114 @@
+"""Stratified sampling primitives (the ``ZMCintegral_normal`` substrate).
+
+The domain is partitioned into axis-aligned boxes ("strata"); each stratum
+is estimated independently with a fixed sample budget and the estimates are
+combined.  Stratification both reduces variance and exposes *where* the
+integrand fluctuates — the per-stratum variance drives the heuristic tree
+search in :mod:`repro.core.tree_search`.
+
+All shapes are static (TPU requirement): a fixed-capacity stratum table with
+an active mask replaces the original implementation's dynamically-growing
+Python lists.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng
+
+
+class StratumTable(NamedTuple):
+    """Fixed-capacity pool of strata plus per-stratum statistics."""
+    boxes: jax.Array    # (cap, dim, 2)
+    mean: jax.Array     # (cap,) per-stratum sample mean of f
+    var: jax.Array      # (cap,) per-stratum population variance of f
+    active: jax.Array   # (cap,) bool
+
+    @property
+    def capacity(self) -> int:
+        return self.boxes.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.boxes.shape[1]
+
+
+def initial_grid(domain, splits_per_dim: int, capacity: int) -> StratumTable:
+    """Uniform grid of ``splits_per_dim**dim`` strata, padded to capacity."""
+    domain = np.asarray(domain, np.float32)
+    dim = domain.shape[0]
+    n0 = splits_per_dim ** dim
+    if n0 > capacity:
+        raise ValueError(f"initial grid {n0} exceeds capacity {capacity}")
+    edges = [np.linspace(domain[d, 0], domain[d, 1], splits_per_dim + 1)
+             for d in range(dim)]
+    boxes = np.zeros((capacity, dim, 2), np.float32)
+    boxes[:, :, 1] = 1.0  # benign padding boxes
+    for i, combo in enumerate(itertools.product(range(splits_per_dim), repeat=dim)):
+        for d, c in enumerate(combo):
+            boxes[i, d, 0] = edges[d][c]
+            boxes[i, d, 1] = edges[d][c + 1]
+    active = np.zeros((capacity,), bool)
+    active[:n0] = True
+    zeros = jnp.zeros((capacity,), jnp.float32)
+    return StratumTable(boxes=jnp.asarray(boxes), mean=zeros, var=zeros,
+                        active=jnp.asarray(active))
+
+
+def stratum_volumes(table: StratumTable) -> jax.Array:
+    widths = table.boxes[..., 1] - table.boxes[..., 0]
+    return jnp.prod(widths, axis=-1)
+
+
+def eval_strata(fn: Callable, boxes, slot_ids, epoch, n_per: int, key,
+                use_kernel: bool = False):
+    """Sample ``n_per`` points in each box and return (mean, var) per box.
+
+    RNG counters: function-id slot carries ``slot + (epoch+1) * STRIDE`` so
+    re-evaluating the same slot in a later refinement epoch draws fresh,
+    reproducible numbers.  ``fn`` maps (..., dim) -> (...,).
+
+    ``use_kernel`` routes the per-stratum moment reduction through the
+    Pallas ``stratum_moments`` kernel (single HBM pass; requires n_per to
+    be a 512-multiple).
+    """
+    from repro.distributed.sharding import constrain
+    k0, k1 = key
+    cap_stride = jnp.uint32(1 << 16)
+    ids = jnp.asarray(slot_ids, jnp.uint32) + (jnp.uint32(epoch) + 1) * cap_stride
+    sample_ids = jnp.arange(n_per, dtype=jnp.uint32)
+    u = rng.uniforms_for(k0, k1, ids, sample_ids, boxes.shape[-2])
+    # on a mesh: strata shard over 'model' ('fn' rule), samples over 'data'
+    u = constrain(u, ("fn", "sample", None))
+    lo = boxes[:, None, :, 0]
+    hi = boxes[:, None, :, 1]
+    x = lo + u * (hi - lo)
+    vals = fn(x)
+    vals = constrain(vals, ("fn", "sample"))
+    if use_kernel:
+        from repro.kernels.moments.ops import stratum_moments
+        m = stratum_moments(vals)
+        return m.mean, m.m2 / jnp.maximum(m.count, 1.0)
+    mean = jnp.mean(vals, axis=-1)
+    var = jnp.maximum(jnp.mean(jnp.square(vals), axis=-1) - jnp.square(mean), 0.0)
+    return mean, var
+
+
+def table_estimate(table: StratumTable, n_per: int):
+    """(integral, stderr) from the current per-stratum statistics."""
+    vol = stratum_volumes(table)
+    act = table.active.astype(jnp.float32)
+    total = jnp.sum(act * vol * table.mean)
+    var = jnp.sum(act * jnp.square(vol) * table.var / float(n_per))
+    return total, jnp.sqrt(var)
+
+
+def suggested_capacity(dim: int, splits_per_dim: int, depth: int, k_split: int) -> int:
+    return splits_per_dim ** dim + depth * k_split

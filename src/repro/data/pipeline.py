@@ -1,0 +1,101 @@
+"""Deterministic synthetic token pipeline — sharded and checkpointable.
+
+Tokens are a pure function of (seed, step, global position) via the same
+counter-based Threefry used everywhere else, so
+
+* every data-parallel shard materialises exactly its slice (no host has to
+  hold the global batch),
+* restarting from step k reproduces the identical stream (checkpoint stores
+  only the step counter),
+* an elastic restart onto a different mesh still consumes the same global
+  token sequence.
+
+`[audio]`/`[vlm]` frontends are stubs per the assignment: frames / patch
+embeddings are generated as deterministic pseudo-random floats with the
+same counter discipline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng as rng_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class StreamState:
+    step: int = 0
+
+
+class TokenStream:
+    """Deterministic global batch stream for one (cfg, batch, seq)."""
+
+    def __init__(self, cfg: ModelConfig, global_batch: int, seq_len: int,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.batch = global_batch
+        self.seq = seq_len
+        self.k0, self.k1 = rng_lib.fold_key(seed, stream=0xDA7A)
+        self.state = StreamState()
+
+    # -- deterministic content -------------------------------------------------
+    def _tokens(self, step: int, rows: np.ndarray) -> np.ndarray:
+        """(len(rows), seq) int32 tokens for global batch rows at `step`."""
+        s = np.uint32(step)
+        c0 = (s * np.uint32(self.batch) + rows[:, None].astype(np.uint32))
+        c0 = np.broadcast_to(c0, (len(rows), self.seq)).astype(np.uint32)
+        c1 = np.broadcast_to(np.arange(self.seq, dtype=np.uint32)[None, :],
+                             c0.shape)
+        bits = np.asarray(rng_lib.random_bits(self.k0, self.k1,
+                                              jnp.asarray(c0), jnp.asarray(c1)))
+        return (bits % np.uint32(self.cfg.vocab_size)).astype(np.int32)
+
+    def _floats(self, step: int, rows: np.ndarray, width: int,
+                tag: int) -> np.ndarray:
+        s = np.uint32(step)
+        c0 = (s * np.uint32(self.batch) + rows[:, None, None].astype(np.uint32))
+        c0 = np.broadcast_to(c0, (len(rows), self.seq, width)).astype(np.uint32)
+        pos = np.arange(self.seq, dtype=np.uint32)[None, :, None]
+        feat = np.arange(width, dtype=np.uint32)[None, None, :]
+        c1 = (pos * np.uint32(width) + feat
+              + np.uint32(tag) * np.uint32(1 << 24))
+        c1 = np.broadcast_to(c1, c0.shape)
+        u = np.asarray(rng_lib.bits_to_uniform(rng_lib.random_bits(
+            self.k0, self.k1, jnp.asarray(c0), jnp.asarray(c1))))
+        return (u * 2.0 - 1.0).astype(np.float32)
+
+    # -- public API --------------------------------------------------------------
+    def next_batch(self, rows: np.ndarray | None = None) -> dict:
+        """Next global batch (or just `rows` of it, for sharded hosts)."""
+        step = self.state.step
+        self.state.step += 1
+        if rows is None:
+            rows = np.arange(self.batch)
+        cfg = self.cfg
+        if cfg.family == "encoder":
+            frames = self._floats(step, rows, cfg.frontend_dim, tag=1)
+            labels = self._tokens(step, rows)
+            return {"frames": jnp.asarray(frames),
+                    "labels": jnp.asarray(labels)}
+        toks = self._tokens(step, rows)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+        if cfg.family == "vlm":
+            nv = max(1, self.seq // 8)
+            vis = self._floats(step, rows, cfg.frontend_dim, tag=2)[:, :nv]
+            pos = np.broadcast_to(np.arange(self.seq, dtype=np.int32),
+                                  (3, len(rows), self.seq)).copy()
+            batch["vision_embeds"] = jnp.asarray(vis)
+            batch["positions"] = jnp.asarray(pos)
+        return batch
+
+    # -- checkpointing -------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {"step": self.state.step}
+
+    def restore(self, snap: dict):
+        self.state.step = int(snap["step"])

@@ -1,0 +1,34 @@
+"""Elastic scaling: resume the same logical state on a different mesh.
+
+Nothing in the framework's state is mesh-shaped: checkpoints store full
+arrays, the data pipeline and MC counters are step-addressed, and sharding
+is (re)derived from logical axes.  So elastic resize = restore + re-derive
+shardings on the new mesh.  ``tests/distributed/test_elastic.py`` saves on
+a (4,2) mesh and bit-exactly resumes on (2,4) and (8,1).
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.sharding import tree_shardings
+
+
+def elastic_restore(directory: str, step: int, abstract_tree, spec_tree,
+                    mesh: Mesh):
+    """Restore a checkpoint onto `mesh` (any shape/axis layout)."""
+    shardings = tree_shardings(abstract_tree, spec_tree, mesh)
+    tree, manifest = ckpt.restore(directory, step, abstract_tree,
+                                  shardings=shardings)
+    return tree, manifest
+
+
+def reshard(tree, abstract_tree, spec_tree, mesh: Mesh):
+    """Move live state onto a new mesh (shrink/grow without a checkpoint)."""
+    import jax
+    shardings = tree_shardings(abstract_tree, spec_tree, mesh)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    flat_s = treedef.flatten_up_to(shardings)
+    return treedef.unflatten(
+        [jax.device_put(x, s) for x, s in zip(flat, flat_s)])

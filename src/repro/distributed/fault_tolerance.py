@@ -1,0 +1,127 @@
+"""Fault tolerance: restart driver, step watchdog, straggler mitigation.
+
+TPU SPMD cannot tolerate per-device divergence, so fault handling lives at
+the *driver* level (the pattern used by production TPU frameworks):
+
+* **checkpoint/restart** — :func:`run_with_restarts` wraps the train loop;
+  on any exception it restores the latest checkpoint and continues, up to a
+  restart budget.  Because data pipeline + RNG + MC counters are all pure
+  functions of the step, a restart replays the identical computation.
+* **straggler detection** — :class:`StepWatchdog` tracks a robust moving
+  estimate of step time; steps exceeding ``threshold x median`` raise a
+  :class:`StragglerEvent` record.  On a real pod this feeds the re-shard /
+  replace-host decision (here: logged + queryable, and the MC driver uses
+  it to re-issue work units).
+* **work re-issue** — for the embarrassingly-parallel MC workload, chunks
+  are recomputable from counters alone; :class:`WorkQueue` re-issues chunks
+  whose shard died (used by the integration driver).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    median: float
+
+
+class StepWatchdog:
+    """Flags steps slower than ``threshold`` x running median."""
+
+    def __init__(self, threshold: float = 3.0, window: int = 32,
+                 warmup: int = 3):
+        self.threshold = threshold
+        self.window = window
+        self.warmup = warmup
+        self.durations: list[float] = []
+        self.events: list[StragglerEvent] = []
+        self._t0: float | None = None
+        self._step = 0
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.monotonic() - self._t0
+        hist = self.durations[-self.window:]
+        if len(hist) >= self.warmup:
+            med = float(np.median(hist))
+            if dt > self.threshold * med:
+                self.events.append(StragglerEvent(self._step, dt, med))
+        self.durations.append(dt)
+        self._step += 1
+        return False
+
+    @property
+    def straggler_count(self) -> int:
+        return len(self.events)
+
+
+def run_with_restarts(body: Callable[[int], Any], *, max_restarts: int = 3,
+                      on_restart: Callable[[int, Exception], None] | None = None):
+    """Run ``body(attempt)`` with restart-on-exception semantics.
+
+    ``body`` is responsible for restoring from its checkpoint directory at
+    entry (the standard resume-from-latest pattern).  Returns body's result.
+    """
+    last: Exception | None = None
+    for attempt in range(max_restarts + 1):
+        try:
+            return body(attempt)
+        except Exception as e:  # noqa: BLE001 - driver-level catch is the point
+            last = e
+            if on_restart is not None:
+                on_restart(attempt, e)
+            if attempt == max_restarts:
+                raise
+    raise last  # unreachable
+
+
+class WorkQueue:
+    """Re-issuable chunk queue for the MC engine (counter-addressed work).
+
+    Chunks are (sample_offset, n_samples) ranges; because the RNG is
+    counter-based, *any* worker can (re)compute any chunk at any time and
+    the merged result is independent of who computed what.
+    """
+
+    def __init__(self, total_samples: int, chunk: int):
+        self.chunk = chunk
+        self.pending: list[tuple[int, int]] = []
+        off = 0
+        while off < total_samples:
+            n = min(chunk, total_samples - off)
+            self.pending.append((off, n))
+            off += n
+        self.in_flight: dict[int, tuple[int, int]] = {}
+        self.done: list[tuple[int, int]] = []
+        self._next_ticket = 0
+
+    def take(self) -> tuple[int, tuple[int, int]] | None:
+        if not self.pending:
+            return None
+        item = self.pending.pop(0)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.in_flight[ticket] = item
+        return ticket, item
+
+    def complete(self, ticket: int):
+        self.done.append(self.in_flight.pop(ticket))
+
+    def fail(self, ticket: int):
+        """Worker died: chunk goes back to pending (re-issue)."""
+        self.pending.insert(0, self.in_flight.pop(ticket))
+
+    @property
+    def finished(self) -> bool:
+        return not self.pending and not self.in_flight

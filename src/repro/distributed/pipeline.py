@@ -1,0 +1,88 @@
+"""GPipe-style pipeline parallelism over a mesh axis (multi-pod option).
+
+Maps a stack of identical stages onto the 'pod' (or any) mesh axis and
+streams microbatches through with ``collective_permute``.  This is the
+alternative multi-pod strategy to pure data parallelism: activations cross
+the (slow) pod interconnect once per stage boundary instead of gradients
+crossing it once per step — the right trade when
+``activation_bytes * microbatches < grad_bytes``.
+
+Single-program schedule (classic JAX SPMD pipelining): every device runs
+the same loop of ``M + P - 1`` ticks; at tick t, device p processes
+microbatch ``t - p`` (when valid) and then shifts its output to device
+p+1.  Bubble fraction = (P-1)/(M+P-1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(
+    stage_fn: Callable,
+    stage_params,          # pytree; leaves have leading axis = n_stages
+    x,                     # (M, mb, ...) microbatched input
+    mesh: Mesh,
+    axis: str = "pod",
+):
+    """Run x through n_stages of `stage_fn` pipelined over `axis`.
+
+    stage_fn(params_slice, x_mb) -> y_mb with identical shape/dtype
+    (inter-stage activations must be shape-stable, as in GPipe).
+    Returns (M, mb, ...) outputs.
+    """
+    n_stages = mesh.shape[axis]
+    m = x.shape[0]
+
+    def body(params_local, xs):
+        # params_local: this device's stage params; shard_map keeps the
+        # sharded leading axis as size 1 -> squeeze it away.
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        # xs: full microbatch stack (replicated over `axis`).
+        p_idx = jax.lax.axis_index(axis)
+        n_ticks = m + n_stages - 1
+
+        def tick(carry, t):
+            state, outputs = carry
+            # stage 0 ingests microbatch t; others take the permuted state
+            mb_idx = jnp.clip(t, 0, m - 1)
+            fresh = jnp.take(xs, mb_idx, axis=0)
+            inp = jnp.where(p_idx == 0, fresh, state)
+            out = stage_fn(params_local, inp)
+            # my microbatch id at tick t is t - p_idx
+            my_mb = t - p_idx
+            is_last = p_idx == (n_stages - 1)
+            valid = (my_mb >= 0) & (my_mb < m) & is_last
+            upd = jax.lax.dynamic_update_slice_in_dim(
+                outputs, out[None], jnp.clip(my_mb, 0, m - 1), axis=0)
+            outputs = jnp.where(valid, upd, outputs)
+            # shift activations to the next stage
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            state = jax.lax.ppermute(out, axis, perm)
+            return (state, outputs), None
+
+        # fold in p_idx so the carries enter the scan already varying over
+        # `axis` (the loop body's ppermute makes the outputs varying)
+        vary0 = (p_idx * 0).astype(xs.dtype)
+        state0 = jnp.zeros_like(jnp.take(xs, 0, axis=0)) + vary0
+        outputs0 = jnp.zeros_like(xs) + vary0
+        (state, outputs), _ = jax.lax.scan(
+            tick, (state0, outputs0), jnp.arange(n_ticks))
+        # only the last stage holds real outputs; broadcast them back
+        outputs = jax.lax.psum(
+            jnp.where(p_idx == n_stages - 1, outputs, jnp.zeros_like(outputs)),
+            axis)
+        return outputs
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    other_axes = [a for a in mesh.axis_names if a != axis]
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_params, P()),
+        out_specs=P(),
+    )(stage_params, x)

@@ -1,0 +1,238 @@
+"""Logical-axis sharding rules (MaxText-style) shared by every workload.
+
+Model code annotates parameters and activations with *logical* axis names
+('batch', 'heads', 'mlp', 'experts', ...).  A rule table maps logical names
+to physical mesh axes; :func:`logical_to_spec` applies the table with a
+divisibility fallback (an axis that does not divide evenly is left
+unsharded — e.g. chatglm3's 2 KV heads on a 16-way model axis), which is
+what makes one rule table serve all ten architectures.
+
+The MC integration engine uses the same table: its 'fn' axis aliases
+'experts' (function index -> model axis) and 'sample' aliases 'batch'.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> physical mesh axis (or tuple of axes, or None)
+#
+# 'embed' -> 'data' is the FSDP axis: parameters (and their optimizer
+# moments) shard 2D over (model x data), so no chip ever holds a
+# model-parallel-only replica.  Activations are unaffected: their batch dim
+# claims 'data' first and the used-set rule skips a second use.  XLA inserts
+# the per-layer weight all-gathers (and overlaps them with compute on TPU).
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache_seq": "model",      # decode KV cache: sequence sharded for flash-decode
+    "cache_kv": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "embed": "data",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "shared_mlp": "model",
+    "q_lora": None,
+    "kv_lora": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,
+    "frontend": None,
+    "stats": None,
+    # attention score sharding: q-sequence over model (context parallel)
+    # when heads cannot shard (see layers.sdpa)
+    "attn_q_seq": "model",
+    "qgroup": None,
+    # MC integration engine aliases
+    "fn": "model",
+    "sample": ("pod", "data"),
+}
+
+# §Perf iteration 8: sub-1B models on a fixed 16x16 mesh should not pay
+# Megatron-TP activation all-reduces — replicate the (tiny) weights and
+# spread the batch over BOTH axes instead.  On the multi-pod mesh the batch
+# (256) cannot cover 512 chips; ('data','model') still covers the pod and
+# the pod axis stays pure-DP.
+SMALL_DP_RULES: dict[str, Any] = dict(
+    DEFAULT_RULES,
+    batch=[("data", "model"), ("data",), ("model",)],
+    sample=[("data", "model"), ("data",), ("model",)],
+    embed=None, mlp=None, vocab=None, heads=None, kv_heads=None,
+    shared_mlp=None, ssm_heads=None, attn_q_seq=None, experts=None,
+)
+
+PROFILES = {"default": DEFAULT_RULES, "small_dp": SMALL_DP_RULES}
+
+
+def rules_for(cfg) -> dict[str, Any]:
+    """Rule table for a model config (reads cfg.sharding_profile)."""
+    return dict(PROFILES[getattr(cfg, "sharding_profile", "default")])
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: dict[str, Any] = dict(DEFAULT_RULES)
+        self.enabled: bool = True
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def logical_sharding(mesh: Mesh | None, rules: dict[str, Any] | None = None):
+    """Enable logical-axis constraints for model code traced inside."""
+    prev = (_CTX.mesh, _CTX.rules, _CTX.enabled)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES if rules is None else rules)
+    _CTX.enabled = mesh is not None
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules, _CTX.enabled = prev
+
+
+@contextlib.contextmanager
+def no_constraints():
+    """Disable constraints (inside shard_map bodies)."""
+    prev = _CTX.enabled
+    _CTX.enabled = False
+    try:
+        yield
+    finally:
+        _CTX.enabled = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def _candidates(logical: str | None, mesh: Mesh, rules) -> list[tuple[str, ...]]:
+    """Candidate physical mappings for a logical axis, in preference order.
+
+    A rule value may be a str, a tuple (one multi-axis mapping), or a LIST
+    of str/tuple alternatives tried until one divides the dimension (e.g.
+    small_dp batch: [('data','model'), 'data'] — the 256-batch train shape
+    covers both axes, the 32-batch prefill falls back to data only).
+    """
+    if logical is None:
+        return []
+    phys = rules.get(logical, None)
+    if phys is None:
+        return []
+    alts = phys if isinstance(phys, list) else [phys]
+    out = []
+    for alt in alts:
+        if isinstance(alt, str):
+            alt = (alt,)
+        filtered = tuple(a for a in alt if a in mesh.axis_names)
+        if filtered:
+            out.append(filtered)
+    return out
+
+
+def _physical_axes(logical: str | None, mesh: Mesh, rules) -> tuple[str, ...]:
+    cands = _candidates(logical, mesh, rules)
+    return cands[0] if cands else ()
+
+
+# When the primary rule for a parameter cannot shard the model axis (e.g.
+# qwen2.5's 40 heads on a 16-way axis), retry these logical dims in order —
+# 'head_dim' first reproduces Megatron's row/column-parallel attention
+# (o-proj contracts over the sharded dim -> one psum), 'embed' last.
+_MODEL_RETRY_PRIORITY = ("head_dim", "kv_lora", "q_lora", "mlp",
+                         "frontend", "embed")
+# axes that mark an array as an activation/cache (no retry pass)
+_ACTIVATION_AXES = {"batch", "seq", "cache_seq", "sample"}
+
+
+def logical_to_spec(shape: Sequence[int], axes: Sequence[str | None],
+                    mesh: Mesh, rules=None, *, param_retry: bool = False) -> P:
+    """PartitionSpec for one array, with divisibility fallback.
+
+    ``param_retry``: for parameter-like arrays, if the 'model' axis ended up
+    unused (primary rule non-divisible), retry alternate dims so no large
+    parameter is ever fully replicated.
+    """
+    rules = rules if rules is not None else _CTX.rules
+    used: set[str] = set()
+    entries: list = []
+    for dim, name in zip(shape, axes):
+        placed = False
+        for cand in _candidates(name, mesh, rules):
+            phys = tuple(a for a in cand if a not in used)
+            if not phys or len(phys) != len(cand):
+                continue  # partially-consumed mapping: try next alternative
+            size = int(np.prod([mesh.shape[a] for a in phys]))
+            if dim % size == 0:
+                entries.append(phys if len(phys) > 1 else phys[0])
+                used.update(phys)
+                placed = True
+                break
+        if not placed:
+            entries.append(None)
+
+    if (param_retry and "model" in mesh.axis_names and "model" not in used
+            and not (_ACTIVATION_AXES & set(a for a in axes if a))):
+        msize = mesh.shape["model"]
+        for want in _MODEL_RETRY_PRIORITY:
+            placed = False
+            for i, (dim, name) in enumerate(zip(shape, axes)):
+                if name == want and entries[i] is None and dim % msize == 0:
+                    entries[i] = "model"
+                    placed = True
+                    break
+            if placed:
+                break
+
+    # strip trailing Nones for tidiness
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def named_sharding(shape, axes, mesh: Mesh | None = None, rules=None) -> NamedSharding:
+    mesh = mesh if mesh is not None else _CTX.mesh
+    return NamedSharding(mesh, logical_to_spec(shape, axes, mesh, rules,
+                                               param_retry=True))
+
+
+def constrain(x, axes: Sequence[str | None]):
+    """with_sharding_constraint(x, logical axes); no-op without a mesh."""
+    if not _CTX.enabled or _CTX.mesh is None:
+        return x
+    spec = logical_to_spec(x.shape, axes, _CTX.mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes annotation: tuple of str/None (possibly empty)."""
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def tree_shardings(abstract_tree, spec_tree, mesh: Mesh | None = None,
+                   rules=None):
+    """NamedSharding tree for a (ShapeDtypeStruct tree, logical-axes tree)."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    leaves, treedef = jax.tree.flatten(abstract_tree)
+    axes_leaves, axes_treedef = jax.tree.flatten(spec_tree, is_leaf=is_axes_leaf)
+    if treedef.num_leaves != axes_treedef.num_leaves:
+        raise ValueError(
+            f"params/axes tree mismatch: {treedef.num_leaves} vs "
+            f"{axes_treedef.num_leaves} leaves")
+    shardings = [named_sharding(l.shape, a, mesh, rules)
+                 for l, a in zip(leaves, axes_leaves)]
+    return jax.tree.unflatten(treedef, shardings)

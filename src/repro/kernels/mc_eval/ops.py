@@ -1,0 +1,108 @@
+"""jit'd public wrapper for the fused MC harmonic kernel.
+
+Conforms to the :mod:`repro.kernels.registry` fast-path signature so
+``IntegrandFamily(kernel="mc_eval_harmonic")`` families dispatch here from
+the direct-MC engine (single-device and shard_map paths alike).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.direct_mc import SumsState
+from repro.kernels import registry
+from repro.kernels.mc_eval.kernel import F_BLK, S_BLK, mc_harmonic_pallas
+from repro.kernels.mc_eval.sobol_kernel import mc_sobol_harmonic_pallas
+
+
+def _should_interpret() -> bool:
+    # Real Mosaic lowering only exists on TPU; everywhere else (this CPU
+    # container included) the kernel body runs in interpret mode.
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x, n_pad):
+    if n_pad == 0:
+        return x
+    return jnp.pad(x, [(0, n_pad)] + [(0, 0)] * (x.ndim - 1))
+
+
+@registry.register("mc_eval_harmonic")
+def mc_eval_harmonic(family, n_samples: int, key, *, fn_offset: int = 0,
+                     sample_offset=0, fn_ids=None,
+                     interpret: bool | None = None) -> SumsState:
+    """Fused-kernel (s1, s2) sums for a harmonic family.
+
+    Matches ``direct_mc.family_sums`` semantics: same counters, same
+    uniforms, same estimates (up to f32 association order).
+    """
+    p = family.params
+    if not {"a", "b", "k"} <= set(p):
+        raise ValueError("mc_eval_harmonic needs params {'a','b','k'}")
+    n_fn = family.n_fn
+    dim = family.dim
+    if fn_ids is None:
+        fn_ids = jnp.uint32(fn_offset) + jnp.arange(n_fn, dtype=jnp.uint32)
+    if interpret is None:
+        interpret = _should_interpret()
+
+    n_fn_pad = math.ceil(n_fn / F_BLK) * F_BLK
+    pad = n_fn_pad - n_fn
+    a = _pad_rows(jnp.asarray(p["a"], jnp.float32).reshape(n_fn, 1), pad)
+    b = _pad_rows(jnp.asarray(p["b"], jnp.float32).reshape(n_fn, 1), pad)
+    k = _pad_rows(jnp.asarray(p["k"], jnp.float32).reshape(n_fn, dim), pad)
+    lo = _pad_rows(jnp.asarray(family.domains[..., 0], jnp.float32), pad)
+    hi = _pad_rows(jnp.asarray(family.domains[..., 1], jnp.float32), pad)
+    fn_ids = _pad_rows(jnp.asarray(fn_ids, jnp.uint32), pad)
+
+    n_sample_blocks = max(1, math.ceil(int(n_samples) / S_BLK))
+    scalars = jnp.stack([
+        jnp.asarray(key[0], jnp.uint32).reshape(()),
+        jnp.asarray(key[1], jnp.uint32).reshape(()),
+        jnp.asarray(sample_offset, jnp.uint32).reshape(()),
+        jnp.asarray(n_samples, jnp.uint32).reshape(()),
+    ])
+
+    out = mc_harmonic_pallas(scalars, fn_ids, a, b, k, lo, hi, dim=dim,
+                             n_sample_blocks=n_sample_blocks,
+                             interpret=bool(interpret))
+    return SumsState(s1=out[:n_fn, 0], s2=out[:n_fn, 1],
+                     n=jnp.float32(n_samples))
+
+
+@registry.register("mc_eval_harmonic@sobol")
+def mc_eval_sobol_harmonic(family, n_samples: int, key, *, fn_offset: int = 0,
+                           sample_offset=0, fn_ids=None,
+                           interpret: bool | None = None) -> SumsState:
+    """RQMC fast path: fused Sobol sampling + harmonic eval + reduction."""
+    from repro.core.sobol import direction_vectors
+    p = family.params
+    n_fn, dim = family.n_fn, family.dim
+    if fn_ids is None:
+        fn_ids = jnp.uint32(fn_offset) + jnp.arange(n_fn, dtype=jnp.uint32)
+    if interpret is None:
+        interpret = _should_interpret()
+    n_fn_pad = math.ceil(n_fn / F_BLK) * F_BLK
+    pad = n_fn_pad - n_fn
+    a = _pad_rows(jnp.asarray(p["a"], jnp.float32).reshape(n_fn, 1), pad)
+    b = _pad_rows(jnp.asarray(p["b"], jnp.float32).reshape(n_fn, 1), pad)
+    k = _pad_rows(jnp.asarray(p["k"], jnp.float32).reshape(n_fn, dim), pad)
+    lo = _pad_rows(jnp.asarray(family.domains[..., 0], jnp.float32), pad)
+    hi = _pad_rows(jnp.asarray(family.domains[..., 1], jnp.float32), pad)
+    fn_ids = _pad_rows(jnp.asarray(fn_ids, jnp.uint32), pad)
+    dirvecs = jnp.asarray(direction_vectors(dim))
+    n_sample_blocks = max(1, math.ceil(int(n_samples) / S_BLK))
+    scalars = jnp.stack([
+        jnp.asarray(key[0], jnp.uint32).reshape(()),
+        jnp.asarray(key[1], jnp.uint32).reshape(()),
+        jnp.asarray(sample_offset, jnp.uint32).reshape(()),
+        jnp.asarray(n_samples, jnp.uint32).reshape(()),
+    ])
+    out = mc_sobol_harmonic_pallas(scalars, fn_ids, dirvecs, a, b, k, lo, hi,
+                                   dim=dim, n_sample_blocks=n_sample_blocks,
+                                   interpret=bool(interpret))
+    return SumsState(s1=out[:n_fn, 0], s2=out[:n_fn, 1],
+                     n=jnp.float32(n_samples))

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused MC harmonic kernel.
+
+Mirrors the kernel's exact blocking and accumulation order so the test
+sweeps can assert tight f32 agreement (same Threefry counters, same
+(8,128)-tile partial sums, same sequential block accumulation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as rng_lib
+from repro.kernels.mc_eval.kernel import S_BLK
+
+
+def mc_harmonic_ref(scalars, fn_ids, a, b, k, lo, hi, *,
+                    dim: int, n_sample_blocks: int):
+    """Reference (sum f, sum f^2) per function; same layout as the kernel.
+
+    Args match :func:`repro.kernels.mc_eval.kernel.mc_harmonic_pallas`.
+    """
+    k0, k1, sample_offset, n_valid = (scalars[i] for i in range(4))
+    n_fn = fn_ids.shape[0]
+
+    def block(carry, j):
+        s = carry
+        local_idx = jnp.uint32(j) * jnp.uint32(S_BLK) + jnp.arange(S_BLK, dtype=jnp.uint32)
+        c0 = sample_offset + local_idx
+        valid = local_idx < n_valid
+        d = jnp.arange(dim, dtype=jnp.uint32)
+        c1 = (fn_ids[:, None, None] * jnp.uint32(rng_lib.DIM_STRIDE)
+              + d[None, None, :])
+        shape = (n_fn, S_BLK, dim)
+        bits = rng_lib.random_bits(
+            k0, k1,
+            jnp.broadcast_to(c0[None, :, None], shape),
+            jnp.broadcast_to(c1, shape))
+        u = rng_lib.bits_to_uniform(bits)
+        x = lo[:, None, :] + u * (hi - lo)[:, None, :]
+        phase = jnp.sum(x * k[:, None, :], axis=-1)
+        val = a * jnp.cos(phase) + b * jnp.sin(phase)
+        val = jnp.where(valid[None, :], val, 0.0)
+        part = jnp.stack([jnp.sum(val, -1), jnp.sum(val * val, -1)], axis=-1)
+        return s + part, None
+
+    init = jnp.zeros((n_fn, 2), jnp.float32)
+    out, _ = jax.lax.scan(block, init, jnp.arange(n_sample_blocks))
+    return out

@@ -1,0 +1,38 @@
+"""jit'd wrapper for the stratum-moments kernel (pads + unpads)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reduction import Moments
+from repro.kernels.moments.kernel import C_BLK, R_BLK, moments_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def stratum_moments(values, *, interpret: bool | None = None) -> Moments:
+    """Per-row Moments of a (n_strata, n_samples) value matrix.
+
+    Columns are padded by *repeating the row mean estimate*? No — padding
+    columns would bias the variance; instead we require the sample count to
+    be a C_BLK multiple and pad only rows (with zeros, sliced off after).
+    The stratified solver already draws per-stratum budgets in C_BLK
+    multiples (see ``repro.core.stratified``).
+    """
+    values = jnp.asarray(values, jnp.float32)
+    r, c = values.shape
+    if c % C_BLK != 0:
+        raise ValueError(
+            f"n_samples per stratum must be a multiple of {C_BLK}; got {c}")
+    if interpret is None:
+        interpret = _should_interpret()
+    r_pad = math.ceil(r / R_BLK) * R_BLK
+    if r_pad != r:
+        values = jnp.pad(values, ((0, r_pad - r), (0, 0)))
+    out = moments_pallas(values, interpret=bool(interpret))[:r]
+    return Moments(count=out[:, 0], mean=out[:, 1], m2=out[:, 2])

@@ -1,0 +1,40 @@
+"""Kernel fast-path registry.
+
+An :class:`~repro.core.integrand.IntegrandFamily` can name a registered
+Pallas implementation (``family.kernel``); the direct-MC engine dispatches
+to it when ``use_kernel=True``.  Registered impls must match the signature::
+
+    impl(family, n_samples, key, *, fn_offset=0, sample_offset=0,
+         fn_ids=None) -> SumsState
+
+and produce sums statistically identical to the pure-JAX path (same Threefry
+counters, same uniforms; asserted bit-tight by the kernel test sweeps).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"kernel {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> Callable:
+    # import for side effect: kernel modules self-register
+    import repro.kernels.mc_eval.ops  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"no kernel named {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    import repro.kernels.mc_eval.ops  # noqa: F401
+    return sorted(_REGISTRY)

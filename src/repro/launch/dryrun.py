@@ -1,0 +1,335 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell this script
+
+  1. builds the production mesh (16x16 single-pod, 2x16x16 multi-pod),
+  2. lowers the appropriate step (train_step / prefill / serve_step) with
+     ShapeDtypeStruct inputs and NamedShardings derived from the logical
+     rules (NO device allocation anywhere),
+  3. ``.compile()``s it — a sharding mismatch, an unsupported collective or
+     a compile-time OOM is a bug in the framework and fails the run,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` plus a parse of
+     the optimized HLO's collectives into benchmarks/artifacts/*.json —
+     the inputs to the roofline analysis (EXPERIMENTS.md §Roofline).
+
+The paper's own workload rides along as a pseudo-arch: the sharded
+multi-function MC engine (10k integrands x 1M samples) is lowered on the
+same meshes, proving the integration engine's collective schedule at
+production scale.
+
+Usage:
+  python -m repro.launch.dryrun --all
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k --multi-pod
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALIASES, all_configs, get_config
+from repro.configs.shapes import SHAPES, cell_status
+from repro.distributed.sharding import (logical_sharding, rules_for,
+                                        tree_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_logical_axes, input_specs
+from repro.launch.train import (abstract_train_state, default_hparams_for,
+                                make_train_step, train_state_specs)
+from repro.models.model import Model
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of one HLO result type like 'bf16[8,4096,7168]' or a tuple."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([0-9,]*)\]", type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind from optimized HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if line.startswith("ROOT "):
+            line = line[5:]
+        # "%name = TYPE all-reduce(...)" / all-reduce-start(...)
+        m = re.match(r"%?\S+\s*=\s*(\([^)]*\)|\S+)\s+([a-z0-9-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += _shape_bytes(m.group(1))
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    stats = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            stats[k] = int(v)
+    return stats
+
+
+def _cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float))}
+
+
+def model_flops_estimate(cfg, shape) -> dict:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    from repro.models.config import count_params
+    model = Model(cfg)
+    defs = model.param_defs()
+    n_total = count_params(defs)
+    n_active = n_total
+    if cfg.n_experts and cfg.top_k:
+        # routed experts: only top_k of n_experts are active per token
+        moe_all = count_params(defs["stages"].get("moe_layers", {}))
+        # wg/wu/wd dominate; router is negligible
+        n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+        routed = 3 * cfg.n_experts * cfg.d_model * cfg.moe_d_ff * n_moe_layers
+        active_routed = routed * cfg.top_k / cfg.n_experts
+        n_active = n_total - routed + active_routed
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        flops = 2.0 * n_active * tokens
+    return {"n_params": float(n_total), "n_active": float(n_active),
+            "tokens": float(tokens), "model_flops": float(flops)}
+
+
+def lower_cell(arch: str, shape_name: str, mesh):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    hp = default_hparams_for(cfg)
+
+    with logical_sharding(mesh, rules=rules_for(cfg)):
+        if shape.kind == "train":
+            step = make_train_step(model, hp)
+            state_abs = abstract_train_state(model, hp)
+            state_sh = tree_shardings(state_abs, train_state_specs(model, hp),
+                                      mesh)
+            batch_abs = input_specs(cfg, shape)
+            batch_sh = tree_shardings(batch_abs,
+                                      batch_logical_axes(cfg, shape), mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            params_abs = model.abstract()
+            params_sh = tree_shardings(params_abs, model.specs(), mesh)
+            batch_abs = input_specs(cfg, shape)
+            batch_sh = tree_shardings(batch_abs,
+                                      batch_logical_axes(cfg, shape), mesh)
+            cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+            cache_sh = tree_shardings(
+                cache_abs, model.cache_specs(shape.global_batch, shape.seq_len),
+                mesh)
+
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, seq_cap=shape.seq_len)
+
+            lowered = jax.jit(
+                prefill_step,
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(None, cache_sh),
+            ).lower(params_abs, batch_abs)
+        else:  # decode
+            params_abs = model.abstract()
+            params_sh = tree_shardings(params_abs, model.specs(), mesh)
+            cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+            cache_sh = tree_shardings(
+                cache_abs, model.cache_specs(shape.global_batch, shape.seq_len),
+                mesh)
+            inp = input_specs(cfg, shape)
+            inp_ax = batch_logical_axes(cfg, shape)
+            tok_sh = tree_shardings({"tokens": inp["tokens"]},
+                                    {"tokens": inp_ax["tokens"]},
+                                    mesh)["tokens"]
+
+            def serve_step(params, cache, tokens, pos):
+                return model.decode_step(params, cache, tokens, pos)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(params_sh, cache_sh, tok_sh, None),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs, inp["tokens"], inp["pos"])
+    return lowered, cfg, shape
+
+
+def lower_zmc(mesh, n_fn: int = 10000, n_samples: int = 1 << 20):
+    """The paper's workload on the production mesh (pseudo-arch cell)."""
+    from repro.core import harmonic_family
+    from repro.core.direct_mc import sharded_family_sums
+
+    fam = harmonic_family(n_fn, 4)
+    sample_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def run(params, domains):
+        import dataclasses as _d
+        f = _d.replace(fam, params=params, domains=domains)
+        sums, _ = sharded_family_sums(
+            f, n_samples, (jnp.uint32(1), jnp.uint32(2)), mesh,
+            fn_axis="model", sample_axes=sample_axes, chunk=16384)
+        return sums.s1, sums.s2
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    fn_sh = NamedSharding(mesh, P("model"))
+    params_abs = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), fam.params)
+    dom_abs = jax.ShapeDtypeStruct(fam.domains.shape, fam.domains.dtype)
+    params_sh = jax.tree.map(lambda _: fn_sh, params_abs)
+    lowered = jax.jit(run, in_shardings=(params_sh, fn_sh),
+                      out_shardings=(fn_sh, fn_sh)).lower(params_abs, dom_abs)
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    key = f"{arch}__{shape_name}__{mesh_name}".replace(".", "_")
+    path = os.path.join(out_dir, key + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "n_chips": n_chips, "status": "ok"}
+    t0 = time.time()
+    try:
+        if arch == "zmc_multifunctions":
+            lowered = lower_zmc(mesh)
+            cfg = shape = None
+        else:
+            lowered, cfg, shape = lower_cell(arch, shape_name, mesh)
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+        record["memory"] = _memory_stats(compiled)
+        record["cost"] = _cost_stats(compiled)
+        record["collectives"] = parse_collectives(compiled.as_text())
+        if cfg is not None:
+            record["model"] = model_flops_estimate(cfg, shape)
+        print(compiled.memory_analysis())
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-zmc", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = args.out or os.path.normpath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "..", "..", "..", "benchmarks", "artifacts"))
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        configs = all_configs()
+        for alias, mod in ALIASES.items():
+            cfg = get_config(alias)
+            for sname, sh in SHAPES.items():
+                ok, reason = cell_status(cfg, sh)
+                if ok:
+                    cells.append((alias, sname))
+                else:
+                    print(f"SKIP {alias} x {sname}: {reason}")
+        cells.append(("zmc_multifunctions", "mc_10k_fns"))
+    else:
+        if args.arch is None:
+            ap.error("--arch required unless --all")
+        cells.append((args.arch, args.shape or "train_4k"))
+        if args.include_zmc:
+            cells.append(("zmc_multifunctions", "mc_10k_fns"))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes or args.all:
+        meshes = [False, True]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch, sname in cells:
+            rec = run_cell(arch, sname, multi_pod, out_dir, force=args.force)
+            status = rec["status"]
+            mesh_name = rec["mesh"]
+            if status == "ok":
+                mem = rec["memory"].get("temp_size_in_bytes", 0) / 2**30
+                coll = rec["collectives"]["total_bytes"] / 2**30
+                print(f"OK   {arch:24s} {sname:12s} {mesh_name:10s} "
+                      f"compile={rec.get('compile_s', 0):7.1f}s "
+                      f"temp/dev={mem:7.2f}GiB coll={coll:8.2f}GiB")
+            else:
+                failures += 1
+                print(f"FAIL {arch:24s} {sname:12s} {mesh_name:10s} "
+                      f"{rec['error']}")
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+    print("all dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run pattern).
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable abstract
+inputs — no device allocation — for the step function that the given shape
+lowers (train / prefill / decode).  ``concrete_batch`` materialises small
+real batches for smoke tests with the same structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+
+# stub-frontend sizing: fraction of the sequence that is vision tokens
+VISION_FRAC = 8  # 1/8 of the sequence
+
+
+def _batch_struct(cfg: ModelConfig, batch: int, seq: int, *, train: bool):
+    i32 = jnp.int32
+    cd = cfg.dtype("compute")
+    if cfg.family == "encoder":
+        d = {"frames": jax.ShapeDtypeStruct((batch, seq, cfg.frontend_dim), cd)}
+        if train:
+            d["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        return d
+    if cfg.family == "vlm":
+        nv = max(1, seq // VISION_FRAC)
+        d = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "vision_embeds": jax.ShapeDtypeStruct((batch, nv, cfg.frontend_dim), cd),
+            "positions": jax.ShapeDtypeStruct((3, batch, seq), i32),
+        }
+        if train:
+            d["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+        return d
+    d = {"tokens": jax.ShapeDtypeStruct((batch, seq), i32)}
+    if train:
+        d["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    return d
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract inputs for the step this shape lowers."""
+    if shape.kind == "train":
+        return _batch_struct(cfg, shape.global_batch, shape.seq_len, train=True)
+    if shape.kind == "prefill":
+        return _batch_struct(cfg, shape.global_batch, shape.seq_len, train=False)
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Logical sharding axes matching :func:`input_specs`."""
+    if shape.kind == "decode":
+        return {"tokens": ("batch", None), "pos": ()}
+    ax: dict = {}
+    if cfg.family == "encoder":
+        ax["frames"] = ("batch", "seq", "frontend")
+    elif cfg.family == "vlm":
+        ax["tokens"] = ("batch", "seq")
+        ax["vision_embeds"] = ("batch", None, "frontend")
+        ax["positions"] = (None, "batch", "seq")
+    else:
+        ax["tokens"] = ("batch", "seq")
+    if shape.kind == "train":
+        ax["labels"] = ("batch", "seq")
+    return ax
+
+
+def concrete_batch(cfg: ModelConfig, batch: int, seq: int, *, train: bool,
+                   seed: int = 0) -> dict:
+    """Small real batch with the input_specs structure (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    structs = _batch_struct(cfg, batch, seq, train=train)
+    out = {}
+    for k, sds in structs.items():
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            if k == "positions":
+                pos = np.broadcast_to(np.arange(seq, dtype=np.int32),
+                                      (3, batch, seq)).copy()
+                out[k] = jnp.asarray(pos)
+            else:
+                out[k] = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, sds.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(sds.shape).astype(np.float32), sds.dtype)
+    return out

@@ -1,0 +1,132 @@
+"""Decoder blocks: parameter declarations + forward/decode functions.
+
+Each block kind (dense, moe, ssm) exposes:
+  *_block_defs(cfg)                  -> PSpec tree for ONE layer
+  *_block(x, p, cfg, positions)      -> x                       (train/fwd)
+  *_block_prefill(...)               -> (x, layer_cache)        (prefill)
+  *_block_decode(x, p, cfg, cache, pos) -> (x, new_cache)       (decode)
+
+`repro.models.model` stacks these into scanned stages.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, PSpec
+from repro.models import decode as dec
+from repro.models import layers, mla, moe, ssm
+
+
+# ---------------------------------------------------------------------------
+# Dense (GQA or MLA attention + gated MLP)
+# ---------------------------------------------------------------------------
+
+def dense_block_defs(cfg: ModelConfig, use_moe: bool = False) -> dict:
+    attn = mla.mla_defs(cfg) if cfg.attn_type == "mla" else layers.attn_defs(cfg)
+    ffn = moe.moe_defs(cfg) if use_moe else layers.mlp_defs(cfg)
+    return {
+        "ln1": layers.rmsnorm_defs(cfg.d_model),
+        "attn": attn,
+        "ln2": layers.rmsnorm_defs(cfg.d_model),
+        "ffn": ffn,
+    }
+
+
+def _attn_fwd(x, p, cfg, positions):
+    if cfg.attn_type == "mla":
+        out, kv = mla.mla_attention(x, p, cfg, positions)
+        return out, kv
+    out = layers.attention(x, p, cfg, positions)
+    return out, None
+
+
+def _attn_fwd_with_kv(x, p, cfg, positions):
+    """Like _attn_fwd but always returns prefill KV for the cache."""
+    if cfg.attn_type == "mla":
+        return mla.mla_attention(x, p, cfg, positions)
+    q, k, v = layers.qkv_proj(x, p, cfg, positions)
+    o = layers.sdpa(q, k, v, cfg, causal=cfg.causal and not cfg.is_encoder)
+    return layers.attn_out(o, p, cfg), (k, v)
+
+
+def dense_block(x, p, cfg: ModelConfig, positions, use_moe: bool = False):
+    a, _ = _attn_fwd(layers.rmsnorm(x, p["ln1"], cfg.norm_eps), p["attn"],
+                     cfg, positions)
+    x = x + a
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    f = moe.moe_ffn(h, p["ffn"], cfg) if use_moe else layers.mlp(h, p["ffn"], cfg)
+    return x + f
+
+
+def dense_block_prefill(x, p, cfg: ModelConfig, positions, seq_cap: int,
+                        use_moe: bool = False):
+    a, kv = _attn_fwd_with_kv(layers.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                              p["attn"], cfg, positions)
+    x = x + a
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    f = moe.moe_ffn(h, p["ffn"], cfg) if use_moe else layers.mlp(h, p["ffn"], cfg)
+    x = x + f
+    if cfg.attn_type == "mla":
+        c_kv, k_rope = kv
+        s = c_kv.shape[1]
+        if seq_cap > s:
+            c_kv = jnp.pad(c_kv, [(0, 0), (0, seq_cap - s), (0, 0)])
+            k_rope = jnp.pad(k_rope, [(0, 0), (0, seq_cap - s), (0, 0)])
+        cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        cache = dec.prefill_kv(*kv, seq_cap)
+    return x, cache
+
+
+def dense_block_decode(x, p, cfg: ModelConfig, cache, pos,
+                       use_moe: bool = False):
+    h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, new_cache = mla.mla_decode(h, p["attn"], cfg, cache, pos)
+    else:
+        a, new_cache = dec.gqa_decode(h, p["attn"], cfg, cache, pos)
+    x = x + a
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    f = moe.moe_ffn(h, p["ffn"], cfg) if use_moe else layers.mlp(h, p["ffn"], cfg)
+    return x + f, new_cache
+
+
+def dense_cache_defs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    if cfg.attn_type == "mla":
+        return mla.mla_cache_defs(cfg, batch, seq)
+    return dec.gqa_cache_defs(cfg, batch, seq)
+
+
+# ---------------------------------------------------------------------------
+# SSM (Mamba-2)
+# ---------------------------------------------------------------------------
+
+def ssm_block_defs(cfg: ModelConfig) -> dict:
+    return {
+        "ln": layers.rmsnorm_defs(cfg.d_model),
+        "mixer": ssm.ssm_defs(cfg),
+    }
+
+
+def ssm_block(x, p, cfg: ModelConfig, positions=None):
+    h, _ = ssm.mamba2_forward(layers.rmsnorm(x, p["ln"], cfg.norm_eps),
+                              p["mixer"], cfg)
+    return x + h
+
+
+def ssm_block_prefill(x, p, cfg: ModelConfig, positions=None, seq_cap=None):
+    h, cache = ssm.mamba2_forward(layers.rmsnorm(x, p["ln"], cfg.norm_eps),
+                                  p["mixer"], cfg)
+    return x + h, cache
+
+
+def ssm_block_decode(x, p, cfg: ModelConfig, cache, pos=None):
+    h, new_cache = ssm.mamba2_decode(
+        layers.rmsnorm(x, p["ln"], cfg.norm_eps), p["mixer"], cfg, cache)
+    return x + h, new_cache
+
+
+def ssm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    return ssm.ssm_cache_defs(cfg, batch)

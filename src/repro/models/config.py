@@ -1,0 +1,171 @@
+"""Model configuration + parameter-definition machinery.
+
+One :class:`ModelConfig` describes any architecture in the assigned pool
+(dense GQA, MLA, MoE, Mamba-2 SSD, hybrid, encoder-only, VLM backbone).
+Parameters are declared as trees of :class:`PSpec` (shape + logical axis
+names + init); the same declaration drives
+
+* ``init_params``     — RNG initialisation at the right dtype,
+* ``logical_specs``   — the logical-axis tree consumed by
+  ``repro.distributed.sharding`` to build NamedShardings,
+* ``abstract_params`` — ShapeDtypeStructs for the dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    # attention
+    attn_type: str = "gqa"         # gqa | mla | none
+    rope_theta: float = 10000.0
+    rope_style: str = "standard"   # standard | 2d | mrope | none
+    qkv_bias: bool = False
+    causal: bool = True
+    # MLA (DeepSeek)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    # SSM (Mamba-2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2-style: shared attention block every k SSM blocks)
+    shared_attn_every: int = 0
+    # encoder / multimodal stubs
+    is_encoder: bool = False
+    frontend_dim: int = 0          # stub modality frontend embedding width
+    mtp_depth: int = 0             # DeepSeek-V3 multi-token prediction
+    # numerics / memory
+    sp_activations: bool = False   # sequence-shard the residual stream over
+                                   # 'model' (Megatron-SP): /16 activation
+                                   # saves at the cost of per-layer AG/RS
+    sharding_profile: str = "default"   # default | small_dp (see sharding.py)
+    attn_q_chunk_threshold: int = 8192  # q-chunk attention above this seq len
+    norm_eps: float = 1e-5
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"     # optimizer moment dtype (bf16 for dsv3)
+    remat: str = "full"            # none | full
+    scan_layers: bool = True
+    tie_embeddings: bool = False
+    # long-context capability flag (sub-quadratic serving path exists)
+    subquadratic: bool = False
+
+    @property
+    def q_per_kv(self) -> int:
+        return max(1, self.n_heads // max(self.n_kv_heads, 1))
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to 256 so the 'vocab' axis shards on any mesh
+        (50280, 65024, ... are not 16-divisible); logits over the padding
+        columns are masked to -inf in lm_head."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def dtype(self, which: str):
+        return jnp.dtype(getattr(self, which + "_dtype"))
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """Declares one parameter leaf: shape, logical axes, initialiser."""
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]   # logical names, len == len(shape)
+    init: str = "normal"           # normal | zeros | ones
+    scale: float | None = None     # normal stddev; default fan-in
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def stack_defs(defs: Any, n: int) -> Any:
+    """Prepend a ('layers', n) axis to every PSpec (for scanned stacks)."""
+    def one(p: PSpec) -> PSpec:
+        return PSpec(shape=(n,) + p.shape, axes=("layers",) + p.axes,
+                     init=p.init, scale=p.scale)
+    return jax.tree.map(one, defs,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def _init_leaf(p: PSpec, key, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "normal":
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = p.scale if p.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, p.shape)).astype(dtype)
+    raise ValueError(f"unknown init {p.init!r}")
+
+
+def init_params(defs: Any, key, dtype) -> Any:
+    """Materialise a PSpec tree into parameter arrays."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, PSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(p, k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs: Any, dtype) -> Any:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), defs,
+        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def logical_specs(defs: Any) -> Any:
+    """Tree of logical-axis tuples, mirroring the params tree."""
+    return jax.tree.map(lambda p: p.axes, defs,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def count_params(defs: Any) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, PSpec))
+    return int(sum(np.prod(p.shape) for p in leaves))

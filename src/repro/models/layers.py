@@ -1,0 +1,312 @@
+"""Core transformer layers: norms, RoPE variants, GQA attention, gated MLP.
+
+Everything is pure-JAX (einsum-based) with logical sharding constraints —
+the ten assigned architectures differ only in configuration.  Tensor
+parallelism follows the Megatron pattern expressed through logical axes:
+q/k/v/o projections shard over 'heads', the MLP over 'mlp', embeddings over
+'vocab'; XLA's SPMD partitioner inserts the corresponding collectives.
+
+Attention has two memory regimes:
+* full-score path for short sequences (train_4k),
+* an exact q-chunked path (scan over query blocks, row softmax against all
+  keys) for 32k prefill, bounding the live score block at
+  (B, H, q_chunk, S) — the pure-JAX analogue of FlashAttention's tiling,
+  chosen because XLA:TPU fuses the inner block well and the dry-run needs
+  an HLO-analysable path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig, PSpec
+
+# q-chunking kicks in above this sequence length
+Q_CHUNK_THRESHOLD = 8192
+Q_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_defs(d: int) -> dict:
+    return {"scale": PSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(x, params, eps: float):
+    # statistics in f32, but the normalisation multiply stays in x.dtype:
+    # a full f32 copy of x here would be hoisted out of the layer loop by
+    # XLA (convert of the whole saved residual stack -> +10 GB/device on
+    # qwen2.5-32b train; see EXPERIMENTS.md §Perf iteration 2)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard / partial "2d" / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _inv_freq(n: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, n, dtype=np.float32) / n))
+
+
+def rope_angles(positions, rot_dim: int, theta: float, mrope_sections=None):
+    """Angles (.., seq, rot_dim/2) for the given positions.
+
+    positions: (B, S) int32, or (3, B, S) for M-RoPE (t/h/w components).
+    """
+    half = rot_dim // 2
+    inv = jnp.asarray(_inv_freq(half, theta))          # (half,)
+    if mrope_sections is None:
+        return positions[..., None].astype(jnp.float32) * inv  # (B,S,half)
+    # M-RoPE: split the half-dim into sections, each driven by one
+    # position component (temporal / height / width).
+    assert positions.ndim == 3 and positions.shape[0] == len(mrope_sections)
+    parts = []
+    start = 0
+    for comp, sec in enumerate(mrope_sections):
+        inv_sec = inv[start:start + sec]
+        parts.append(positions[comp][..., None].astype(jnp.float32) * inv_sec)
+        start += sec
+    return jnp.concatenate(parts, axis=-1)             # (B,S,half)
+
+
+def apply_rope(x, angles):
+    """Rotate the first 2*angles.shape[-1] dims of the head vectors.
+
+    x: (B, S, H, D); angles: (B, S, half) with 2*half <= D (partial rotary
+    covers chatglm's '2d' RoPE where only half the head dims rotate).
+    """
+    half = angles.shape[-1]
+    rot, rest = x[..., : 2 * half], x[..., 2 * half:]
+    x1, x2 = rot[..., :half], rot[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1, r2, rest], axis=-1)
+
+
+def rope_for(cfg: ModelConfig, positions, head_dim: int | None = None):
+    """Config-dispatched angles; returns None for rope_style == 'none'."""
+    hd = head_dim if head_dim is not None else cfg.head_dim
+    if cfg.rope_style == "none":
+        return None
+    if cfg.rope_style == "standard":
+        return rope_angles(positions, hd, cfg.rope_theta)
+    if cfg.rope_style == "2d":
+        # chatglm: rotary on the first half of the head dims only
+        return rope_angles(positions, hd // 2, cfg.rope_theta)
+    if cfg.rope_style == "mrope":
+        half = hd // 2
+        # qwen2-vl sections (t, h, w) = (2/8, 3/8, 3/8) of the half dim
+        sec_t = half // 4
+        sec_h = (half - sec_t) // 2
+        sections = [sec_t + (half - sec_t - 2 * sec_h), sec_h, sec_h]
+        if positions.ndim == 2:      # text-only fallback: same pos for t/h/w
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return rope_angles(positions, hd, cfg.rope_theta,
+                           mrope_sections=sections)
+    raise ValueError(cfg.rope_style)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / output head
+# ---------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig) -> dict:
+    d = {"tok": PSpec((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                      scale=0.02)}
+    if cfg.frontend_dim:
+        d["frontend_proj"] = PSpec((cfg.frontend_dim, cfg.d_model),
+                                   ("frontend", "embed"))
+    return d
+
+
+def embed(tokens, params, cfg: ModelConfig):
+    out = jnp.take(params["tok"], tokens, axis=0).astype(cfg.dtype("compute"))
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def head_defs(cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"out": PSpec((cfg.d_model, cfg.vocab_padded), ("embed", "vocab"),
+                         scale=0.02)}
+
+
+def lm_head(x, params, embed_params, cfg: ModelConfig):
+    """Logits over the padded vocab; padding columns masked to -inf."""
+    if cfg.tie_embeddings:
+        w = embed_params["tok"].astype(cfg.dtype("compute")).T
+    else:
+        w = params["out"].astype(cfg.dtype("compute"))
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.vocab_padded != cfg.vocab_size:
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    defs = {
+        "wq": PSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = PSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        defs["bk"] = PSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        defs["bv"] = PSpec((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return defs
+
+
+def qkv_proj(x, params, cfg: ModelConfig, positions):
+    """Project + rope. Returns q (B,S,H,D), k/v (B,S,KV,D)."""
+    cd = cfg.dtype("compute")
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    angles = rope_for(cfg, positions)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _score_axes(n_kv_heads: int, group: int):
+    """How to shard the (B, KV, G, Sq, Sk) score tensor over 'model'.
+
+    Preference order: KV heads (plain head parallelism) > the GQA group
+    dim (q-head parallelism with replicated K/V — e.g. chatglm3's kv=2,
+    g=16, where forcing q-seq sharding made the partitioner fall back to
+    full 8 GiB score all-gathers in the backward; §Perf iteration 10) >
+    the q-sequence dim (context parallelism, e.g. qwen2.5's kv=8, g=5).
+    """
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return ("batch", "kv_heads", "qgroup", None, None)
+    m = mesh.shape["model"]
+    if n_kv_heads % m == 0:
+        return ("batch", "kv_heads", "qgroup", None, None)
+    if group % m == 0:
+        # 'heads' -> model applied to the group dim (q heads sharded)
+        return ("batch", None, "heads", None, None)
+    return ("batch", None, "qgroup", "attn_q_seq", None)
+
+
+def _sdpa_full(q, k, v, *, causal: bool, q_offset: int = 0):
+    """Grouped scores over the whole (q_len, kv_len) rectangle.
+
+    q: (B, Sq, KV, G, D); k/v: (B, Sk, KV, D). Returns (B, Sq, KV, G, D).
+    """
+    b, sq, kv, g, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    scores = constrain(scores, _score_axes(kv, g))
+    if causal:
+        qi = jnp.arange(sq) + q_offset
+        ki = jnp.arange(sk)
+        mask = qi[:, None] >= ki[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return constrain(out, ("batch", None, None, "heads", None))
+
+
+def sdpa(q, k, v, cfg: ModelConfig, *, causal: bool):
+    """Dispatch full vs q-chunked attention; GQA grouping handled here.
+
+    q: (B, S, H, D) -> out (B, S, H, D).
+    """
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    dv = v.shape[-1]           # may differ from d (MLA)
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+    threshold = min(Q_CHUNK_THRESHOLD, cfg.attn_q_chunk_threshold)
+    if s <= threshold:
+        out = _sdpa_full(qg, k, v, causal=causal)
+        return out.reshape(b, s, h, dv)
+    # q-chunked path; ragged tails (e.g. the MTP block's S-1) are padded
+    # on the q axis only and sliced off after
+    n_blocks = -(-s // Q_CHUNK)
+    s_pad = n_blocks * Q_CHUNK
+    qp = jnp.pad(qg, [(0, 0), (0, s_pad - s)] + [(0, 0)] * 3) \
+        if s_pad != s else qg
+
+    def block(carry, i):
+        qb = jax.lax.dynamic_slice_in_dim(qp, i * Q_CHUNK, Q_CHUNK, axis=1)
+        ob = _sdpa_full(qb, k, v, causal=causal, q_offset=i * Q_CHUNK)
+        return carry, ob
+
+    _, blocks = jax.lax.scan(block, None, jnp.arange(n_blocks))
+    # blocks: (n_blocks, B, Q_CHUNK, KV, G, DV)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(b, s_pad, kv, g, dv)[:, :s]
+    return out.reshape(b, s, h, dv)
+
+
+def attn_out(o, params, cfg: ModelConfig):
+    cd = cfg.dtype("compute")
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(cd))
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def attention(x, params, cfg: ModelConfig, positions):
+    """Full training/prefill attention (causal unless encoder)."""
+    q, k, v = qkv_proj(x, params, cfg, positions)
+    o = sdpa(q, k, v, cfg, causal=cfg.causal and not cfg.is_encoder)
+    o = constrain(o, ("batch", "seq", "heads", "head_dim"))
+    return attn_out(o, params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None,
+             mlp_axis: str = "mlp") -> dict:
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    return {
+        "wg": PSpec((d, ff), ("embed", mlp_axis)),
+        "wu": PSpec((d, ff), ("embed", mlp_axis)),
+        "wd": PSpec((ff, d), (mlp_axis, "embed")),
+    }
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp(x, params, cfg: ModelConfig, act: str = "silu"):
+    cd = cfg.dtype("compute")
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(cd))
+    u = jnp.einsum("bsd,df->bsf", x, params["wu"].astype(cd))
+    h = _act(act)(g) * u
+    h = constrain(h, ("batch", "seq", "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, params["wd"].astype(cd))
+    return constrain(out, ("batch", "seq", "embed"))

@@ -1,0 +1,149 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and keys/values are projected through low-rank latents; the decode
+cache stores only the compressed KV latent (kv_lora) plus the shared RoPE
+key — 576 floats per token for V3 instead of n_heads*head_dim*2 = 32768,
+a 57x cache compression.  Two evaluation paths:
+
+* train/prefill: expand k_nope/v from the latent and run standard MHA;
+* decode: the **absorbed** formulation — fold W_uk into the query and
+  W_uv into the output so attention runs directly in the 512-d latent
+  space against the compressed cache (never materialising per-head keys
+  for 32k cached tokens).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig, PSpec
+from repro.models import layers
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    vh, kvl, ql = cfg.v_head_dim, cfg.kv_lora_rank, cfg.q_lora_rank
+    defs = {
+        "wkv_a": PSpec((d, kvl + rope), ("embed", "kv_lora")),
+        "kv_norm": PSpec((kvl,), ("kv_lora",), init="ones"),
+        "wk_b": PSpec((kvl, h, nope), ("kv_lora", "heads", "head_dim")),
+        "wv_b": PSpec((kvl, h, vh), ("kv_lora", "heads", "head_dim")),
+        "wo": PSpec((h, vh, d), ("heads", "head_dim", "embed")),
+    }
+    if ql:
+        defs["wq_a"] = PSpec((d, ql), ("embed", "q_lora"))
+        defs["q_norm"] = PSpec((ql,), ("q_lora",), init="ones")
+        defs["wq_b"] = PSpec((ql, h, nope + rope),
+                             ("q_lora", "heads", "head_dim"))
+    else:
+        defs["wq"] = PSpec((d, h, nope + rope),
+                           ("embed", "heads", "head_dim"))
+    return defs
+
+
+def _q_proj(x, p, cfg: ModelConfig):
+    cd = cfg.dtype("compute")
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(cd))
+        cq = layers.rmsnorm(cq, {"scale": p["q_norm"]}, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    return q  # (B,S,H,nope+rope)
+
+
+def _kv_latent(x, p, cfg: ModelConfig, positions):
+    """Compressed latent + roped shared key. Returns (c_kv, k_rope)."""
+    cd = cfg.dtype("compute")
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(cd))
+    c_kv = kv_a[..., : cfg.kv_lora_rank]
+    k_rope = kv_a[..., cfg.kv_lora_rank:]
+    c_kv = layers.rmsnorm(c_kv, {"scale": p["kv_norm"]}, cfg.norm_eps)
+    angles = layers.rope_angles(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], angles)[:, :, 0, :]
+    c_kv = constrain(c_kv, ("batch", "seq", "kv_lora"))
+    return c_kv, k_rope
+
+
+def mla_attention(x, p, cfg: ModelConfig, positions):
+    """Training / prefill path (expanded MHA). Returns (out, (c_kv, k_rope))."""
+    cd = cfg.dtype("compute")
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = _q_proj(x, p, cfg)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    angles = layers.rope_angles(positions, rope, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, angles)
+
+    c_kv, k_rope = _kv_latent(x, p, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(cd))
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:-1] + (rope,))], axis=-1)
+    qf = constrain(qf, ("batch", "seq", "heads", "head_dim"))
+    kf = constrain(kf, ("batch", "seq", "heads", "head_dim"))
+    o = layers.sdpa(qf, kf, v, cfg, causal=cfg.causal)
+    o = constrain(o, ("batch", "seq", "heads", "head_dim"))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd))
+    return constrain(out, ("batch", "seq", "embed")), (c_kv, k_rope)
+
+
+def mla_decode(x, p, cfg: ModelConfig, cache, pos):
+    """Absorbed decode step.
+
+    x: (B, 1, d); cache: {"c_kv": (B, S, kvl), "k_rope": (B, S, rope)};
+    pos: scalar int32 — current write index (same for the whole batch).
+    Returns (out, new_cache).
+    """
+    cd = cfg.dtype("compute")
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    q = _q_proj(x, p, cfg)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    angles = layers.rope_angles(positions, rope, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, angles)       # (B,1,H,rope)
+
+    c_new, kr_new = _kv_latent(x, p, cfg, positions)  # (B,1,kvl), (B,1,rope)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    c_kv = constrain(c_kv, ("batch", "cache_seq", "kv_lora"))
+    k_rope = constrain(k_rope, ("batch", "cache_seq", None))
+
+    # absorb W_uk into the query: score in latent space
+    q_c = jnp.einsum("bqhn,rhn->bqhr", q_nope, p["wk_b"].astype(cd))
+    s_latent = jnp.einsum("bqhr,bsr->bhqs", q_c, c_kv.astype(cd))
+    s_rope = jnp.einsum("bqhn,bsn->bhqs", q_rope, k_rope.astype(cd))
+    scale = 1.0 / math.sqrt(nope + rope)
+    scores = (s_latent + s_rope).astype(jnp.float32) * scale
+    mask = jnp.arange(c_kv.shape[1]) <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    # softmax over the (model-sharded) cache axis: XLA lowers the row max /
+    # sum to tiny all-reduces = flash-decoding's LSE merge, for free
+    probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+    ctx_c = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv.astype(cd))
+    # absorb W_uv on the way out
+    ctx_v = jnp.einsum("bqhr,rhk->bqhk", ctx_c, p["wv_b"].astype(cd))
+    out = jnp.einsum("bqhk,hkd->bqd", ctx_v, p["wo"].astype(cd))
+    return constrain(out, ("batch", "seq", "embed")), \
+        {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_defs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Abstract cache layout (per layer) for init/dry-run."""
+    return {
+        "c_kv": (PSpec((batch, seq, cfg.kv_lora_rank),
+                       ("batch", "cache_seq", "kv_lora"), init="zeros")),
+        "k_rope": (PSpec((batch, seq, cfg.qk_rope_dim),
+                         ("batch", "cache_seq", None), init="zeros")),
+    }

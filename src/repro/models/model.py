@@ -1,0 +1,441 @@
+"""Model assembly: stages of scanned blocks + train/prefill/decode entries.
+
+A model is a sequence of *stages*; each stage is a stack of identical blocks
+executed with ``lax.scan`` over stacked parameters (keeping the HLO small —
+one block body per stage regardless of depth — which is what makes 61-layer
+dry-run compiles tractable).  Heterogeneous architectures decompose into
+homogeneous stages:
+
+  dense / encoder / vlm : [dense x L]
+  moe (deepseek)        : [dense x first_dense, moe x rest]
+  ssm (mamba2)          : [ssm x L]
+  hybrid (zamba2)       : [group(ssm x E -> shared attn) x G, ssm x rem]
+
+The zamba2 'shared attention' block has ONE set of weights applied after
+every E mamba blocks (weights closed over by the group scan body), but each
+invocation carries its own KV cache during serving.
+
+Outputs: ``forward`` (train logits), ``prefill`` (last-token logits +
+caches), ``decode_step`` (one token, updated caches).  Cross-entropy is
+evaluated in sequence chunks so the peak live logits tensor is
+(B, CE_CHUNK, vocab) rather than (B, S, vocab) — at qwen2.5's 152k vocab
+that is the difference between 1.2 GB and 40 MB per device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import (ModelConfig, PSpec, abstract_params,
+                                 init_params, logical_specs, stack_defs)
+from repro.models import blocks, layers
+
+CE_CHUNK = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class StageDesc:
+    name: str
+    kind: str        # dense | moe | ssm | hybrid
+    n_layers: int    # total layers in the stage (G*E for hybrid groups)
+    group: int = 0   # hybrid: blocks per group
+
+
+def _stages_for(cfg: ModelConfig) -> list[StageDesc]:
+    if cfg.family in ("dense", "encoder", "vlm"):
+        return [StageDesc("layers", "dense", cfg.n_layers)]
+    if cfg.family == "moe":
+        out = []
+        if cfg.first_dense_layers:
+            out.append(StageDesc("dense_layers", "dense",
+                                 cfg.first_dense_layers))
+        out.append(StageDesc("moe_layers", "moe",
+                             cfg.n_layers - cfg.first_dense_layers))
+        return out
+    if cfg.family == "ssm":
+        return [StageDesc("layers", "ssm", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        e = cfg.shared_attn_every
+        g = cfg.n_layers // e
+        rem = cfg.n_layers - g * e
+        out = [StageDesc("groups", "hybrid", g * e, group=e)]
+        if rem:
+            out.append(StageDesc("tail", "ssm", rem))
+        return out
+    raise ValueError(cfg.family)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stages = _stages_for(cfg)
+
+    # -- parameter declaration -------------------------------------------------
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        defs: dict[str, Any] = {"embed": layers.embed_defs(cfg)}
+        st: dict[str, Any] = {}
+        for s in self.stages:
+            if s.kind == "dense":
+                st[s.name] = stack_defs(blocks.dense_block_defs(cfg), s.n_layers)
+            elif s.kind == "moe":
+                st[s.name] = stack_defs(
+                    blocks.dense_block_defs(cfg, use_moe=True), s.n_layers)
+            elif s.kind == "ssm":
+                st[s.name] = stack_defs(blocks.ssm_block_defs(cfg), s.n_layers)
+            elif s.kind == "hybrid":
+                st[s.name] = stack_defs(blocks.ssm_block_defs(cfg), s.n_layers)
+        defs["stages"] = st
+        if cfg.family == "hybrid":
+            defs["shared_attn"] = blocks.dense_block_defs(cfg)
+        defs["final_norm"] = layers.rmsnorm_defs(cfg.d_model)
+        defs.update(layers.head_defs(cfg) and {"head": layers.head_defs(cfg)})
+        if cfg.mtp_depth:
+            defs["mtp"] = {
+                "proj": PSpec((2 * cfg.d_model, cfg.d_model),
+                              (None, "embed")),
+                "ln_h": layers.rmsnorm_defs(cfg.d_model),
+                "ln_e": layers.rmsnorm_defs(cfg.d_model),
+                "block": blocks.dense_block_defs(cfg),
+            }
+        return defs
+
+    def init(self, key, dtype=None):
+        dtype = dtype if dtype is not None else self.cfg.dtype("param")
+        return init_params(self.param_defs(), key, dtype)
+
+    def abstract(self, dtype=None):
+        dtype = dtype if dtype is not None else self.cfg.dtype("param")
+        return abstract_params(self.param_defs(), dtype)
+
+    def specs(self):
+        return logical_specs(self.param_defs())
+
+    # -- input embedding ---------------------------------------------------------
+    def embed_input(self, params, batch):
+        cfg = self.cfg
+        cd = cfg.dtype("compute")
+        if "frames" in batch:                     # audio stub frontend
+            x = jnp.einsum("btf,fd->btd", batch["frames"].astype(cd),
+                           params["embed"]["frontend_proj"].astype(cd))
+            b, s = x.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        elif "vision_embeds" in batch:            # VLM stub frontend
+            tok = layers.embed(batch["tokens"], params["embed"], cfg)
+            vis = jnp.einsum("bvf,fd->bvd", batch["vision_embeds"].astype(cd),
+                             params["embed"]["frontend_proj"].astype(cd))
+            nv = vis.shape[1]
+            x = jnp.concatenate([vis, tok[:, nv:]], axis=1)
+            positions = batch["positions"]        # (3, B, S) M-RoPE
+        else:
+            x = layers.embed(batch["tokens"], params["embed"], cfg)
+            b, s = x.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return constrain(x.astype(cd), ("batch", "seq", "embed")), positions
+
+    # -- stage execution ----------------------------------------------------------
+    def _block_fns(self, kind: str):
+        cfg = self.cfg
+        if kind == "dense":
+            return functools.partial(blocks.dense_block, cfg=cfg)
+        if kind == "moe":
+            return functools.partial(blocks.dense_block, cfg=cfg, use_moe=True)
+        if kind == "ssm":
+            return functools.partial(blocks.ssm_block, cfg=cfg)
+        raise ValueError(kind)
+
+    def _run_stage(self, desc: StageDesc, stacked, x, positions):
+        cfg = self.cfg
+        if desc.kind == "hybrid":
+            return self._run_hybrid(desc, stacked, x, positions)
+        fn = self._block_fns(desc.kind)
+
+        def body_fn(h, lp):
+            h = fn(h, lp, positions=positions)
+            if cfg.sp_activations:
+                # the scan saves this carry per layer for backward; shard
+                # its sequence dim over 'model' (Megatron-SP layout)
+                h = constrain(h, ("batch", "attn_q_seq", "embed"))
+            return h
+
+        if cfg.remat == "full":
+            body_fn = jax.checkpoint(body_fn)
+
+        def body(h, lp):
+            return body_fn(h, lp), None
+
+        x, _ = jax.lax.scan(body, x, stacked)
+        return x
+
+    def _run_hybrid(self, desc: StageDesc, stacked, x, positions,
+                    shared_params=None):
+        cfg = self.cfg
+        e = desc.group
+        g = desc.n_layers // e
+        grouped = jax.tree.map(
+            lambda a: a.reshape((g, e) + a.shape[1:]), stacked)
+        shared = shared_params if shared_params is not None else self._shared
+
+        def group_body_fn(h, gp):
+            def inner(hh, lp):
+                return blocks.ssm_block(hh, lp, cfg), None
+            h, _ = jax.lax.scan(inner, h, gp)
+            h = blocks.dense_block(h, shared, cfg, positions)
+            return h
+
+        if cfg.remat == "full":
+            group_body_fn = jax.checkpoint(group_body_fn)
+
+        def group_body(h, gp):
+            return group_body_fn(h, gp), None
+
+        x, _ = jax.lax.scan(group_body, x, grouped)
+        return x
+
+    # -- forward (train) ------------------------------------------------------------
+    def forward(self, params, batch, return_hidden: bool = False):
+        cfg = self.cfg
+        self._shared = params.get("shared_attn")
+        x, positions = self.embed_input(params, batch)
+        for desc in self.stages:
+            x = self._run_stage(desc, params["stages"][desc.name], x, positions)
+        x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if return_hidden:
+            return x
+        return layers.lm_head(x, params.get("head"), params["embed"], cfg)
+
+    # -- loss ------------------------------------------------------------------------
+    def _ce_chunked(self, hidden, params, labels, shift: int):
+        """Chunked cross-entropy: scan over sequence chunks.
+
+        shift=1: next-token LM. shift=0: same-position (encoder) prediction.
+        Returns mean CE over predicted positions.
+        """
+        cfg = self.cfg
+        b, s, d = hidden.shape
+        if shift:
+            hidden = hidden[:, :-shift]
+            labels = labels[:, shift:]
+        t = hidden.shape[1]
+        chunk = min(CE_CHUNK, t)
+        n = t // chunk
+        head = params.get("head")
+
+        def chunk_ce(hs, ls):
+            logits = layers.lm_head(hs, head, params["embed"], cfg)
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+            return jnp.sum(lse - gold)
+
+        # remat: backward recomputes each chunk's logits instead of saving
+        # (B, chunk, vocab) per chunk — the peak-memory win of chunked CE
+        chunk_ce = jax.checkpoint(chunk_ce)
+
+        def body(acc, i):
+            hs = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+            ls = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+            return acc + chunk_ce(hs, ls), None
+
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(n))
+        count = b * n * chunk
+        rem = t - n * chunk
+        if rem:  # tail (static)
+            total = total + chunk_ce(hidden[:, n * chunk:],
+                                     labels[:, n * chunk:])
+            count += b * rem
+        return total / count
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        hidden = self.forward(params, batch, return_hidden=True)
+        shift = 0 if cfg.is_encoder else 1
+        loss = self._ce_chunked(hidden, params, batch["labels"], shift)
+        metrics = {"ce": loss}
+        if cfg.mtp_depth and "tokens" in batch:
+            mp = params["mtp"]
+            cd = cfg.dtype("compute")
+            h = layers.rmsnorm(hidden[:, :-1], mp["ln_h"], cfg.norm_eps)
+            e = layers.embed(batch["tokens"][:, 1:], params["embed"], cfg)
+            e = layers.rmsnorm(e, mp["ln_e"], cfg.norm_eps)
+            x = jnp.einsum("bsd,dm->bsm", jnp.concatenate([h, e], axis=-1),
+                           mp["proj"].astype(cd))
+            b, s2 = x.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(s2, dtype=jnp.int32), (b, s2))
+            x = blocks.dense_block(x, mp["block"], cfg, positions)
+            mtp_loss = self._ce_chunked(x, params, batch["labels"][:, 1:], 1)
+            metrics["mtp"] = mtp_loss
+            loss = loss + 0.3 * mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # -- serving -----------------------------------------------------------------------
+    def cache_defs(self, batch: int, seq_cap: int) -> dict:
+        cfg = self.cfg
+        out: dict[str, Any] = {}
+        st: dict[str, Any] = {}
+        for s in self.stages:
+            if s.kind in ("dense", "moe"):
+                st[s.name] = stack_defs(
+                    blocks.dense_cache_defs(cfg, batch, seq_cap), s.n_layers)
+            elif s.kind == "ssm":
+                st[s.name] = stack_defs(
+                    blocks.ssm_cache_defs(cfg, batch), s.n_layers)
+            elif s.kind == "hybrid":
+                st[s.name] = stack_defs(
+                    blocks.ssm_cache_defs(cfg, batch), s.n_layers)
+        out["stages"] = st
+        if cfg.family == "hybrid":
+            g = self.stages[0].n_layers // self.stages[0].group
+            out["shared_attn"] = stack_defs(
+                blocks.dense_cache_defs(cfg, batch, seq_cap), g)
+        return out
+
+    def abstract_cache(self, batch: int, seq_cap: int):
+        return abstract_params(self.cache_defs(batch, seq_cap),
+                               self.cfg.dtype("compute"))
+
+    def cache_specs(self, batch: int, seq_cap: int):
+        return logical_specs(self.cache_defs(batch, seq_cap))
+
+    def init_cache(self, batch: int, seq_cap: int):
+        return init_params(self.cache_defs(batch, seq_cap),
+                           jax.random.key(0), self.cfg.dtype("compute"))
+
+    def prefill(self, params, batch, seq_cap: int):
+        """Full-sequence forward building caches. Returns (last_logits, cache)."""
+        cfg = self.cfg
+        self._shared = params.get("shared_attn")
+        x, positions = self.embed_input(params, batch)
+        caches: dict[str, Any] = {"stages": {}}
+        shared_caches = None
+        for desc in self.stages:
+            stacked = params["stages"][desc.name]
+            if desc.kind == "hybrid":
+                x, st_cache, shared_caches = self._prefill_hybrid(
+                    desc, stacked, x, positions, seq_cap)
+            else:
+                x, st_cache = self._prefill_stage(desc, stacked, x, positions,
+                                                  seq_cap)
+            caches["stages"][desc.name] = st_cache
+        if shared_caches is not None:
+            caches["shared_attn"] = shared_caches
+        x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = layers.lm_head(x[:, -1:], params.get("head"),
+                                params["embed"], cfg)
+        return logits[:, 0], caches
+
+    def _prefill_stage(self, desc, stacked, x, positions, seq_cap):
+        cfg = self.cfg
+        if desc.kind in ("dense", "moe"):
+            fn = functools.partial(blocks.dense_block_prefill, cfg=cfg,
+                                   positions=positions, seq_cap=seq_cap,
+                                   use_moe=desc.kind == "moe")
+        else:
+            fn = functools.partial(blocks.ssm_block_prefill, cfg=cfg)
+        if cfg.remat == "full":
+            fn = jax.checkpoint(fn)
+
+        def body(h, lp):
+            h, cache = fn(h, lp)
+            return h, cache
+
+        return jax.lax.scan(body, x, stacked)
+
+    def _prefill_hybrid(self, desc, stacked, x, positions, seq_cap):
+        cfg = self.cfg
+        e = desc.group
+        g = desc.n_layers // e
+        grouped = jax.tree.map(
+            lambda a: a.reshape((g, e) + a.shape[1:]), stacked)
+        shared = self._shared
+
+        def group_body(h, gp):
+            def inner(hh, lp):
+                return blocks.ssm_block_prefill(hh, lp, cfg)
+            h, ssm_caches = jax.lax.scan(inner, h, gp)
+            h, attn_cache = blocks.dense_block_prefill(
+                h, shared, cfg, positions, seq_cap)
+            return h, (ssm_caches, attn_cache)
+
+        if cfg.remat == "full":
+            group_body = jax.checkpoint(group_body)
+        x, (ssm_caches, attn_caches) = jax.lax.scan(group_body, x, grouped)
+        # ssm_caches: (G, E, ...) -> flatten to (G*E, ...)
+        ssm_caches = jax.tree.map(
+            lambda a: a.reshape((g * e,) + a.shape[2:]), ssm_caches)
+        return x, ssm_caches, attn_caches
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step. tokens: (B, 1) int32; pos: scalar int32.
+
+        Returns (logits (B, vocab), new_cache).
+        """
+        cfg = self.cfg
+        x = layers.embed(tokens, params["embed"], cfg)
+        new_caches: dict[str, Any] = {"stages": {}}
+        shared_new = None
+        for desc in self.stages:
+            stacked = params["stages"][desc.name]
+            st_cache = cache["stages"][desc.name]
+            if desc.kind == "hybrid":
+                x, new_st, shared_new = self._decode_hybrid(
+                    desc, stacked, x, st_cache, cache["shared_attn"],
+                    params["shared_attn"], pos)
+            else:
+                x, new_st = self._decode_stage(desc, stacked, x, st_cache, pos)
+            new_caches["stages"][desc.name] = new_st
+        if shared_new is not None:
+            new_caches["shared_attn"] = shared_new
+        x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = layers.lm_head(x, params.get("head"), params["embed"], cfg)
+        return logits[:, 0], new_caches
+
+    def _decode_stage(self, desc, stacked, x, st_cache, pos):
+        cfg = self.cfg
+        if desc.kind in ("dense", "moe"):
+            fn = functools.partial(blocks.dense_block_decode, cfg=cfg, pos=pos,
+                                   use_moe=desc.kind == "moe")
+        else:
+            fn = functools.partial(blocks.ssm_block_decode, cfg=cfg, pos=pos)
+
+        def body(h, inp):
+            lp, lc = inp
+            h, nc = fn(h, lp, cache=lc)
+            return h, nc
+
+        return jax.lax.scan(body, x, (stacked, st_cache))
+
+    def _decode_hybrid(self, desc, stacked, x, ssm_cache, attn_cache,
+                       shared, pos):
+        cfg = self.cfg
+        e = desc.group
+        g = desc.n_layers // e
+        grouped_p = jax.tree.map(
+            lambda a: a.reshape((g, e) + a.shape[1:]), stacked)
+        grouped_c = jax.tree.map(
+            lambda a: a.reshape((g, e) + a.shape[1:]), ssm_cache)
+
+        def group_body(h, inp):
+            gp, gc, ac = inp
+
+            def inner(hh, inp2):
+                lp, lc = inp2
+                hh, nc = blocks.ssm_block_decode(hh, lp, cfg, lc, pos)
+                return hh, nc
+
+            h, new_gc = jax.lax.scan(inner, h, (gp, gc))
+            h, new_ac = blocks.dense_block_decode(h, shared, cfg, ac, pos)
+            return h, (new_gc, new_ac)
+
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            group_body, x, (grouped_p, grouped_c, attn_cache))
+        new_ssm = jax.tree.map(
+            lambda a: a.reshape((g * e,) + a.shape[2:]), new_ssm)
+        return x, new_ssm, new_attn

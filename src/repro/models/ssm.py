@@ -1,0 +1,231 @@
+"""Mamba-2 (SSD — state-space duality) block, pure JAX.
+
+Implements the chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+within a chunk the recurrence is evaluated as a masked "attention" product
+(MXU-friendly), between chunks a tiny sequential scan carries the
+(H, P, N) state.  Decode is the O(1) recurrent step on the same state —
+this is what makes the `long_500k` shape tractable for the SSM/hybrid
+architectures (constant-size cache vs a 500k-token KV cache).
+
+Sharding: the inner width (d_inner = heads * head_dim) shards over 'mlp'
+(= model axis), so each shard owns a contiguous group of SSM heads; the
+state never crosses shards and the block needs no collectives beyond the
+in/out projections (Megatron-style).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig, PSpec
+from repro.models import layers
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    return {
+        "wz": PSpec((d, di), ("embed", "mlp")),
+        "wx": PSpec((d, di), ("embed", "mlp")),
+        "wB": PSpec((d, n), ("embed", "ssm_state")),
+        "wC": PSpec((d, n), ("embed", "ssm_state")),
+        "wdt": PSpec((d, h), ("embed", "ssm_heads")),
+        "conv_x": PSpec((w, di), ("conv", "mlp"), scale=0.5),
+        "conv_B": PSpec((w, n), ("conv", "ssm_state"), scale=0.5),
+        "conv_C": PSpec((w, n), ("conv", "ssm_state"), scale=0.5),
+        "A_log": PSpec((h,), ("ssm_heads",), init="zeros"),
+        "D": PSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": PSpec((h,), ("ssm_heads",), init="zeros"),
+        "gate_norm": PSpec((di,), ("mlp",), init="ones"),
+        "out": PSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(u, w, cache=None):
+    """Depthwise causal conv via shift-sum (width <= 8).
+
+    u: (B, L, C); w: (W, C). cache: (B, W-1, C) previous context or None.
+    Returns (y, new_cache) where new_cache is the last W-1 inputs.
+    """
+    width = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros(u.shape[:1] + (width - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = cache.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)       # (B, W-1+L, C)
+    y = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(width))
+    new_cache = full[:, -(width - 1):]
+    return jax.nn.silu(y), new_cache
+
+
+def _ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H) (post-softplus); a_log: (H,);
+    bmat/cmat: (B, L, N) (single group, broadcast over heads).
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    f32 = jnp.float32
+
+    a = -jnp.exp(a_log.astype(f32))                      # (H,) negative
+    da = dt.astype(f32) * a                              # (B,L,H) <= 0
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h).astype(f32)
+    dar = da.reshape(b, nc, chunk, h)
+    br = bmat.reshape(b, nc, chunk, n).astype(f32)
+    cr = cmat.reshape(b, nc, chunk, n).astype(f32)
+
+    cum = jnp.cumsum(dar, axis=2)                        # (B,nc,Q,H)
+    total = cum[:, :, -1]                                # (B,nc,H)
+
+    # ---- intra-chunk (quadratic, per chunk) ----
+    cb = jnp.einsum("bcqn,bckn->bcqk", cr, br)           # (B,nc,Q,Q)
+    # decay(q,k,h) = exp(cum_q - cum_k), causal-masked
+    decay = jnp.exp(jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :],
+                             -60.0, 0.0))                # (B,nc,Q,Q,H)
+    qi = jnp.arange(chunk)
+    causal = (qi[:, None] >= qi[None, :]).astype(f32)
+    scores = cb[..., None] * decay * causal[None, None, :, :, None]
+    scores = scores * dtr[:, :, None, :, :]              # fold in dt_k
+    # materialise the (B,nc,Q,Q,H) score tensor at compute precision: the
+    # f32 elementwise chain above fuses into this cast, halving the largest
+    # live buffer of the whole block (see EXPERIMENTS.md §Perf)
+    scores = scores.astype(x.dtype)
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xr)
+
+    # ---- chunk states ----
+    decay_end = jnp.exp(jnp.clip(total[:, :, None, :] - cum, -60.0, 0.0))
+    # S_c = sum_k B_k (decay to end) dt_k x_k : (B,nc,H,P,N)
+    s_chunk = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                         br, decay_end * dtr, xr.astype(f32))
+
+    # ---- inter-chunk recurrence ----
+    def step(s_prev, inp):
+        s_c, tot_c, c_c, cum_c = inp
+        y_off = jnp.einsum("bqn,bqh,bhpn->bqhp",
+                           c_c, jnp.exp(jnp.clip(cum_c, -60.0, 0.0)), s_prev)
+        s_next = s_prev * jnp.exp(jnp.clip(tot_c, -60.0, 0.0))[:, :, None, None] + s_c
+        return s_next, y_off
+
+    s0 = jnp.zeros((b, h, p, n), f32)
+    xs = (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0),
+          jnp.moveaxis(cr, 1, 0), jnp.moveaxis(cum, 1, 0))
+    s_final, y_off = jax.lax.scan(step, s0, xs)
+    y_off = jnp.moveaxis(y_off, 0, 1)                    # (B,nc,Q,H,P)
+
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y, s_final
+
+
+def mamba2_forward(x, p, cfg: ModelConfig, conv_cache=None, ssm_state=None):
+    """Full-sequence Mamba-2 block (train / prefill).
+
+    Returns (out (B,L,d), cache dict with final conv + SSM state).
+    """
+    cd = cfg.dtype("compute")
+    b, l, d = x.shape
+    h, pn, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = jnp.einsum("bld,de->ble", x, p["wz"].astype(cd))
+    xin = jnp.einsum("bld,de->ble", x, p["wx"].astype(cd))
+    bmat = jnp.einsum("bld,dn->bln", x, p["wB"].astype(cd))
+    cmat = jnp.einsum("bld,dn->bln", x, p["wC"].astype(cd))
+    dt = jnp.einsum("bld,dh->blh", x, p["wdt"].astype(cd))
+    xin = constrain(xin, ("batch", "seq", "mlp"))
+    z = constrain(z, ("batch", "seq", "mlp"))
+
+    xin, conv_x_new = _causal_conv(xin, p["conv_x"].astype(cd))
+    bmat, conv_b_new = _causal_conv(bmat, p["conv_B"].astype(cd))
+    cmat, conv_c_new = _causal_conv(cmat, p["conv_C"].astype(cd))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(b, l, h, pn)
+    # pad to a chunk multiple: padded steps get dt = 0 => decay exp(0) = 1
+    # and zero state contribution, so the final state is unaffected
+    chunk = cfg.ssm_chunk
+    lp_ = -(-l // chunk) * chunk
+    if lp_ != l:
+        padc = [(0, 0), (0, lp_ - l)]
+        xh_p = jnp.pad(xh, padc + [(0, 0), (0, 0)])
+        dt_p = jnp.pad(dt, padc + [(0, 0)])
+        b_p = jnp.pad(bmat, padc + [(0, 0)])
+        c_p = jnp.pad(cmat, padc + [(0, 0)])
+    else:
+        xh_p, dt_p, b_p, c_p = xh, dt, bmat, cmat
+    y, s_final = _ssd_chunked(xh_p, dt_p, p["A_log"], b_p, c_p, chunk)
+    y = y[:, :l] + p["D"].astype(cd)[None, None, :, None] * xh
+    y = y.reshape(b, l, h * pn)
+
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm(y, {"scale": p["gate_norm"]}, cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out"].astype(cd))
+    out = constrain(out, ("batch", "seq", "embed"))
+    cache = {
+        "conv_x": conv_x_new, "conv_B": conv_b_new, "conv_C": conv_c_new,
+        "state": s_final.astype(cd),
+    }
+    return out, cache
+
+
+def mamba2_decode(x, p, cfg: ModelConfig, cache):
+    """O(1) recurrent decode step. x: (B, 1, d). Returns (out, new_cache)."""
+    cd = cfg.dtype("compute")
+    b = x.shape[0]
+    h, pn, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = jnp.einsum("bld,de->ble", x, p["wz"].astype(cd))
+    xin = jnp.einsum("bld,de->ble", x, p["wx"].astype(cd))
+    bmat = jnp.einsum("bld,dn->bln", x, p["wB"].astype(cd))
+    cmat = jnp.einsum("bld,dn->bln", x, p["wC"].astype(cd))
+    dt = jnp.einsum("bld,dh->blh", x, p["wdt"].astype(cd))
+
+    xin, cx = _causal_conv(xin, p["conv_x"].astype(cd), cache["conv_x"])
+    bmat, cb = _causal_conv(bmat, p["conv_B"].astype(cd), cache["conv_B"])
+    cmat, cc = _causal_conv(cmat, p["conv_C"].astype(cd), cache["conv_C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,1,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[:, 0] * a)                                 # (B,H)
+
+    xh = xin.reshape(b, h, pn).astype(jnp.float32)
+    state = cache["state"].astype(jnp.float32)                 # (B,H,P,N)
+    contrib = jnp.einsum("bhp,bn,bh->bhpn", xh, bmat[:, 0].astype(jnp.float32),
+                         dt[:, 0])
+    state = state * da[:, :, None, None] + contrib
+    y = jnp.einsum("bhpn,bn->bhp", state, cmat[:, 0].astype(jnp.float32))
+    y = y.astype(cd) + p["D"].astype(cd)[None, :, None] * xh.astype(cd)
+    y = y.reshape(b, 1, h * pn)
+
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm(y, {"scale": p["gate_norm"]}, cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out"].astype(cd))
+    new_cache = {"conv_x": cx, "conv_B": cb, "conv_C": cc,
+                 "state": state.astype(cd)}
+    return out, new_cache
+
+
+def ssm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    """Abstract decode-cache layout (per layer)."""
+    w = cfg.ssm_conv_width
+    return {
+        "conv_x": PSpec((batch, w - 1, cfg.ssm_d_inner),
+                        ("batch", None, "mlp"), init="zeros"),
+        "conv_B": PSpec((batch, w - 1, cfg.ssm_state),
+                        ("batch", None, "ssm_state"), init="zeros"),
+        "conv_C": PSpec((batch, w - 1, cfg.ssm_state),
+                        ("batch", None, "ssm_state"), init="zeros"),
+        "state": PSpec((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state),
+                       ("batch", "ssm_heads", None, None), init="zeros"),
+    }

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw,
+                                    make_optimizer, opt_state_specs)
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer",
+           "opt_state_specs", "warmup_cosine", "constant"]

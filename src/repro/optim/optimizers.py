@@ -1,0 +1,174 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Both expose:
+  init(params)            -> opt state (pytree)
+  update(grads, state, params, step) -> (new_params, new_state)
+plus the module-level :func:`opt_state_specs`, which derives the logical
+sharding axes of the optimizer state from (abstract params, param axes) so
+the dry-run shards optimizer memory along the same mesh axes as the
+parameters (ZeRO-style; there is no replicated copy anywhere).
+
+Adafactor (Shazeer & Stern 2018) keeps factored second moments — O(n+m)
+per (n, m) matrix instead of O(n*m) — which is what lets deepseek-v3-671b's
+optimizer state fit 512 x 16 GB chips (AdamW f32 moments would need ~5.4 TB
+for the MoE weights alone; see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    kind: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], tuple[Any, Any]]
+
+
+def _schedule_fn(lr):
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype=jnp.float32) -> Optimizer:
+    sched = _schedule_fn(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+        c1 = 1.0 - jnp.power(b1, stepf)
+        c2 = 1.0 - jnp.power(b2, stepf)
+
+        def one(g, mu, nu, p):
+            gf = g.astype(moment_dtype)
+            mu = b1 * mu + (1 - b1) * gf
+            nu = b2 * nu + (1 - b2) * jnp.square(gf)
+            mu_hat = mu.astype(jnp.float32) / c1
+            nu_hat = nu.astype(jnp.float32) / c2
+            upd = mu_hat / (jnp.sqrt(nu_hat) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr_t * upd
+            return new_p.astype(p.dtype), mu, nu
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [one(g, m, n, p)
+               for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        new_nu = treedef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu}
+
+    return Optimizer(kind="adamw", init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, no first moment by default)
+# ---------------------------------------------------------------------------
+
+def _axes_leaf(x):
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+def adafactor(lr, *, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    sched = _schedule_fn(lr)
+
+    def _factored(shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(one, params)
+
+    def update(grads, state, params, step):
+        stepf = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+        beta = 1.0 - jnp.power(stepf, -decay)   # increasing decay schedule
+
+        def one(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(vr, axis=-1, keepdims=True)
+                precond = (vr / jnp.maximum(row_mean, eps))[..., None] * \
+                    jnp.expand_dims(vc, -2)
+                upd = gf / jnp.sqrt(jnp.maximum(precond, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = gf / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = p.astype(jnp.float32) - lr_t * (
+                upd + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        out = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    return Optimizer(kind="adafactor", init=init, update=update)
+
+
+def opt_state_specs(kind: str, abstract_params, param_specs,
+                    min_dim_size_to_factor: int = 128):
+    """Logical-axes tree for the optimizer state of `kind`.
+
+    Needs abstract params because Adafactor's factorisation depends on leaf
+    shapes, not just axes.
+    """
+    leaves, treedef = jax.tree.flatten(abstract_params)
+    axes_leaves = treedef.flatten_up_to(param_specs)
+
+    if kind == "adamw":
+        mu = treedef.unflatten(list(axes_leaves))
+        nu = treedef.unflatten(list(axes_leaves))
+        return {"mu": mu, "nu": nu}
+    if kind == "adafactor":
+        def one(p, axes):
+            if (len(p.shape) >= 2 and p.shape[-1] >= min_dim_size_to_factor
+                    and p.shape[-2] >= min_dim_size_to_factor):
+                return {"vr": tuple(axes[:-1]), "vc": tuple(axes[:-2]) + (axes[-1],)}
+            return {"v": tuple(axes)}
+        out = [one(p, a) for p, a in zip(leaves, axes_leaves)]
+        return treedef.unflatten(out)
+    raise ValueError(kind)
+
+
+def make_optimizer(kind: str, lr, **kw) -> Optimizer:
+    if kind == "adamw":
+        return adamw(lr, **kw)
+    if kind == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(kind)

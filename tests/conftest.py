@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests must see ONE cpu device (the dry-run sets its own 512-device flag
+# in a separate process); never inherit a stray XLA_FLAGS
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

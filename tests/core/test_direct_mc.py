@@ -1,0 +1,82 @@
+"""Direct-MC engine: accuracy vs analytic, chunking invariance, merging."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (IntegrandFamily, abs_sum_family, family_sums,
+                        finalize, gaussian_family, harmonic_analytic,
+                        harmonic_family, merge_sums)
+from repro.core import rng
+
+KEY = rng.fold_key(42, 0)
+
+
+def test_harmonic_vs_analytic():
+    fam = harmonic_family(20, 4)
+    res = finalize(fam, family_sums(fam, 200_000, KEY))
+    exact = harmonic_analytic(20, 4)
+    pulls = np.abs(np.asarray(res.mean) - exact) / np.asarray(res.stderr)
+    assert np.all(pulls < 5.0), pulls
+
+
+def test_abs_sum_eq2_families():
+    """The paper's Eq.(2): numeric quadrature oracle."""
+    # |x1 + x2| on [0,1]^2 == x1 + x2 -> integral = 1
+    f2 = abs_sum_family(3, 2, [1.0, 2.0, 0.5])
+    r2 = finalize(f2, family_sums(f2, 100_000, KEY))
+    np.testing.assert_allclose(np.asarray(r2.mean),
+                               np.array([1.0, 2.0, 0.5]), atol=0.01)
+    # |x1 + x2 - x3| on [0,1]^3: dense-grid oracle
+    g = np.linspace(0, 1, 201)
+    xs, ys, zs = np.meshgrid(g, g, g, indexing="ij")
+    oracle = np.trapezoid(np.trapezoid(np.trapezoid(
+        np.abs(xs + ys - zs), g, axis=2), g, axis=1), g, axis=0)
+    f3 = abs_sum_family(2, 3, [1.0, 3.0], sign_last=-1.0)
+    r3 = finalize(f3, family_sums(f3, 200_000, KEY))
+    np.testing.assert_allclose(np.asarray(r3.mean),
+                               oracle * np.array([1.0, 3.0]), atol=0.02)
+
+
+def test_chunk_size_invariance():
+    """Same counters regardless of chunking -> near-identical sums."""
+    fam = harmonic_family(5, 3)
+    a = family_sums(fam, 30_000, KEY, chunk=1024)
+    b = family_sums(fam, 30_000, KEY, chunk=7000)
+    np.testing.assert_allclose(np.asarray(a.s1), np.asarray(b.s1),
+                               rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(a.s2), np.asarray(b.s2), rtol=2e-4)
+
+
+def test_fn_chunk_matches_unblocked():
+    fam = gaussian_family(10, 3)
+    a = family_sums(fam, 20_000, KEY)
+    b = family_sums(fam, 20_000, KEY, fn_chunk=4)
+    np.testing.assert_allclose(np.asarray(a.s1), np.asarray(b.s1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.s2), np.asarray(b.s2), rtol=1e-5)
+
+
+def test_merge_equals_single_run():
+    """[0,N) == [0,N/2) + [N/2,N): counter-addressed restartability."""
+    fam = harmonic_family(4, 2)
+    whole = family_sums(fam, 40_000, KEY)
+    h1 = family_sums(fam, 20_000, KEY, sample_offset=0)
+    h2 = family_sums(fam, 20_000, KEY, sample_offset=20_000)
+    merged = merge_sums(h1, h2)
+    np.testing.assert_allclose(np.asarray(whole.s1), np.asarray(merged.s1),
+                               rtol=1e-5, atol=1e-4)
+    assert float(merged.n) == float(whole.n)
+
+
+def test_sample_offset_disjoint():
+    fam = harmonic_family(2, 2)
+    a = family_sums(fam, 10_000, KEY, sample_offset=0)
+    b = family_sums(fam, 10_000, KEY, sample_offset=10_000)
+    assert not np.allclose(np.asarray(a.s1), np.asarray(b.s1))
+
+
+def test_stderr_scaling():
+    fam = harmonic_family(8, 4)
+    r1 = finalize(fam, family_sums(fam, 20_000, KEY))
+    r2 = finalize(fam, family_sums(fam, 80_000, KEY))
+    ratio = np.asarray(r1.stderr) / np.asarray(r2.stderr)
+    assert np.all(ratio > 1.6) and np.all(ratio < 2.6), ratio

@@ -1,0 +1,48 @@
+"""Genz suite: every family's estimate matches its closed form."""
+
+import numpy as np
+import pytest
+
+from repro.core import family_sums, finalize, rng
+from repro.core import genz
+
+KEY = rng.fold_key(7, 0)
+
+
+@pytest.mark.parametrize("name", sorted(genz.ALL))
+def test_family_vs_closed_form(name):
+    dim = 3 if name == "corner_peak" else 4
+    fam, exact = genz.ALL[name](6, dim)
+    res = finalize(fam, family_sums(fam, 100_000, KEY))
+    pulls = np.abs(np.asarray(res.mean) - exact) / \
+        np.maximum(np.asarray(res.stderr), 1e-12)
+    assert np.all(pulls < 5.0), (name, pulls)
+
+
+def test_params_reproducible():
+    f1, e1 = genz.oscillatory(4, 3, seed=9)
+    f2, e2 = genz.oscillatory(4, 3, seed=9)
+    np.testing.assert_array_equal(np.asarray(f1.params["a"]),
+                                  np.asarray(f2.params["a"]))
+    np.testing.assert_array_equal(e1, e2)
+    f3, _ = genz.oscillatory(4, 3, seed=10)
+    assert not np.allclose(np.asarray(f1.params["a"]),
+                           np.asarray(f3.params["a"]))
+
+
+def test_corner_peak_d1_closed_form():
+    """d=1 sanity: int (1+ax)^-2 = 1/(1+a)."""
+    fam, exact = genz.corner_peak(3, 1)
+    a = np.asarray(fam.params["a"])[:, 0]
+    np.testing.assert_allclose(exact, 1.0 / (1.0 + a), rtol=1e-5)
+
+
+def test_rqmc_gains_on_smooth_families():
+    from repro.core import ZMCMultiFunctions
+    fam, _ = genz.gaussian_peak(4, 3)
+    r_mc = ZMCMultiFunctions([fam], n_samples=16384, seed=1,
+                             sampler="mc").evaluate(num_trials=3)
+    r_q = ZMCMultiFunctions([fam], n_samples=16384, seed=1,
+                            sampler="sobol").evaluate(num_trials=3)
+    gain = np.median(r_mc.trial_std) / max(np.median(r_q.trial_std), 1e-15)
+    assert gain > 3.0, gain

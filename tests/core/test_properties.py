@@ -1,0 +1,131 @@
+"""Hypothesis property tests on the MC engine's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import IntegrandFamily, family_sums, finalize, merge_sums
+from repro.core import rng
+from repro.core.domains import affine_from_unit, box_volume, compactify
+from repro.core.reduction import (Moments, kahan_add, kahan_zero,
+                                  moments_combine, moments_from_sums,
+                                  pairwise_sum)
+
+KEY = rng.fold_key(23, 0)
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _poly_family(coeffs, dim, lo, hi):
+    n = len(coeffs)
+    dom = np.broadcast_to(np.asarray([lo, hi], np.float32),
+                          (n, dim, 2)).copy()
+    return IntegrandFamily(
+        fn=lambda x, p: p["c"] * jnp.sum(x, -1) + p["c"] ** 2,
+        params={"c": jnp.asarray(np.asarray(coeffs, np.float32))},
+        domains=jnp.asarray(dom), name="poly").validate()
+
+
+@settings(**SETTINGS)
+@given(st.floats(-3, 3), st.floats(-3, 3),
+       st.integers(1, 4), st.integers(1, 3))
+def test_linearity_in_integrand_scale(a, b, dim, n_fn):
+    """sums of (a*f) == a * sums of f (same counters, exact fp scaling
+    within tolerance)."""
+    fam1 = _poly_family([1.0] * n_fn, dim, 0.0, 1.0)
+    fam_a = IntegrandFamily(
+        fn=lambda x, p, a=a, b=b: a * fam1.fn(x, p) + b,
+        params=fam1.params, domains=fam1.domains, name="lin").validate()
+    s1 = family_sums(fam1, 4096, KEY, chunk=2048)
+    sa = family_sums(fam_a, 4096, KEY, chunk=2048)
+    np.testing.assert_allclose(np.asarray(sa.s1),
+                               a * np.asarray(s1.s1) + b * 4096,
+                               rtol=1e-4, atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(st.floats(-5, 2), st.floats(0.1, 7), st.integers(1, 3))
+def test_affine_domain_invariance(lo, width, dim):
+    """I over [lo,hi] == vol * mean; estimates transform affinely."""
+    hi = lo + width
+    fam = _poly_family([1.0, -0.5], dim, lo, hi)
+    res = finalize(fam, family_sums(fam, 32_768, KEY, chunk=4096))
+    # analytic: int (c*sum(x) + c^2) = vol*(c*dim*(lo+hi)/2 + c^2)
+    vol = width ** dim
+    for i, c in enumerate([1.0, -0.5]):
+        exact = vol * (c * dim * (lo + hi) / 2 + c * c)
+        err = abs(float(res.mean[i]) - exact)
+        tol = 5 * float(res.stderr[i]) + 1e-3 * max(1.0, abs(exact))
+        assert err < tol, (lo, width, dim, c, err, tol)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 6))
+def test_volume_positive(dim):
+    dom = np.zeros((3, dim, 2), np.float32)
+    dom[..., 1] = np.arange(1, dim + 1, dtype=np.float32)
+    v = np.asarray(box_volume(jnp.asarray(dom)))
+    assert np.all(v > 0)
+    np.testing.assert_allclose(v, np.prod(np.arange(1, dim + 1)), rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(100, 5000), min_size=2, max_size=5))
+def test_merge_associativity(chunks):
+    """Any partition of the sample range merges to the same sums."""
+    fam = _poly_family([2.0], 2, 0.0, 1.0)
+    total = sum(chunks)
+    whole = family_sums(fam, total, KEY, chunk=8192)
+    parts = []
+    off = 0
+    for c in chunks:
+        parts.append(family_sums(fam, c, KEY, sample_offset=off, chunk=8192))
+        off += c
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = merge_sums(acc, p)
+    np.testing.assert_allclose(np.asarray(acc.s1), np.asarray(whole.s1),
+                               rtol=1e-4, atol=1e-2)
+    assert float(acc.n) == float(whole.n)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 200), st.integers(2, 200))
+def test_moments_combine_matches_direct(n1, n2):
+    rng_np = np.random.default_rng(n1 * 1000 + n2)
+    x = rng_np.standard_normal(n1 + n2).astype(np.float32) * 3 + 1
+    a, b = x[:n1], x[n1:]
+
+    def mom(v):
+        return Moments(count=jnp.float32(len(v)),
+                       mean=jnp.float32(v.mean()),
+                       m2=jnp.float32(((v - v.mean()) ** 2).sum()))
+
+    m = moments_combine(mom(a), mom(b))
+    assert abs(float(m.mean) - x.mean()) < 1e-4
+    np.testing.assert_allclose(float(m.m2), ((x - x.mean()) ** 2).sum(),
+                               rtol=1e-4)
+
+
+def test_kahan_beats_naive():
+    vals = np.array([1e8] + [0.1] * 10000, np.float32)
+    naive = np.float32(0)
+    acc = kahan_zero(())
+    for v in vals:
+        naive = np.float32(naive + np.float32(v))
+        acc = kahan_add(acc, jnp.float32(v))
+    exact = 1e8 + 0.1 * 10000
+    assert abs(float(acc.total) - exact) < abs(float(naive) - exact)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 64))
+def test_pairwise_sum_matches(n):
+    x = np.random.default_rng(n).standard_normal(n).astype(np.float32)
+    np.testing.assert_allclose(float(pairwise_sum(jnp.asarray(x))),
+                               x.sum(dtype=np.float64), rtol=1e-5, atol=1e-5)
+
+
+def test_compactify_produces_finite_box():
+    dom = np.array([[[0.0, np.inf]], [[-np.inf, np.inf]]], np.float64)
+    fn2, new_dom, aux = compactify(lambda x, p: jnp.sum(x, -1), dom)
+    assert np.all(np.isfinite(np.asarray(new_dom)))

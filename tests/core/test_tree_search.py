@@ -1,0 +1,62 @@
+"""Stratified sampling + heuristic tree search."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rng, tree_search
+from repro.core.stratified import (StratumTable, initial_grid,
+                                   stratum_volumes, table_estimate)
+
+KEY = rng.fold_key(17, 0)
+
+
+def _peaked(x):
+    # sharp bump in one corner: adaptive refinement should win here
+    return jnp.exp(-50.0 * jnp.sum(jnp.square(x - 0.9), axis=-1))
+
+
+def test_initial_grid_partition():
+    t = initial_grid(np.array([[0, 1], [0, 2]], np.float32), 3, capacity=16)
+    vols = np.asarray(stratum_volumes(t))
+    act = np.asarray(t.active)
+    assert act.sum() == 9
+    np.testing.assert_allclose(vols[act].sum(), 2.0, rtol=1e-6)
+
+
+def test_tree_search_converges():
+    res = tree_search.integrate(_peaked, [[0, 1], [0, 1]], KEY,
+                                splits_per_dim=4, n_per=512, depth=6,
+                                k_split=8)
+    # exact: product of 1-d gaussians integrals
+    from math import erf, pi, sqrt
+    one_d = sqrt(pi / 50) / 2 * (erf(sqrt(50) * 0.9) + erf(sqrt(50) * 0.1))
+    exact = one_d ** 2
+    assert abs(float(res.integral) - exact) < 4 * float(res.stderr) + 1e-3
+
+
+def test_refinement_reduces_stderr():
+    shallow = tree_search.integrate(_peaked, [[0, 1], [0, 1]], KEY,
+                                    splits_per_dim=4, n_per=512, depth=0,
+                                    k_split=8)
+    deep = tree_search.integrate(_peaked, [[0, 1], [0, 1]], KEY,
+                                 splits_per_dim=4, n_per=512, depth=8,
+                                 k_split=8)
+    assert float(deep.stderr) < float(shallow.stderr)
+
+
+def test_splits_preserve_volume():
+    res = tree_search.integrate(_peaked, [[0, 1], [0, 1]], KEY,
+                                splits_per_dim=4, n_per=256, depth=5,
+                                k_split=4)
+    t = res.table
+    vols = np.asarray(stratum_volumes(t))
+    act = np.asarray(t.active)
+    np.testing.assert_allclose(vols[act].sum(), 1.0, rtol=1e-5)
+
+
+def test_capacity_bound_respected():
+    res = tree_search.integrate(_peaked, [[0, 1], [0, 1]], KEY,
+                                splits_per_dim=4, n_per=128, depth=3,
+                                k_split=4)
+    assert res.table.capacity == 16 + 3 * 4
+    assert int(np.asarray(res.table.active).sum()) == 16 + 3 * 4

@@ -1,0 +1,61 @@
+"""8-fake-device program: multi-axis-mesh training + elastic resume.
+
+1. Train a reduced model 6 steps on a (2,2,2) pod mesh with checkpoints.
+2. Restore the checkpoint onto a (4,2) mesh and onto a 1-device path and
+   verify the next-step loss matches bit-for-bit-ish (same data stream).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                                "src"))
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.launch.train import (TrainHParams, train_loop)
+
+cfg = reduced(get_config("stablelm_3b"))
+hp_kwargs = {}
+
+tmp = tempfile.mkdtemp()
+mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+state, losses, _ = train_loop(cfg, __import__("dataclasses").replace(
+    TrainHParams(), total_steps=6, warmup_steps=1, grad_accum=2),
+    batch=8, seq=32, steps=6, mesh=mesh3, ckpt_dir=tmp, ckpt_every=3,
+    log_every=100)
+
+# resume on a DIFFERENT mesh from step 6 and keep training
+mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+state2, losses2, _ = train_loop(cfg, __import__("dataclasses").replace(
+    TrainHParams(), total_steps=8, warmup_steps=1, grad_accum=2),
+    batch=8, seq=32, steps=8, mesh=mesh2, ckpt_dir=tmp, ckpt_every=100,
+    log_every=100)
+assert len(losses2) == 2, len(losses2)   # resumed from step 6
+
+# exactness of the restore itself: restored params == checkpointed params
+from repro.distributed import checkpoint as ckpt
+from repro.launch.train import abstract_train_state, train_state_specs
+from repro.distributed.sharding import tree_shardings
+from repro.models.model import Model
+import jax as _jax
+
+model = Model(cfg)
+hp = __import__("dataclasses").replace(TrainHParams(), total_steps=8,
+                                       warmup_steps=1, grad_accum=2)
+abstract = abstract_train_state(model, hp)
+re1, _ = ckpt.restore(tmp, 6, abstract)                       # host arrays
+sh2 = tree_shardings(abstract, train_state_specs(model, hp), mesh2)
+re2, _ = ckpt.restore(tmp, 6, abstract, shardings=sh2)        # on mesh2
+for a, b in zip(_jax.tree.leaves(re1), _jax.tree.leaves(re2)):
+    np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+
+# uninterrupted single-mesh oracle: trajectories agree to cross-mesh
+# reduction-order noise (steps 0..5 ran on a different mesh)
+state3, losses3, _ = train_loop(cfg, hp, batch=8, seq=32, steps=8,
+                                mesh=mesh2, ckpt_dir=None, log_every=100)
+np.testing.assert_allclose(losses2[-1], losses3[-1], rtol=2e-2)
+print("PROG_OK")

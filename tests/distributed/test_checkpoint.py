@@ -1,0 +1,68 @@
+"""Checkpointing: roundtrip, async writer, GC, latest_step."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (4, 8)),
+                   "b": jnp.zeros((8,), jnp.bfloat16)},
+        "opt": {"mu": {"w": jnp.ones((4, 8))}},
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t, extra={"data_step": 3})
+    restored, manifest = ckpt.restore(str(tmp_path), 7, t)
+    assert manifest["extra"]["data_step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step(tmp_path):
+    assert ckpt.latest_step(str(tmp_path)) is None
+    for s in (5, 10, 20):
+        ckpt.save(str(tmp_path), s, _tree())
+    assert ckpt.latest_step(str(tmp_path)) == 20
+
+
+def test_missing_leaf_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        ckpt.restore(str(tmp_path), 1, {"b": jnp.zeros(3)})
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros(4)})
+
+
+def test_async_writer_and_gc(tmp_path):
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        w.save(s, _tree(s))
+    w.close()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_3", "step_4"]
+    restored, _ = ckpt.restore(str(tmp_path), 4, _tree())
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(_tree(4)["params"]["w"]))
+
+
+def test_no_tmp_dirs_left(tmp_path):
+    ckpt.save(str(tmp_path), 3, _tree())
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))

@@ -1,0 +1,73 @@
+"""Watchdog + restart driver."""
+
+import time
+
+import pytest
+
+from repro.distributed.fault_tolerance import (StepWatchdog, WorkQueue,
+                                               run_with_restarts)
+
+
+def test_watchdog_flags_straggler():
+    wd = StepWatchdog(threshold=5.0, warmup=3)
+    for _ in range(6):
+        with wd:
+            time.sleep(0.01)
+    with wd:
+        time.sleep(0.2)   # 20x the median
+    assert wd.straggler_count == 1
+    ev = wd.events[0]
+    assert ev.duration > 5 * ev.median
+
+
+def test_watchdog_quiet_on_uniform_steps():
+    wd = StepWatchdog(threshold=3.0, warmup=2)
+    for _ in range(10):
+        with wd:
+            time.sleep(0.005)
+    assert wd.straggler_count == 0
+
+
+def test_run_with_restarts_recovers():
+    calls = []
+
+    def body(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise RuntimeError("boom")
+        return "done"
+
+    restarts = []
+    out = run_with_restarts(body, max_restarts=3,
+                            on_restart=lambda a, e: restarts.append(a))
+    assert out == "done"
+    assert calls == [0, 1, 2]
+    assert restarts == [0, 1]
+
+
+def test_run_with_restarts_exhausts():
+    def body(attempt):
+        raise ValueError("always")
+    with pytest.raises(ValueError):
+        run_with_restarts(body, max_restarts=2)
+
+
+def test_work_queue_all_chunks_covered_after_failures():
+    q = WorkQueue(total_samples=1000, chunk=128)
+    done = []
+    fail_next = True
+    while not q.finished:
+        item = q.take()
+        if item is None:
+            break
+        t, c = item
+        if fail_next:
+            q.fail(t)
+            fail_next = False
+        else:
+            q.complete(t)
+            done.append(c)
+            fail_next = True
+    starts = sorted(s for s, _ in done)
+    assert starts == [0, 128, 256, 384, 512, 640, 768, 896]
+    assert sum(n for _, n in done) == 1000

@@ -1,0 +1,39 @@
+"""Multi-device semantics via subprocess (8 forced host devices).
+
+Each prog_*.py asserts internally and prints PROG_OK; running them in
+subprocesses keeps this pytest process on 1 device.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+PROG_DIR = os.path.join(os.path.dirname(__file__), "progs")
+
+
+def _run(prog: str, timeout: int = 420):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, os.path.join(PROG_DIR, prog)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"{prog} failed:\n{out.stdout}\n{out.stderr}"
+    assert "PROG_OK" in out.stdout, out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_mc_and_compressed_psum():
+    _run("prog_sharded_mc.py")
+
+
+@pytest.mark.slow
+def test_train_elastic_resume():
+    _run("prog_train_elastic.py")
+
+
+@pytest.mark.slow
+def test_pipeline_parallel():
+    _run("prog_pipeline.py")

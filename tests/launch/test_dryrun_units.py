@@ -1,0 +1,77 @@
+"""Dry-run machinery units (no 512-device init in this process)."""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES, cell_status, runnable_cells
+
+
+def test_cell_skips():
+    ok, why = cell_status(get_config("hubert-xlarge"), SHAPES["decode_32k"])
+    assert not ok and "encoder" in why
+    ok, why = cell_status(get_config("qwen2.5-32b"), SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in why
+    ok, _ = cell_status(get_config("zamba2-7b"), SHAPES["long_500k"])
+    assert ok
+    ok, _ = cell_status(get_config("mamba2-130m"), SHAPES["long_500k"])
+    assert ok
+
+
+def test_runnable_cell_count():
+    from repro.configs import all_configs
+    cells = runnable_cells(all_configs())
+    # 40 - 7 full-attn long_500k - 2 hubert decode shapes = 31
+    assert len(cells) == 31, len(cells)
+
+
+def test_parse_collectives():
+    from repro.launch.dryrun import _shape_bytes, parse_collectives
+    hlo = """
+  %ar = bf16[8,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[16,4]{1,0} all-gather(%y), dimensions={0}
+  %cp = u32[4]{0} collective-permute(%z)
+  %a2a = bf16[2,2]{1,0} all-to-all(%w)
+  %ars = bf16[8,128]{1,0} all-reduce-start(%x)
+  %other = f32[9999]{0} add(%a, %b)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-reduce"]["count"] == 2
+    assert out["all-reduce"]["bytes"] == 2 * 8 * 128 * 2
+    assert out["all-gather"]["count"] == 1
+    assert out["collective-permute"]["count"] == 1
+    assert out["all-to-all"]["count"] == 1
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+def test_model_flops_estimate_dsv3_active_params():
+    from repro.launch.dryrun import model_flops_estimate
+    est = model_flops_estimate(get_config("deepseek-v3-671b"),
+                               SHAPES["train_4k"])
+    assert 6.3e11 < est["n_params"] < 7.3e11
+    assert 3.0e10 < est["n_active"] < 5.5e10     # ~37B active
+    assert est["model_flops"] == 6.0 * est["n_active"] * est["tokens"]
+
+
+def test_input_specs_shapes():
+    from repro.launch.specs import batch_logical_axes, input_specs
+    cfg = get_config("qwen2-vl-7b")
+    sp = input_specs(cfg, SHAPES["train_4k"])
+    assert sp["tokens"].shape == (256, 4096)
+    assert sp["positions"].shape == (3, 256, 4096)
+    ax = batch_logical_axes(cfg, SHAPES["train_4k"])
+    assert ax["positions"][1] == "batch"
+    dec = input_specs(cfg, SHAPES["decode_32k"])
+    assert dec["tokens"].shape == (128, 1)
+    assert dec["pos"].shape == ()
+
+
+def test_roofline_terms_sane():
+    from benchmarks.roofline import analytic_terms
+    from repro.launch.dryrun import model_flops_estimate
+    cfg = get_config("qwen2.5-32b")
+    m = model_flops_estimate(cfg, SHAPES["train_4k"])
+    t = analytic_terms("qwen2.5-32b", "train_4k", 256, m)
+    assert t["compute_s"] > 0 and t["memory_s"] > 0 and t["collective_s"] > 0
+    assert t["dominant"] in ("compute", "memory", "collective")
+    assert 0 < t["roofline_fraction"] <= 1.0
+    assert 0 < t["useful_ratio"] <= 1.2

@@ -1,0 +1,116 @@
+"""Attention: chunked==full, GQA grouping, RoPE properties, MLA absorption."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=1, d_model=32, n_heads=4,
+                n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+                param_dtype="float32", compute_dtype="float32", remat="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_chunked_equals_full(monkeypatch):
+    cfg = _cfg()
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (2, 32, 4, 8))
+    k = jax.random.normal(jax.random.key(1), (2, 32, 2, 8))
+    v = jax.random.normal(jax.random.key(2), (2, 32, 2, 8))
+    full = layers.sdpa(q, k, v, cfg, causal=True)
+    monkeypatch.setattr(layers, "Q_CHUNK_THRESHOLD", 16)
+    monkeypatch.setattr(layers, "Q_CHUNK", 8)
+    chunked = layers.sdpa(q, k, v, cfg, causal=True)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               atol=1e-5)
+
+
+def test_gqa_equals_repeated_kv():
+    cfg = _cfg()
+    q = jax.random.normal(jax.random.key(0), (1, 8, 4, 8))
+    k = jax.random.normal(jax.random.key(1), (1, 8, 2, 8))
+    v = jax.random.normal(jax.random.key(2), (1, 8, 2, 8))
+    out = layers.sdpa(q, k, v, cfg, causal=True)
+    # oracle: repeat kv heads to 4 and run MHA
+    k4 = jnp.repeat(k, 2, axis=2)
+    v4 = jnp.repeat(v, 2, axis=2)
+    cfg4 = _cfg(n_kv_heads=4)
+    # heads interleave as (kv, group): head h uses kv h//2
+    ref = layers.sdpa(q, k4, v4, cfg4, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_causal_mask():
+    """Changing future tokens never changes past outputs."""
+    cfg = _cfg()
+    q = jax.random.normal(jax.random.key(0), (1, 8, 4, 8))
+    k = jax.random.normal(jax.random.key(1), (1, 8, 2, 8))
+    v = jax.random.normal(jax.random.key(2), (1, 8, 2, 8))
+    out1 = layers.sdpa(q, k, v, cfg, causal=True)
+    k2 = k.at[:, 5:].set(99.0)
+    v2 = v.at[:, 5:].set(-99.0)
+    out2 = layers.sdpa(q, k2, v2, cfg, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :5]),
+                               np.asarray(out2[:, :5]), atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    angles = layers.rope_angles(jnp.arange(16)[None], 8, 10000.0)
+    x = jax.random.normal(jax.random.key(0), (1, 16, 2, 8))
+    r = layers.apply_rope(x, angles)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(r), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(jax.random.key(1), (1, 1, 1, 8))
+    k = jax.random.normal(jax.random.key(2), (1, 1, 1, 8))
+    def dot_at(p, d):
+        aq = layers.rope_angles(jnp.array([[p]]), 8, 10000.0)
+        ak = layers.rope_angles(jnp.array([[p + d]]), 8, 10000.0)
+        return float(jnp.sum(layers.apply_rope(q, aq)
+                             * layers.apply_rope(k, ak)))
+    assert abs(dot_at(0, 3) - dot_at(7, 3)) < 1e-4
+
+
+def test_partial_rope_2d_leaves_tail():
+    cfg = _cfg(rope_style="2d", head_dim=8)
+    angles = layers.rope_for(cfg, jnp.arange(4)[None])
+    assert angles.shape[-1] == 2          # rotates first half of the dims
+    x = jnp.ones((1, 4, 1, 8))
+    r = layers.apply_rope(x, angles)
+    np.testing.assert_allclose(np.asarray(r[..., 4:]), 1.0, atol=1e-6)
+
+
+def test_mrope_sections():
+    cfg = _cfg(rope_style="mrope", head_dim=16)
+    pos = jnp.broadcast_to(jnp.arange(6)[None, None], (3, 1, 6))
+    angles = layers.rope_for(cfg, pos)
+    assert angles.shape == (1, 6, 8)
+    # identical t/h/w positions must reduce to standard rope
+    std = layers.rope_angles(jnp.arange(6)[None], 16, cfg.rope_theta)
+    np.testing.assert_allclose(np.asarray(angles), np.asarray(std),
+                               rtol=1e-6)
+
+
+def test_mla_absorbed_equals_expanded():
+    from repro.models import mla
+    from repro.models.config import init_params
+    cfg = _cfg(attn_type="mla", n_heads=4, n_kv_heads=4, head_dim=12,
+               q_lora_rank=16, kv_lora_rank=16, qk_nope_dim=8, qk_rope_dim=4,
+               v_head_dim=8)
+    params = init_params(mla.mla_defs(cfg), jax.random.key(0), jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 6, 32)) * 0.5
+    positions = jnp.broadcast_to(jnp.arange(6), (2, 6))
+    out_exp, (c_kv, k_rope) = mla.mla_attention(x, params, cfg, positions)
+    # decode the last token with the absorbed path against the cache of the
+    # first 5
+    cache = {"c_kv": jnp.pad(c_kv[:, :5], ((0, 0), (0, 3), (0, 0))),
+             "k_rope": jnp.pad(k_rope[:, :5], ((0, 0), (0, 3), (0, 0)))}
+    out_dec, _ = mla.mla_decode(x[:, 5:6], params, cfg, cache, jnp.int32(5))
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]),
+                               np.asarray(out_exp[:, 5]), atol=2e-4)

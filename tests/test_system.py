@@ -1,0 +1,79 @@
+"""End-to-end behaviour: train -> crash -> resume == uninterrupted;
+serve generates; integrate reproduces the paper's numbers at small scale."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.launch.train import TrainHParams, train_loop
+
+
+def _hp(steps):
+    import dataclasses
+    return dataclasses.replace(TrainHParams(), total_steps=steps,
+                               warmup_steps=2, grad_accum=2, lr=1e-3)
+
+
+def test_crash_resume_trajectory_identical(tmp_path):
+    cfg = reduced(get_config("stablelm_3b"))
+    # uninterrupted oracle
+    _, losses_ref, _ = train_loop(cfg, _hp(10), batch=4, seq=32, steps=10,
+                                  ckpt_dir=None, log_every=100)
+    # crash at step 7, then resume from the step-5 checkpoint
+    with pytest.raises(RuntimeError, match="injected"):
+        train_loop(cfg, _hp(10), batch=4, seq=32, steps=10,
+                   ckpt_dir=str(tmp_path), ckpt_every=5, log_every=100,
+                   fail_at_step=7)
+    _, losses_resumed, _ = train_loop(cfg, _hp(10), batch=4, seq=32,
+                                      steps=10, ckpt_dir=str(tmp_path),
+                                      ckpt_every=100, log_every=100)
+    # resumed run re-plays steps 5..9; trajectories must coincide
+    np.testing.assert_allclose(losses_resumed, losses_ref[5:], rtol=1e-5)
+
+
+def test_loss_decreases_over_training():
+    """Repeated steps on one fixed batch must be memorised (the streaming
+    pipeline feeds fresh random tokens whose optimal loss is ln V, so the
+    loss signal there is flat by construction)."""
+    import jax
+    from repro.launch.specs import concrete_batch
+    from repro.launch.train import make_train_state, make_train_step
+    from repro.models.model import Model
+    cfg = reduced(get_config("minitron_4b"))
+    model = Model(cfg)
+    hp = _hp(30)
+    state = make_train_state(model, hp, jax.random.key(0))
+    step = jax.jit(make_train_step(model, hp))
+    batch = concrete_batch(cfg, 4, 32, train=True)
+    losses = []
+    for _ in range(15):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_server_generates_consistently():
+    from repro.launch.serve import Server
+    from repro.launch.specs import concrete_batch
+    cfg = reduced(get_config("mamba2_130m"))
+    server = Server(cfg, seed=0)
+    batch = concrete_batch(cfg, 2, 8, train=False)
+    toks1 = server.generate(batch, 6, seq_cap=16)
+    toks2 = server.generate(batch, 6, seq_cap=16)
+    assert toks1.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(toks1), np.asarray(toks2))
+    assert np.asarray(toks1).min() >= 0
+    assert np.asarray(toks1).max() < cfg.vocab_padded
+
+
+def test_paper_validation_small():
+    """Scaled-down Fig. 1: the trial band must bracket the analytic curve."""
+    from repro.core import (ZMCMultiFunctions, harmonic_analytic,
+                            harmonic_family)
+    z = ZMCMultiFunctions([harmonic_family(30, 4)], n_samples=60_000, seed=0)
+    r = z.evaluate(num_trials=5)
+    exact = harmonic_analytic(30, 4)
+    within = (np.abs(r.trial_mean - exact)
+              <= 3 * np.maximum(r.trial_std, 1e-12))
+    assert within.mean() >= 0.9
