@@ -1,24 +1,116 @@
-"""MC kernel microbenchmark + VMEM/block-shape table.
+"""MC kernel microbenchmark: fused multi-family dispatch + block-shape table.
 
-On CPU the Pallas kernel runs in interpret mode (Python-level, orders of
-magnitude slower than compiled XLA) so wall-clock here compares the
-pure-JAX engine against itself at different chunkings, and the kernel's
-TPU characteristics are reported analytically: VMEM footprint and
-arithmetic intensity per (F_BLK, S_BLK) tile choice — the §Perf block-shape
-sweep. The kernel/oracle equivalence is asserted by the test suite.
+Three sections:
+
+* ``fused_bench`` — the tentpole demonstration: a heterogeneous,
+  multi-dimension ``MultiFunctionSpec`` (mixed harmonic / |sum| / gaussian
+  forms; ``--fig1`` sizes it to the paper's 10^3-integrand Fig.-1
+  workload) evaluated three ways: fused multi-family kernels (one
+  pallas_call per dim bucket), the per-family kernel loop (one pallas_call
+  per family), and the chunked pure-JAX engine.  Asserts the estimates
+  agree within MC tolerance and reports the launch counts — the fused path
+  must launch strictly fewer kernels than the per-family loop.
+
+* ``vmem_table`` — the kernel's TPU characteristics reported analytically
+  (VMEM footprint and arithmetic intensity per (F_BLK, S_BLK) tile choice;
+  the §Perf block-shape sweep).
+
+* ``engine_bench`` — pure-JAX engine at different chunkings.
+
+On CPU the Pallas kernels run in interpret mode (Python-level, orders of
+magnitude slower than compiled XLA) so kernel wall-clock here is not
+meaningful; launch counts and estimate agreement are.  The kernel/oracle
+equivalence is asserted by the test suite.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
-from repro.core import family_sums, harmonic_family
+from repro.core import (MultiFunctionSpec, ZMCMultiFunctions, abs_sum_family,
+                        family_sums, gaussian_family, harmonic_family)
 from repro.core import rng as rng_lib
+from repro.kernels import template
+from repro.kernels.mc_eval import multi
 
 THREEFRY_FLOPS = 110          # u32 ops per 32-bit draw (20 rounds)
 EVAL_FLOPS = 20               # affine + fma + cos/sin amortised
+
+
+def _spec(fig1: bool) -> MultiFunctionSpec:
+    if fig1:
+        # Fig.-1 scale: 10^3 integrands across three dims and three forms.
+        fams = [
+            harmonic_family(500, 4),                       # the paper's Eq. (1)
+            harmonic_family(200, 2),
+            abs_sum_family(49, 2, np.ones(49)),            # Eq. (2), n < 50
+            abs_sum_family(151, 3, np.ones(151), sign_last=-1.0),
+            gaussian_family(100, 4),
+        ]
+    else:
+        fams = [
+            harmonic_family(40, 4),
+            harmonic_family(24, 2),
+            abs_sum_family(17, 2, np.linspace(0.5, 2.0, 17)),
+            abs_sum_family(10, 3, np.ones(10), sign_last=-1.0),
+            gaussian_family(12, 4),
+        ]
+    return MultiFunctionSpec.from_families(fams)
+
+
+def fused_bench(fig1: bool = False, n_samples: int | None = None):
+    spec = _spec(fig1)
+    n_samples = n_samples or 2 * template.S_BLK
+    n_fn = spec.n_fn_total
+    print(f"# fused multi-family dispatch: {n_fn} integrands, "
+          f"{len(spec.families)} families, dims "
+          f"{sorted({f.dim for f in spec.families})}, N={n_samples}")
+
+    plan = multi.plan_spec(spec)
+    key = rng_lib.fold_key(0, 0)
+
+    # 1) fused: one launch per (dim, sampler) bucket for the whole spec
+    template.reset_launch_count()
+    t0 = time.time()
+    zk = ZMCMultiFunctions(spec, n_samples=n_samples, seed=0, use_kernel=True)
+    rk = zk.evaluate(num_trials=1)
+    dt_fused = time.time() - t0
+    fused_launches = template.launch_count()
+
+    # 2) per-family kernel loop (what _trial_sums did before fusion)
+    template.reset_launch_count()
+    t0 = time.time()
+    loop_means = []
+    for fam, off in zip(spec.families, spec.offsets()):
+        from repro.core import finalize
+        sums = family_sums(fam, n_samples, key, fn_offset=off,
+                           use_kernel=True)
+        loop_means.append(np.asarray(finalize(fam, sums).mean))
+    dt_loop = time.time() - t0
+    loop_launches = template.launch_count()
+    loop_means = np.concatenate(loop_means)
+
+    # 3) chunked pure-JAX engine (reference)
+    zj = ZMCMultiFunctions(spec, n_samples=n_samples, seed=0,
+                           use_kernel=False)
+    rj = zj.evaluate(num_trials=1)
+
+    # same Threefry counters everywhere -> agreement far inside MC stderr
+    tol = 3.0 * np.maximum(rj.stderrs[0], 1e-6)
+    diff = np.abs(rk.means[0] - rj.means[0])
+    assert np.all(diff <= tol), (diff.max(), tol.min())
+    assert fused_launches < loop_launches, (fused_launches, loop_launches)
+
+    print("path,kernel_launches,seconds,max|mean-engine|")
+    print(f"fused_buckets,{fused_launches},{dt_fused:.2f},{diff.max():.2e}")
+    print(f"per_family_loop,{loop_launches},{dt_loop:.2f},"
+          f"{np.abs(loop_means - rj.means[0]).max():.2e}")
+    print(f"-> {loop_launches} family launches fused into "
+          f"{fused_launches} bucket launches "
+          f"({len(plan.unfused)} families unfusable)")
 
 
 def vmem_table():
@@ -50,8 +142,16 @@ def engine_bench():
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig1", action="store_true",
+                    help="size the fused bench to the paper's 10^3-integrand "
+                         "Fig.-1 workload (slow under interpret mode)")
+    ap.add_argument("--skip-engine", action="store_true")
+    args = ap.parse_args()
+    fused_bench(fig1=args.fig1)
     vmem_table()
-    engine_bench()
+    if not args.skip_engine:
+        engine_bench()
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import rng
 from repro.core.domains import affine_from_unit, box_volume
 from repro.core.integrand import IntegrandFamily
@@ -91,7 +92,10 @@ def family_sums(
         n_fn * chunk * dim floats.
       fn_chunk: optional function-axis blocking for >=10^4-integrand specs.
       use_kernel: dispatch to the registered Pallas fast path if the family
-        declares one (``family.kernel``).
+        declares one (``family.kernel``) *and* the registered form supports
+        (dim, sampler); anything else falls back to the chunked path here.
+        Whole-spec fusion (one launch per dim bucket) lives one level up,
+        in ``ZMCMultiFunctions`` via ``repro.kernels.mc_eval.multi``.
     """
     n_fn = family.n_fn
     if fn_chunk is not None and fn_chunk < n_fn:
@@ -229,7 +233,7 @@ def sharded_family_sums(
         return s1, s2, n
 
     spec_params = jax.tree.map(lambda _: fn_spec, fam.params)
-    out = jax.shard_map(
+    out = shard_map(
         local, mesh=mesh,
         in_specs=(spec_params, fn_spec, fn_spec),
         out_specs=(fn_spec, fn_spec, rep),
@@ -240,13 +244,26 @@ def sharded_family_sums(
 
 def _sums_with_ids(family, n_samples, key, fn_ids, sample_offset, chunk,
                    use_kernel, sampler: str = "mc") -> SumsState:
-    """Like family_sums but with explicit (traced) fn ids / sample offset."""
+    """Like family_sums but with explicit (traced) fn ids / sample offset.
+
+    ``use_kernel`` dispatch is capability-checked: the registered Pallas
+    fast path runs only if the family's form supports (dim, sampler);
+    otherwise — unregistered form, unsupported dimension (e.g. Sobol
+    beyond dim 8) — the chunked pure-JAX path below takes over silently.
+    """
+    if sampler == "sobol":
+        from repro.core.sobol import MAX_DIM
+        if family.dim > MAX_DIM:
+            # documented sobol contract: beyond the Joe-Kuo table the
+            # engine degrades to pseudo-random MC (still unbiased)
+            sampler = "mc"
     if use_kernel and family.kernel is not None:
         from repro.kernels import registry
-        name = family.kernel if sampler == "mc" else f"{family.kernel}@{sampler}"
-        impl = registry.get(name)
-        return impl(family, n_samples, key, fn_ids=fn_ids,
-                    sample_offset=sample_offset)
+        impl = registry.lookup(family.kernel, dim=family.dim,
+                               sampler=sampler)
+        if impl is not None:
+            return impl(family, n_samples, key, fn_ids=fn_ids,
+                        sample_offset=sample_offset)
     k0, k1 = key
     n_fn = family.n_fn
     n_chunks = max(1, math.ceil(n_samples / chunk))

@@ -198,15 +198,19 @@ def abs_sum_family(n: int, dim: int, coeff, *, sign_last: float = 1.0,
     dom = np.broadcast_to(np.asarray([lo, hi], np.float32), (n, dim, 2)).copy()
     signs = np.ones(dim, np.float32)
     signs[-1] = sign_last
+    # signs ride along as per-function params so the registered kernel form
+    # can pack them (the eval body sees params only, never the closure)
+    signs_p = np.broadcast_to(signs, (n, dim)).copy()
 
     def fn(x, p):
-        return p["c"] * jnp.abs(jnp.sum(x * jnp.asarray(signs), axis=-1))
+        return p["c"] * jnp.abs(jnp.sum(x * p["s"], axis=-1))
 
     return IntegrandFamily(
         fn=fn,
-        params={"c": jnp.asarray(coeff)},
+        params={"c": jnp.asarray(coeff), "s": jnp.asarray(signs_p)},
         domains=jnp.asarray(dom),
         name=f"abs_sum[{n}x{dim}d]",
+        kernel="mc_eval_abs_sum",
     ).validate()
 
 
@@ -225,4 +229,5 @@ def gaussian_family(n: int, dim: int, *, sigma=None, lo=-4.0, hi=4.0) -> Integra
         params={"sigma": jnp.asarray(sigma)},
         domains=jnp.asarray(dom),
         name=f"gaussian[{n}x{dim}d]",
+        kernel="mc_eval_gaussian",
     ).validate()

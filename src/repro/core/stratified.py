@@ -85,13 +85,19 @@ def eval_strata(fn: Callable, boxes, slot_ids, epoch, n_per: int, key,
     ids = jnp.asarray(slot_ids, jnp.uint32) + (jnp.uint32(epoch) + 1) * cap_stride
     sample_ids = jnp.arange(n_per, dtype=jnp.uint32)
     u = rng.uniforms_for(k0, k1, ids, sample_ids, boxes.shape[-2])
-    # on a mesh: strata shard over 'model' ('fn' rule), samples over 'data'
-    u = constrain(u, ("fn", "sample", None))
+    # On a mesh, samples shard over the data/pod axes.  The stratum axis is
+    # deliberately NOT sharded: it is tiny (k_split-scale) so there is no
+    # parallelism to win, and constraining it over 'model' inside the
+    # refinement fori_loop trips an XLA SPMD miscompile on the 0.4.x line
+    # (model-sharded updates scattered into the stratum table produce wrong
+    # sums on the host-platform multi-device backend; diagnosed via
+    # tests/distributed/progs/prog_sharded_mc.py's ZMCNormal section).
+    u = constrain(u, (None, "sample", None))
     lo = boxes[:, None, :, 0]
     hi = boxes[:, None, :, 1]
     x = lo + u * (hi - lo)
     vals = fn(x)
-    vals = constrain(vals, ("fn", "sample"))
+    vals = constrain(vals, (None, "sample"))
     if use_kernel:
         from repro.kernels.moments.ops import stratum_moments
         m = stratum_moments(vals)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable,
@@ -81,7 +83,7 @@ def pipeline_apply(
 
     spec_params = jax.tree.map(lambda _: P(axis), stage_params)
     other_axes = [a for a in mesh.axis_names if a != axis]
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(spec_params, P()),
         out_specs=P(),

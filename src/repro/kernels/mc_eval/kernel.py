@@ -1,27 +1,25 @@
-"""Fused Monte-Carlo sample+eval+reduce Pallas TPU kernel (harmonic family).
+"""Fused Monte-Carlo sample+eval+reduce kernel — harmonic family.
 
 This is the TPU re-think of ZMCintegral's Numba CUDA evaluation loop.  The
 CUDA version assigns one GPU thread per sample chunk, draws xoroshiro128+
 numbers from global-memory state, evaluates the integrand and accumulates
-with atomics.  On TPU we instead:
+with atomics.  On TPU we instead tile the (function x sample) space,
+generate uniforms inside VMEM with counter-based Threefry-2x32, evaluate
+``f(x) = a cos(k.x) + b sin(k.x)`` on (S_ROWS, S_LANES) vector tiles (VPU
+transcendentals; phase accumulation is a ``dim``-step fused multiply-add)
+and reduce each block to per-function (sum f, sum f^2) partials
+accumulated in place across the sample-block grid axis.
 
-* tile the (function x sample) space with a grid of
-  ``(n_fn_blocks, n_sample_blocks)`` kernel instances,
-* generate the uniforms *inside* VMEM with counter-based Threefry-2x32 on
-  (8, 128) vector tiles — random bits never touch HBM,
-* evaluate ``f(x) = a cos(k.x) + b sin(k.x)`` on the tiles (VPU
-  transcendentals; phase accumulation is a ``dim``-step fused
-  multiply-add), and
-* reduce each block to per-function partial (sum f, sum f^2) pairs,
-  accumulated *in place* across the sample-block grid axis (the output
-  BlockSpec maps every ``j`` to the same block, so the kernel revisits its
-  f32 accumulator — the canonical TPU reduction pattern).
+All of that scaffolding now lives in :mod:`repro.kernels.template`; this
+module contributes only the harmonic **eval body** and **param packing**
+(cols = [a, b, k_0..k_{dim-1}]) plus the historical
+:func:`mc_harmonic_pallas` entry point the oracle tests drive directly.
 
 Per grid cell the kernel reads ``O(F_BLK * dim)`` parameter floats and
-writes ``O(F_BLK)`` floats while performing
-``F_BLK * dim * ~130`` uint32/f32 vector ops per (8, 128) tile — i.e. the
-kernel is wholly compute-bound (arithmetic intensity ~10^4 flop/byte),
-which is the correct roofline regime for MC integration.
+writes ``O(F_BLK)`` floats while performing ``F_BLK * dim * ~130``
+uint32/f32 vector ops per (16, 128) tile — wholly compute-bound
+(arithmetic intensity ~10^4 flop/byte), the correct roofline regime for
+MC integration.
 
 VMEM budget per instance (defaults F_BLK=16, S_BLK=2048, dim<=8):
   params  16*(2 + 3*8)*4 B           ~ 1.7 KiB
@@ -33,75 +31,36 @@ before VMEM pressure matters — the sweep in §Perf picks the block shape.
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import rng as rng_lib
-
-# Sample tile: 16 sublanes x 128 lanes = 2048 samples per grid step.
-S_ROWS = 16
-S_LANES = 128
-S_BLK = S_ROWS * S_LANES
-# Functions per grid step.
-F_BLK = 16
+from repro.kernels.template import (F_BLK, S_BLK, S_LANES, S_ROWS,  # noqa: F401
+                                    fused_mc_pallas)
 
 
-def _mc_harmonic_kernel(scalars_ref, fn_ids_ref, a_ref, b_ref, k_ref,
-                        lo_ref, hi_ref, out_ref, *, dim: int):
-    """One (function-block, sample-block) grid cell.
-
-    scalars_ref: SMEM uint32[4] = (k0, k1, sample_offset, n_valid)
-    fn_ids_ref:  SMEM uint32[F_BLK] global function ids (RNG counters)
-    a/b_ref:     VMEM f32[F_BLK, 1] harmonic coefficients
-    k/lo/hi_ref: VMEM f32[F_BLK, dim]
-    out_ref:     VMEM f32[F_BLK, 2] running (sum f, sum f^2) accumulator
-    """
-    j = pl.program_id(1)
-    k0 = scalars_ref[0]
-    k1 = scalars_ref[1]
-    sample_offset = scalars_ref[2]
-    n_valid = scalars_ref[3]
-
-    row = jax.lax.broadcasted_iota(jnp.uint32, (S_ROWS, S_LANES), 0)
-    col = jax.lax.broadcasted_iota(jnp.uint32, (S_ROWS, S_LANES), 1)
-    local = row * jnp.uint32(S_LANES) + col
-    local_idx = jnp.uint32(j) * jnp.uint32(S_BLK) + local   # call-local index
-    c0 = sample_offset + local_idx                          # global counter
-    valid = local_idx < n_valid
-
-    parts = []
-    for f in range(F_BLK):
-        fid = fn_ids_ref[f]
-        phase = jnp.zeros((S_ROWS, S_LANES), jnp.float32)
-        for d in range(dim):
-            c1 = fid * jnp.uint32(rng_lib.DIM_STRIDE) + jnp.uint32(d)
-            bits = rng_lib.random_bits(k0, k1, c0, c1)
-            u = rng_lib.bits_to_uniform(bits)
-            x = lo_ref[f, d] + u * (hi_ref[f, d] - lo_ref[f, d])
-            phase = phase + k_ref[f, d] * x
-        val = a_ref[f, 0] * jnp.cos(phase) + b_ref[f, 0] * jnp.sin(phase)
-        val = jnp.where(valid, val, 0.0)
-        parts.append(jnp.stack([jnp.sum(val), jnp.sum(val * val)]))
-    part = jnp.stack(parts)  # (F_BLK, 2)
-
-    @pl.when(j == 0)
-    def _init():
-        out_ref[...] = part
-
-    @pl.when(j > 0)
-    def _acc():
-        out_ref[...] = out_ref[...] + part
+def harmonic_body(draw, p, f, dim: int):
+    """f(x) = a cos(k.x) + b sin(k.x); packed cols [a, b, k_0..k_{dim-1}]."""
+    phase = jnp.zeros((S_ROWS, S_LANES), jnp.float32)
+    for d in range(dim):
+        phase = phase + p[f, 2 + d] * draw(d)
+    return p[f, 0] * jnp.cos(phase) + p[f, 1] * jnp.sin(phase)
 
 
-@functools.partial(jax.jit, static_argnames=("dim", "n_sample_blocks", "interpret"))
+def pack_harmonic(family):
+    """f32[n_fn, 2 + dim] packed (a, b, k) parameters."""
+    prm = family.params
+    if not {"a", "b", "k"} <= set(prm):
+        raise ValueError("harmonic kernel needs params {'a','b','k'}")
+    n_fn, dim = family.n_fn, family.dim
+    return jnp.concatenate([
+        jnp.asarray(prm["a"], jnp.float32).reshape(n_fn, 1),
+        jnp.asarray(prm["b"], jnp.float32).reshape(n_fn, 1),
+        jnp.asarray(prm["k"], jnp.float32).reshape(n_fn, dim),
+    ], axis=1)
+
+
 def mc_harmonic_pallas(scalars, fn_ids, a, b, k, lo, hi, *,
                        dim: int, n_sample_blocks: int, interpret: bool):
-    """pallas_call wrapper. All function arrays pre-padded to F_BLK multiple.
+    """Historical entry point (oracle tests). Arrays pre-padded to F_BLK.
 
     Args:
       scalars: uint32[4] (k0, k1, sample_offset, n_valid).
@@ -110,30 +69,11 @@ def mc_harmonic_pallas(scalars, fn_ids, a, b, k, lo, hi, *,
     Returns:
       f32[n_fn_pad, 2] of (sum f, sum f^2) per function.
     """
-    n_fn_pad = fn_ids.shape[0]
-    assert n_fn_pad % F_BLK == 0
-    grid = (n_fn_pad // F_BLK, n_sample_blocks)
-
-    fn_blk = lambda i, j: (i, 0)
-    return pl.pallas_call(
-        functools.partial(_mc_harmonic_kernel, dim=dim),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                # scalars
-            pl.BlockSpec((F_BLK,), lambda i, j: (i,),
-                         memory_space=pltpu.SMEM),                # fn_ids
-            pl.BlockSpec((F_BLK, 1), fn_blk),                     # a
-            pl.BlockSpec((F_BLK, 1), fn_blk),                     # b
-            pl.BlockSpec((F_BLK, dim), fn_blk),                   # k
-            pl.BlockSpec((F_BLK, dim), fn_blk),                   # lo
-            pl.BlockSpec((F_BLK, dim), fn_blk),                   # hi
-        ],
-        out_specs=pl.BlockSpec((F_BLK, 2), fn_blk),
-        out_shape=jax.ShapeDtypeStruct((n_fn_pad, 2), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            # function blocks are independent; sample axis revisits the
-            # accumulator block and must stay sequential
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
-        name="mc_eval_harmonic",
-    )(scalars, fn_ids, a, b, k, lo, hi)
+    packed = jnp.concatenate(
+        [jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+         jnp.asarray(k, jnp.float32)], axis=1)
+    return fused_mc_pallas(
+        scalars, fn_ids, packed, jnp.asarray(lo, jnp.float32),
+        jnp.asarray(hi, jnp.float32), dim=dim,
+        n_sample_blocks=n_sample_blocks, bodies=(harmonic_body,),
+        sampler="mc", interpret=interpret, name="mc_eval_harmonic")

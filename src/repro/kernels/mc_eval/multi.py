@@ -1,0 +1,183 @@
+"""Fused multi-family dispatch: one pallas_call per (dim, sampler) bucket.
+
+The per-family loop in ``ZMCMultiFunctions._trial_sums`` launches one
+kernel per family — fine for a handful of families, but the paper's
+headline workload (>10^3 integrands, mixed forms and dimensions) wants
+the original ZMCintegral property of splitting the *whole* batch across
+the device in a single launch.  This module plans that:
+
+1. every family whose ``kernel`` names a registered form that supports
+   (dim, sampler) is **fusable**; the rest fall back to the chunked JAX
+   path (the caller handles them);
+2. fusable families are bucketed by integrand dimension (the kernel's
+   sample-drawing loop is specialised on ``dim``);
+3. within a bucket each family is padded to an F_BLK multiple (so every
+   function block is homogeneous in form), packed parameters are padded
+   to the bucket's widest form, and everything is concatenated into one
+   operand set;
+4. the whole bucket runs in a single ``pallas_call`` with per-block form
+   ids driving ``lax.switch`` body selection (elided when the bucket has
+   one distinct body);
+5. results are sliced back out per family, in global-fn-id counter space
+   — bit-identical to what the per-family launches would produce, since
+   the Threefry/Sobol counters depend only on (global fn id, sample id).
+
+The plan depends only on the spec (shapes, forms, dims) — callers build
+it once and re-run it per trial/round with different keys/offsets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import registry, template
+from repro.kernels.pallas_compat import resolve_interpret
+from repro.kernels.template import F_BLK, S_BLK
+
+
+@dataclasses.dataclass(frozen=True)
+class _Slice:
+    """Where one family's functions live inside a bucket's padded rows."""
+    family_index: int
+    row_start: int
+    n_fn: int
+
+
+@dataclasses.dataclass(frozen=True)
+class _Bucket:
+    """One fused launch: all same-dim fusable families, concatenated."""
+    dim: int
+    bodies: tuple            # distinct eval bodies, switch order
+    packed: jnp.ndarray      # f32[n_fn_pad, n_cols_max]
+    lo: jnp.ndarray          # f32[n_fn_pad, dim]
+    hi: jnp.ndarray          # f32[n_fn_pad, dim]
+    fn_ids: jnp.ndarray      # u32[n_fn_pad] global function ids
+    form_ids: jnp.ndarray | None   # i32[n_fn_pad // F_BLK] or None
+    slices: tuple[_Slice, ...]
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    buckets: tuple[_Bucket, ...]
+    unfused: tuple[int, ...]   # family indices left to the chunked path
+    sampler: str
+
+    @property
+    def n_launches(self) -> int:
+        return len(self.buckets)
+
+
+def plan_spec(spec, *, sampler: str = "mc",
+              fn_offsets=None) -> FusionPlan:
+    """Bucket a MultiFunctionSpec's fusable families by dimension.
+
+    Args:
+      spec: ``repro.core.integrand.MultiFunctionSpec``.
+      sampler: "mc" | "sobol" — a family fuses only if its form supports
+        this sampler at its dimension.
+      fn_offsets: optional per-family global fn-id offsets (defaults to
+        ``spec.offsets()``, the engine's counter layout).
+    """
+    families = spec.families
+    if fn_offsets is None:
+        fn_offsets = spec.offsets()
+
+    by_dim: dict[int, list[int]] = {}
+    unfused: list[int] = []
+    for idx, fam in enumerate(families):
+        form = registry.form(fam.kernel) if fam.kernel else None
+        if form is None or not form.supports(dim=fam.dim, sampler=sampler):
+            unfused.append(idx)
+            continue
+        by_dim.setdefault(fam.dim, []).append(idx)
+
+    buckets = []
+    for dim in sorted(by_dim):
+        idxs = by_dim[dim]
+        bodies: list = []
+        packed_parts, lo_parts, hi_parts, id_parts = [], [], [], []
+        block_forms: list[int] = []
+        slices: list[_Slice] = []
+        n_cols = max(registry.form(families[i].kernel).n_cols(dim)
+                     for i in idxs)
+        row = 0
+        for idx in idxs:
+            fam = families[idx]
+            form = registry.form(fam.kernel)
+            if form.body not in bodies:
+                bodies.append(form.body)
+            body_ix = bodies.index(form.body)
+
+            n_fn = fam.n_fn
+            n_fn_pad = math.ceil(n_fn / F_BLK) * F_BLK
+            pad = n_fn_pad - n_fn
+            packed = template.pad_rows(
+                jnp.asarray(form.pack_params(fam), jnp.float32), pad)
+            if packed.shape[1] < n_cols:
+                packed = jnp.pad(
+                    packed, ((0, 0), (0, n_cols - packed.shape[1])))
+            packed_parts.append(packed)
+            lo_parts.append(template.pad_rows(
+                jnp.asarray(fam.domains[..., 0], jnp.float32), pad))
+            hi_parts.append(template.pad_rows(
+                jnp.asarray(fam.domains[..., 1], jnp.float32), pad))
+            id_parts.append(template.pad_rows(
+                jnp.uint32(fn_offsets[idx])
+                + jnp.arange(n_fn, dtype=jnp.uint32), pad))
+            block_forms += [body_ix] * (n_fn_pad // F_BLK)
+            slices.append(_Slice(idx, row, n_fn))
+            row += n_fn_pad
+
+        form_ids = (jnp.asarray(np.asarray(block_forms, np.int32))
+                    if len(bodies) > 1 else None)
+        buckets.append(_Bucket(
+            dim=dim,
+            bodies=tuple(bodies),
+            packed=jnp.concatenate(packed_parts),
+            lo=jnp.concatenate(lo_parts),
+            hi=jnp.concatenate(hi_parts),
+            fn_ids=jnp.concatenate(id_parts),
+            form_ids=form_ids,
+            slices=tuple(slices),
+            name=f"mc_eval_fused_{sampler}_d{dim}x{len(idxs)}fam",
+        ))
+    return FusionPlan(buckets=tuple(buckets), unfused=tuple(unfused),
+                      sampler=sampler)
+
+
+def eval_plan(plan: FusionPlan, n_samples: int, key, *,
+              sample_offset=0, interpret: bool | None = None):
+    """Run every bucket of a plan; returns {family_index: SumsState}.
+
+    Same counter space as the per-family path: family ``i``'s sums are
+    identical (up to f32 association order) to
+    ``family_sums(families[i], ..., use_kernel=True)``.
+    """
+    from repro.core.direct_mc import SumsState
+
+    interpret = resolve_interpret(interpret)
+    n_sample_blocks = max(1, math.ceil(int(n_samples) / S_BLK))
+    scalars = template.pack_scalars(key, sample_offset, n_samples)
+
+    out: dict[int, SumsState] = {}
+    for bucket in plan.buckets:
+        dirvecs = None
+        if plan.sampler == "sobol":
+            from repro.core.sobol import direction_vectors
+            dirvecs = jnp.asarray(direction_vectors(bucket.dim))
+        template.record_launch()
+        sums = template.fused_mc_pallas(
+            scalars, bucket.fn_ids, bucket.packed, bucket.lo, bucket.hi,
+            form_ids=bucket.form_ids, dirvecs=dirvecs, dim=bucket.dim,
+            n_sample_blocks=n_sample_blocks, bodies=bucket.bodies,
+            sampler=plan.sampler, interpret=interpret, name=bucket.name)
+        for sl in bucket.slices:
+            rows = sums[sl.row_start:sl.row_start + sl.n_fn]
+            out[sl.family_index] = SumsState(
+                s1=rows[:, 0], s2=rows[:, 1], n=jnp.float32(n_samples))
+    return out

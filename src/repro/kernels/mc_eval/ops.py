@@ -1,108 +1,85 @@
-"""jit'd public wrapper for the fused MC harmonic kernel.
+"""Registered kernel forms for the direct-MC engine.
 
-Conforms to the :mod:`repro.kernels.registry` fast-path signature so
-``IntegrandFamily(kernel="mc_eval_harmonic")`` families dispatch here from
-the direct-MC engine (single-device and shard_map paths alike).
+Each form is an eval body + param packer + capability metadata
+(:class:`repro.kernels.registry.KernelForm`); registration generates the
+single-family fast-path impls (``"mc_eval_<form>"`` and
+``"mc_eval_<form>@sobol"``) from the shared template, and the fused
+multi-family planner (:mod:`repro.kernels.mc_eval.multi`) picks the forms
+up when a whole ``MultiFunctionSpec`` runs with ``use_kernel=True``.
+
+``IntegrandFamily(kernel="mc_eval_harmonic")``-style families dispatch
+here from the direct-MC engine (single-device and shard_map paths alike)
+via ``registry.lookup``.
 """
 
 from __future__ import annotations
 
-import math
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.direct_mc import SumsState
 from repro.kernels import registry
-from repro.kernels.mc_eval.kernel import F_BLK, S_BLK, mc_harmonic_pallas
-from repro.kernels.mc_eval.sobol_kernel import mc_sobol_harmonic_pallas
+from repro.kernels.mc_eval.kernel import harmonic_body, pack_harmonic
+from repro.kernels.registry import KernelForm
+from repro.kernels.template import S_LANES, S_ROWS
 
 
-def _should_interpret() -> bool:
-    # Real Mosaic lowering only exists on TPU; everywhere else (this CPU
-    # container included) the kernel body runs in interpret mode.
-    return jax.default_backend() != "tpu"
+def abs_sum_body(draw, p, f, dim: int):
+    """g(x) = c * |sum_d s_d x_d|; packed cols [c, s_0..s_{dim-1}]."""
+    acc = jnp.zeros((S_ROWS, S_LANES), jnp.float32)
+    for d in range(dim):
+        acc = acc + p[f, 1 + d] * draw(d)
+    return p[f, 0] * jnp.abs(acc)
 
 
-def _pad_rows(x, n_pad):
-    if n_pad == 0:
-        return x
-    return jnp.pad(x, [(0, n_pad)] + [(0, 0)] * (x.ndim - 1))
-
-
-@registry.register("mc_eval_harmonic")
-def mc_eval_harmonic(family, n_samples: int, key, *, fn_offset: int = 0,
-                     sample_offset=0, fn_ids=None,
-                     interpret: bool | None = None) -> SumsState:
-    """Fused-kernel (s1, s2) sums for a harmonic family.
-
-    Matches ``direct_mc.family_sums`` semantics: same counters, same
-    uniforms, same estimates (up to f32 association order).
-    """
-    p = family.params
-    if not {"a", "b", "k"} <= set(p):
-        raise ValueError("mc_eval_harmonic needs params {'a','b','k'}")
-    n_fn = family.n_fn
-    dim = family.dim
-    if fn_ids is None:
-        fn_ids = jnp.uint32(fn_offset) + jnp.arange(n_fn, dtype=jnp.uint32)
-    if interpret is None:
-        interpret = _should_interpret()
-
-    n_fn_pad = math.ceil(n_fn / F_BLK) * F_BLK
-    pad = n_fn_pad - n_fn
-    a = _pad_rows(jnp.asarray(p["a"], jnp.float32).reshape(n_fn, 1), pad)
-    b = _pad_rows(jnp.asarray(p["b"], jnp.float32).reshape(n_fn, 1), pad)
-    k = _pad_rows(jnp.asarray(p["k"], jnp.float32).reshape(n_fn, dim), pad)
-    lo = _pad_rows(jnp.asarray(family.domains[..., 0], jnp.float32), pad)
-    hi = _pad_rows(jnp.asarray(family.domains[..., 1], jnp.float32), pad)
-    fn_ids = _pad_rows(jnp.asarray(fn_ids, jnp.uint32), pad)
-
-    n_sample_blocks = max(1, math.ceil(int(n_samples) / S_BLK))
-    scalars = jnp.stack([
-        jnp.asarray(key[0], jnp.uint32).reshape(()),
-        jnp.asarray(key[1], jnp.uint32).reshape(()),
-        jnp.asarray(sample_offset, jnp.uint32).reshape(()),
-        jnp.asarray(n_samples, jnp.uint32).reshape(()),
-    ])
-
-    out = mc_harmonic_pallas(scalars, fn_ids, a, b, k, lo, hi, dim=dim,
-                             n_sample_blocks=n_sample_blocks,
-                             interpret=bool(interpret))
-    return SumsState(s1=out[:n_fn, 0], s2=out[:n_fn, 1],
-                     n=jnp.float32(n_samples))
-
-
-@registry.register("mc_eval_harmonic@sobol")
-def mc_eval_sobol_harmonic(family, n_samples: int, key, *, fn_offset: int = 0,
-                           sample_offset=0, fn_ids=None,
-                           interpret: bool | None = None) -> SumsState:
-    """RQMC fast path: fused Sobol sampling + harmonic eval + reduction."""
-    from repro.core.sobol import direction_vectors
-    p = family.params
+def pack_abs_sum(family):
+    prm = family.params
+    if not {"c", "s"} <= set(prm):
+        raise ValueError("abs_sum kernel needs params {'c','s'}")
     n_fn, dim = family.n_fn, family.dim
-    if fn_ids is None:
-        fn_ids = jnp.uint32(fn_offset) + jnp.arange(n_fn, dtype=jnp.uint32)
-    if interpret is None:
-        interpret = _should_interpret()
-    n_fn_pad = math.ceil(n_fn / F_BLK) * F_BLK
-    pad = n_fn_pad - n_fn
-    a = _pad_rows(jnp.asarray(p["a"], jnp.float32).reshape(n_fn, 1), pad)
-    b = _pad_rows(jnp.asarray(p["b"], jnp.float32).reshape(n_fn, 1), pad)
-    k = _pad_rows(jnp.asarray(p["k"], jnp.float32).reshape(n_fn, dim), pad)
-    lo = _pad_rows(jnp.asarray(family.domains[..., 0], jnp.float32), pad)
-    hi = _pad_rows(jnp.asarray(family.domains[..., 1], jnp.float32), pad)
-    fn_ids = _pad_rows(jnp.asarray(fn_ids, jnp.uint32), pad)
-    dirvecs = jnp.asarray(direction_vectors(dim))
-    n_sample_blocks = max(1, math.ceil(int(n_samples) / S_BLK))
-    scalars = jnp.stack([
-        jnp.asarray(key[0], jnp.uint32).reshape(()),
-        jnp.asarray(key[1], jnp.uint32).reshape(()),
-        jnp.asarray(sample_offset, jnp.uint32).reshape(()),
-        jnp.asarray(n_samples, jnp.uint32).reshape(()),
-    ])
-    out = mc_sobol_harmonic_pallas(scalars, fn_ids, dirvecs, a, b, k, lo, hi,
-                                   dim=dim, n_sample_blocks=n_sample_blocks,
-                                   interpret=bool(interpret))
-    return SumsState(s1=out[:n_fn, 0], s2=out[:n_fn, 1],
-                     n=jnp.float32(n_samples))
+    return jnp.concatenate([
+        jnp.asarray(prm["c"], jnp.float32).reshape(n_fn, 1),
+        jnp.asarray(prm["s"], jnp.float32).reshape(n_fn, dim),
+    ], axis=1)
+
+
+def gaussian_body(draw, p, f, dim: int):
+    """f(x) = exp(-0.5 ||x||^2 / sigma^2); packed cols [sigma]."""
+    r2 = jnp.zeros((S_ROWS, S_LANES), jnp.float32)
+    for d in range(dim):
+        x = draw(d)
+        r2 = r2 + x * x
+    return jnp.exp(-0.5 * r2 / (p[f, 0] * p[f, 0]))
+
+
+def pack_gaussian(family):
+    prm = family.params
+    if "sigma" not in prm:
+        raise ValueError("gaussian kernel needs params {'sigma'}")
+    return jnp.asarray(prm["sigma"], jnp.float32).reshape(family.n_fn, 1)
+
+
+HARMONIC = registry.register_form(KernelForm(
+    name="mc_eval_harmonic",
+    body=harmonic_body,
+    pack_params=pack_harmonic,
+    n_cols=lambda dim: 2 + dim,
+))
+
+ABS_SUM = registry.register_form(KernelForm(
+    name="mc_eval_abs_sum",
+    body=abs_sum_body,
+    pack_params=pack_abs_sum,
+    n_cols=lambda dim: 1 + dim,
+))
+
+GAUSSIAN = registry.register_form(KernelForm(
+    name="mc_eval_gaussian",
+    body=gaussian_body,
+    pack_params=pack_gaussian,
+    n_cols=lambda dim: 1,
+))
+
+# Directly-importable fast paths (historical public names).
+mc_eval_harmonic = registry.impl("mc_eval_harmonic")
+mc_eval_sobol_harmonic = registry.impl("mc_eval_harmonic@sobol")
+mc_eval_abs_sum = registry.impl("mc_eval_abs_sum")
+mc_eval_gaussian = registry.impl("mc_eval_gaussian")

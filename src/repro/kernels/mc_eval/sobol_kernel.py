@@ -1,12 +1,13 @@
 """Fused RQMC (Sobol) sample+eval+reduce kernel — the QMC upgrade at
 kernel speed.
 
-Identical tiling/reduction to the Threefry kernel, but the uniforms come
-from the digitally-shifted Sobol sequence.  Cheaper per sample than
-Threefry: the Sobol point for (sample, dim) is shared by every function in
-the block, so the 32-step Gray-code XOR runs once per (tile, dim) and each
-function only pays one XOR (its digital shift) + the affine map — vs 20
-Threefry rounds per (function, sample, dim).
+Identical tiling/reduction to the Threefry kernel (both are instances of
+:mod:`repro.kernels.template` with ``sampler="sobol"`` vs ``"mc"``), but
+the uniforms come from the digitally-shifted Sobol sequence.  Cheaper per
+sample than Threefry: the Sobol point for (sample, dim) is shared by every
+function in the block, so the 32-step Gray-code XOR runs once per
+(tile, dim) and each function only pays one XOR (its digital shift) + the
+affine map — vs 20 Threefry rounds per (function, sample, dim).
 
 Direction vectors arrive as a (dim, 32) uint32 VMEM operand; per-function
 shifts are recomputed in-kernel with the same Threefry call as the oracle
@@ -15,97 +16,21 @@ shifts are recomputed in-kernel with the same Threefry call as the oracle
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import rng as rng_lib
-from repro.kernels.mc_eval.kernel import F_BLK, S_BLK, S_LANES, S_ROWS
+from repro.kernels.mc_eval.kernel import harmonic_body
+from repro.kernels.template import (F_BLK, S_BLK, S_LANES, S_ROWS,  # noqa: F401
+                                    fused_mc_pallas, sobol_tiles)  # noqa: F401
 
 
-def _sobol_tiles(idx, v_ref, dim: int):
-    """Sobol points for one index tile: list of dim uint32 tiles."""
-    gray = idx ^ (idx >> jnp.uint32(1))
-    outs = [jnp.zeros(idx.shape, jnp.uint32) for _ in range(dim)]
-    for j in range(32):
-        bit = ((gray >> jnp.uint32(j)) & jnp.uint32(1)).astype(bool)
-        for d in range(dim):
-            outs[d] = outs[d] ^ jnp.where(bit, v_ref[d, j], jnp.uint32(0))
-    return outs
-
-
-def _mc_sobol_kernel(scalars_ref, fn_ids_ref, v_ref, a_ref, b_ref, k_ref,
-                     lo_ref, hi_ref, out_ref, *, dim: int):
-    j = pl.program_id(1)
-    k0 = scalars_ref[0]
-    k1 = scalars_ref[1]
-    sample_offset = scalars_ref[2]
-    n_valid = scalars_ref[3]
-
-    row = jax.lax.broadcasted_iota(jnp.uint32, (S_ROWS, S_LANES), 0)
-    col = jax.lax.broadcasted_iota(jnp.uint32, (S_ROWS, S_LANES), 1)
-    local = row * jnp.uint32(S_LANES) + col
-    local_idx = jnp.uint32(j) * jnp.uint32(S_BLK) + local
-    sample_ids = sample_offset + local_idx
-    valid = local_idx < n_valid
-
-    pts = _sobol_tiles(sample_ids, v_ref, dim)      # dim x (S_ROWS,S_LANES)
-
-    parts = []
-    for f in range(F_BLK):
-        fid = fn_ids_ref[f]
-        phase = jnp.zeros((S_ROWS, S_LANES), jnp.float32)
-        for d in range(dim):
-            # per-(fn, dim) digital shift: same counter plane as the oracle
-            c1 = fid * jnp.uint32(rng_lib.DIM_STRIDE) + jnp.uint32(d)
-            shift = rng_lib.random_bits(k0, k1, jnp.uint32(0x50B01), c1)
-            u = rng_lib.bits_to_uniform(pts[d] ^ shift)
-            x = lo_ref[f, d] + u * (hi_ref[f, d] - lo_ref[f, d])
-            phase = phase + k_ref[f, d] * x
-        val = a_ref[f, 0] * jnp.cos(phase) + b_ref[f, 0] * jnp.sin(phase)
-        val = jnp.where(valid, val, 0.0)
-        parts.append(jnp.stack([jnp.sum(val), jnp.sum(val * val)]))
-    part = jnp.stack(parts)
-
-    @pl.when(j == 0)
-    def _init():
-        out_ref[...] = part
-
-    @pl.when(j > 0)
-    def _acc():
-        out_ref[...] = out_ref[...] + part
-
-
-@functools.partial(jax.jit, static_argnames=("dim", "n_sample_blocks",
-                                             "interpret"))
 def mc_sobol_harmonic_pallas(scalars, fn_ids, dirvecs, a, b, k, lo, hi, *,
                              dim: int, n_sample_blocks: int, interpret: bool):
-    n_fn_pad = fn_ids.shape[0]
-    assert n_fn_pad % F_BLK == 0
-    grid = (n_fn_pad // F_BLK, n_sample_blocks)
-    fn_blk = lambda i, j: (i, 0)
-    return pl.pallas_call(
-        functools.partial(_mc_sobol_kernel, dim=dim),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),               # scalars
-            pl.BlockSpec((F_BLK,), lambda i, j: (i,),
-                         memory_space=pltpu.SMEM),               # fn_ids
-            pl.BlockSpec((dim, 32), lambda i, j: (0, 0)),        # dirvecs
-            pl.BlockSpec((F_BLK, 1), fn_blk),                    # a
-            pl.BlockSpec((F_BLK, 1), fn_blk),                    # b
-            pl.BlockSpec((F_BLK, dim), fn_blk),                  # k
-            pl.BlockSpec((F_BLK, dim), fn_blk),                  # lo
-            pl.BlockSpec((F_BLK, dim), fn_blk),                  # hi
-        ],
-        out_specs=pl.BlockSpec((F_BLK, 2), fn_blk),
-        out_shape=jax.ShapeDtypeStruct((n_fn_pad, 2), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
-        name="mc_eval_sobol_harmonic",
-    )(scalars, fn_ids, dirvecs, a, b, k, lo, hi)
+    """Historical entry point; see :func:`...kernel.mc_harmonic_pallas`."""
+    packed = jnp.concatenate(
+        [jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+         jnp.asarray(k, jnp.float32)], axis=1)
+    return fused_mc_pallas(
+        scalars, fn_ids, packed, jnp.asarray(lo, jnp.float32),
+        jnp.asarray(hi, jnp.float32), dirvecs=jnp.asarray(dirvecs, jnp.uint32),
+        dim=dim, n_sample_blocks=n_sample_blocks, bodies=(harmonic_body,),
+        sampler="sobol", interpret=interpret, name="mc_eval_sobol_harmonic")

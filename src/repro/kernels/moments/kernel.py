@@ -8,7 +8,11 @@ in VMEM, so each value is read from HBM exactly once and the output is
 O(n_strata) — the minimum possible traffic.
 
 Grid: (row_blocks, col_blocks); the column axis revisits the accumulator
-block (sequential semantics), identical to the mc_eval reduction pattern.
+block via the shared :func:`repro.kernels.template.accumulate` pattern
+(sequential semantics), identical to the mc_eval reduction — only the
+``combine`` rule differs (Welford merge instead of add).  Pallas symbols
+come from :mod:`repro.kernels.pallas_compat` so the kernel runs under any
+supported jax (compiled on TPU, interpret mode elsewhere).
 """
 
 from __future__ import annotations
@@ -17,11 +21,23 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import compiler_params, pl
+from repro.kernels.template import accumulate
 
 R_BLK = 8     # strata rows per grid step
 C_BLK = 512   # samples per grid step (4 x 128 lanes)
+
+
+def _welford_combine(acc, part):
+    """Chan/Welford parallel update of stacked (n, mean, M2) rows."""
+    n_a, mean_a, m2_a = acc[:, 0], acc[:, 1], acc[:, 2]
+    n_b, mean_b, m2_b = part[:, 0], part[:, 1], part[:, 2]
+    n = n_a + n_b
+    delta = mean_b - mean_a
+    mean = mean_a + delta * (n_b / n)
+    m2 = m2_a + m2_b + jnp.square(delta) * (n_a * n_b / n)
+    return jnp.stack([n, mean, m2], axis=1)
 
 
 def _moments_kernel(vals_ref, out_ref):
@@ -30,21 +46,8 @@ def _moments_kernel(vals_ref, out_ref):
     n_b = jnp.float32(C_BLK)
     mean_b = jnp.mean(v, axis=1)            # (R_BLK,)
     m2_b = jnp.sum(jnp.square(v - mean_b[:, None]), axis=1)
-
-    @pl.when(j == 0)
-    def _init():
-        out_ref[...] = jnp.stack(
-            [jnp.full_like(mean_b, n_b), mean_b, m2_b], axis=1)
-
-    @pl.when(j > 0)
-    def _combine():
-        acc = out_ref[...]                  # (R_BLK, 3) = (n, mean, M2)
-        n_a, mean_a, m2_a = acc[:, 0], acc[:, 1], acc[:, 2]
-        n = n_a + n_b
-        delta = mean_b - mean_a
-        mean = mean_a + delta * (n_b / n)
-        m2 = m2_a + m2_b + jnp.square(delta) * (n_a * n_b / n)
-        out_ref[...] = jnp.stack([n, mean, m2], axis=1)
+    part = jnp.stack([jnp.full_like(mean_b, n_b), mean_b, m2_b], axis=1)
+    accumulate(j, out_ref, part, combine=_welford_combine)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -65,7 +68,7 @@ def moments_pallas(values, *, interpret: bool):
         in_specs=[pl.BlockSpec((R_BLK, C_BLK), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((R_BLK, 3), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, 3), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="stratum_moments",

@@ -4,15 +4,11 @@ from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.reduction import Moments
 from repro.kernels.moments.kernel import C_BLK, R_BLK, moments_pallas
-
-
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.pallas_compat import resolve_interpret
 
 
 def stratum_moments(values, *, interpret: bool | None = None) -> Moments:
@@ -29,8 +25,7 @@ def stratum_moments(values, *, interpret: bool | None = None) -> Moments:
     if c % C_BLK != 0:
         raise ValueError(
             f"n_samples per stratum must be a multiple of {C_BLK}; got {c}")
-    if interpret is None:
-        interpret = _should_interpret()
+    interpret = resolve_interpret(interpret)
     r_pad = math.ceil(r / R_BLK) * R_BLK
     if r_pad != r:
         values = jnp.pad(values, ((0, r_pad - r), (0, 0)))

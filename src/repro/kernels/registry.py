@@ -1,24 +1,86 @@
-"""Kernel fast-path registry.
+"""Kernel fast-path registry with capability metadata.
 
-An :class:`~repro.core.integrand.IntegrandFamily` can name a registered
-Pallas implementation (``family.kernel``); the direct-MC engine dispatches
-to it when ``use_kernel=True``.  Registered impls must match the signature::
+Two registration levels:
 
-    impl(family, n_samples, key, *, fn_offset=0, sample_offset=0,
-         fn_ids=None) -> SumsState
+* :func:`register` — a bare named callable (legacy fast path).  Registered
+  impls must match the signature::
 
-and produce sums statistically identical to the pure-JAX path (same Threefry
-counters, same uniforms; asserted bit-tight by the kernel test sweeps).
+      impl(family, n_samples, key, *, fn_offset=0, sample_offset=0,
+           fn_ids=None) -> SumsState
+
+  and produce sums statistically identical to the pure-JAX path (same
+  Threefry counters, same uniforms; asserted bit-tight by the kernel test
+  sweeps).
+
+* :func:`register_form` — a :class:`KernelForm`: an eval body + param
+  packer + capability metadata (supported samplers, max dimension,
+  backends).  Registration generates the single-family impls for every
+  supported sampler from the shared template
+  (``repro.kernels.template.make_family_impl``) and makes the form
+  available to the fused multi-family planner
+  (``repro.kernels.mc_eval.multi``).
+
+Dispatch entry points:
+
+* :func:`get` — name -> impl, raising on unknown names (test/debug use).
+* :func:`lookup` — capability-checked: returns the impl only if the named
+  form supports the requested (dim, sampler), else ``None`` so the engine
+  falls back to the chunked pure-JAX path instead of crashing.  This is
+  what ``direct_mc._sums_with_ids`` calls.
+
+Sampler naming: the pseudo-random impl owns the bare form name; other
+samplers get ``"<name>@<sampler>"`` (e.g. ``"mc_eval_harmonic@sobol"``).
 """
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 _REGISTRY: dict[str, Callable] = {}
+_FORMS: dict[str, "KernelForm"] = {}
+
+# dims addressable by the Threefry counter layout (rng.DIM_STRIDE)
+_COUNTER_MAX_DIM = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelForm:
+    """Capability record for one integrand form's fused kernel.
+
+    Attributes:
+      name: registry name (also the ``IntegrandFamily.kernel`` tag).
+      body: eval body ``body(draw, p, f, dim) -> value tile`` (see
+        ``repro.kernels.template``).
+      pack_params: ``family -> f32[n_fn, n_cols(dim)]`` packed parameters.
+      n_cols: ``dim -> int`` packed width (fused buckets pad to the max).
+      max_dim: largest supported integrand dimension.
+      samplers: supported samplers, subset of ("mc", "sobol").
+      backends: where the kernel can run ("tpu" compiled, "interpret"
+        everywhere else via the Pallas interpreter).
+    """
+
+    name: str
+    body: Callable
+    pack_params: Callable
+    n_cols: Callable[[int], int]
+    max_dim: int = _COUNTER_MAX_DIM
+    samplers: tuple[str, ...] = ("mc", "sobol")
+    backends: tuple[str, ...] = ("tpu", "interpret")
+
+    def supports(self, *, dim: int, sampler: str = "mc") -> bool:
+        if sampler not in self.samplers:
+            return False
+        if dim > self.max_dim:
+            return False
+        if sampler == "sobol":
+            from repro.core.sobol import MAX_DIM
+            return dim <= MAX_DIM
+        return True
 
 
 def register(name: str):
+    """Register a bare callable under ``name`` (no capability metadata)."""
     def deco(fn: Callable) -> Callable:
         if name in _REGISTRY:
             raise ValueError(f"kernel {name!r} already registered")
@@ -27,14 +89,66 @@ def register(name: str):
     return deco
 
 
-def get(name: str) -> Callable:
+def register_form(form: KernelForm) -> KernelForm:
+    """Register a form and generate its per-sampler impls."""
+    if form.name in _FORMS:
+        raise ValueError(f"kernel form {form.name!r} already registered")
+    from repro.kernels.template import make_family_impl
+    _FORMS[form.name] = form
+    for sampler in form.samplers:
+        key = form.name if sampler == "mc" else f"{form.name}@{sampler}"
+        if key in _REGISTRY:
+            raise ValueError(f"kernel {key!r} already registered")
+        _REGISTRY[key] = make_family_impl(form, sampler)
+    return form
+
+
+def _load_builtin():
     # import for side effect: kernel modules self-register
     import repro.kernels.mc_eval.ops  # noqa: F401
+
+
+def impl(name: str) -> Callable:
+    """Plain dict lookup (no import side effect; registration-time use)."""
+    return _REGISTRY[name]
+
+
+def get(name: str) -> Callable:
+    _load_builtin()
     if name not in _REGISTRY:
         raise KeyError(f"no kernel named {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[name]
 
 
+def form(name: str) -> KernelForm | None:
+    """The KernelForm registered under (base) ``name``, or None."""
+    _load_builtin()
+    return _FORMS.get(name.split("@", 1)[0])
+
+
+def lookup(name: str, *, dim: int, sampler: str = "mc") -> Callable | None:
+    """Capability-checked dispatch: impl for (name, dim, sampler) or None.
+
+    Unknown names and unsupported (dim, sampler) combinations return None
+    — callers fall back to the chunked pure-JAX path.
+    """
+    _load_builtin()
+    f = _FORMS.get(name)
+    if f is not None:
+        if not f.supports(dim=dim, sampler=sampler):
+            return None
+        key = name if sampler == "mc" else f"{name}@{sampler}"
+        return _REGISTRY.get(key)
+    # legacy bare callables: only the default sampler naming convention
+    key = name if sampler == "mc" else f"{name}@{sampler}"
+    return _REGISTRY.get(key)
+
+
 def names() -> list[str]:
-    import repro.kernels.mc_eval.ops  # noqa: F401
+    _load_builtin()
     return sorted(_REGISTRY)
+
+
+def forms() -> list[KernelForm]:
+    _load_builtin()
+    return [_FORMS[k] for k in sorted(_FORMS)]

@@ -1,0 +1,325 @@
+"""Shared scaffolding for fused MC sample+eval+reduce Pallas kernels.
+
+Every fused MC kernel in this repo has the same shape: a
+``(n_fn_blocks, n_sample_blocks)`` grid, per-function parameters blocked
+``F_BLK`` rows at a time, uniforms generated *inside* VMEM (counter-based
+Threefry or digitally-shifted Sobol — random bits never touch HBM), an
+integrand evaluated on (S_ROWS, S_LANES) vector tiles, and per-function
+(sum f, sum f^2) partials accumulated in place across the sample-block
+grid axis (the output BlockSpec maps every ``j`` to the same block — the
+canonical TPU reduction pattern).
+
+This module owns that scaffolding once.  A registered integrand form
+(:class:`repro.kernels.registry.KernelForm`) supplies only
+
+* an **eval body** ``body(draw, p, f, dim) -> (S_ROWS, S_LANES) tile``,
+  where ``draw(d)`` yields the domain-mapped sample tile for dimension
+  ``d`` of function ``f`` and ``p`` is the (F_BLK, n_cols) packed
+  parameter block, and
+* a **param packer** ``pack_params(family) -> f32[n_fn, n_cols]``,
+
+and gets single-family *and* fused multi-family kernels for both samplers
+for free (:func:`make_family_impl`, :mod:`repro.kernels.mc_eval.multi`).
+
+Multi-form dispatch: when one launch covers families with different eval
+bodies, each F_BLK function block is homogeneous in form (families are
+padded to F_BLK multiples before concatenation) and carries a per-block
+form id in SMEM; the kernel selects the body with ``jax.lax.switch`` once
+per block.  Sampling, domain mapping and reduction are shared across
+forms — this is what lets a heterogeneous ``MultiFunctionSpec`` run in
+one ``pallas_call`` per (dim, sampler) bucket instead of one per family.
+
+All Pallas symbols come from :mod:`repro.kernels.pallas_compat` (the
+version-drift shim); nothing here imports ``jax.experimental`` directly.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as rng_lib
+from repro.kernels.pallas_compat import (compiler_params, pl, pltpu,
+                                         resolve_interpret)
+
+# Sample tile: 16 sublanes x 128 lanes = 2048 samples per grid step.
+S_ROWS = 16
+S_LANES = 128
+S_BLK = S_ROWS * S_LANES
+# Functions per grid step.
+F_BLK = 16
+
+# c0 plane reserved for per-(function, dim) Sobol digital shifts; must
+# match the pure-jnp oracle in repro.core.sobol.
+SOBOL_SHIFT_C0 = 0x50B01
+
+# Python-level pallas_call launch counter (incremented by the ops-layer
+# wrappers each dispatch; launches made while tracing inside an outer jit
+# count once at trace time).  benchmarks/kernel_bench.py uses this to show
+# the fused path needs fewer launches than the per-family loop.
+_LAUNCHES = 0
+
+
+def record_launch() -> None:
+    global _LAUNCHES
+    _LAUNCHES += 1
+
+
+def launch_count() -> int:
+    return _LAUNCHES
+
+
+def reset_launch_count() -> None:
+    global _LAUNCHES
+    _LAUNCHES = 0
+
+
+def pad_rows(x, n_pad: int):
+    """Zero-pad the leading (function) axis by ``n_pad`` rows."""
+    if n_pad == 0:
+        return x
+    return jnp.pad(x, [(0, n_pad)] + [(0, 0)] * (x.ndim - 1))
+
+
+def tile_sample_index(j):
+    """Call-local sample index of each lane of the (S_ROWS, S_LANES) tile
+    for sample-block ``j``."""
+    row = jax.lax.broadcasted_iota(jnp.uint32, (S_ROWS, S_LANES), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (S_ROWS, S_LANES), 1)
+    local = row * jnp.uint32(S_LANES) + col
+    return jnp.uint32(j) * jnp.uint32(S_BLK) + local
+
+
+def accumulate(j, out_ref, part, combine=None):
+    """In-place accumulator across the sequential grid axis ``j``.
+
+    First visit stores ``part``; later visits fold it in with ``combine``
+    (default: elementwise add).  The caller's output BlockSpec must map
+    every ``j`` to the same block.
+    """
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j > 0)
+    def _acc():
+        if combine is None:
+            out_ref[...] = out_ref[...] + part
+        else:
+            out_ref[...] = combine(out_ref[...], part)
+
+
+def sobol_tiles(idx, v, dim: int):
+    """Unshifted Sobol points for one index tile: list of dim u32 tiles.
+
+    Gray-code-by-index construction: point ``i`` is the XOR of the
+    direction vectors selected by the bits of ``gray(i)`` — O(32) vector
+    ops, shared by every function in the block.
+    """
+    gray = idx ^ (idx >> jnp.uint32(1))
+    outs = [jnp.zeros(idx.shape, jnp.uint32) for _ in range(dim)]
+    for j in range(32):
+        bit = ((gray >> jnp.uint32(j)) & jnp.uint32(1)).astype(bool)
+        for d in range(dim):
+            outs[d] = outs[d] ^ jnp.where(bit, v[d, j], jnp.uint32(0))
+    return outs
+
+
+def _fused_kernel(*refs, dim: int, bodies: tuple, sampler: str,
+                  has_forms: bool):
+    """One (function-block, sample-block) grid cell.
+
+    Ref order: scalars, fn_ids, [form_ids], [dirvecs], packed, lo, hi, out.
+      scalars: SMEM u32[4] = (k0, k1, sample_offset, n_valid)
+      fn_ids:  SMEM u32[F_BLK] global function ids (RNG counters)
+      form_ids: SMEM i32[1] body index of this function block (multi-form)
+      dirvecs: VMEM u32[dim, 32] Sobol direction vectors (sampler="sobol")
+      packed:  VMEM f32[F_BLK, n_cols] form-packed parameters
+      lo/hi:   VMEM f32[F_BLK, dim] domain boxes
+      out:     VMEM f32[F_BLK, 2] running (sum f, sum f^2) accumulator
+    """
+    it = iter(refs)
+    scalars_ref = next(it)
+    fn_ids_ref = next(it)
+    form_ref = next(it) if has_forms else None
+    v_ref = next(it) if sampler == "sobol" else None
+    packed_ref, lo_ref, hi_ref, out_ref = it
+
+    j = pl.program_id(1)
+    k0 = scalars_ref[0]
+    k1 = scalars_ref[1]
+    sample_offset = scalars_ref[2]
+    n_valid = scalars_ref[3]
+
+    local_idx = tile_sample_index(j)
+    c0 = sample_offset + local_idx          # global sample counter
+    valid = local_idx < n_valid
+
+    pts = sobol_tiles(c0, v_ref[...], dim) if sampler == "sobol" else None
+    p = packed_ref[...]
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+
+    def eval_block(body):
+        parts = []
+        for f in range(F_BLK):
+            fid = fn_ids_ref[f]
+
+            def draw(d, f=f, fid=fid):
+                c1 = fid * jnp.uint32(rng_lib.DIM_STRIDE) + jnp.uint32(d)
+                if sampler == "sobol":
+                    # per-(fn, dim) digital shift: same counter plane as
+                    # the pure-jnp oracle (core/sobol.shifts_for)
+                    shift = rng_lib.random_bits(
+                        k0, k1, jnp.uint32(SOBOL_SHIFT_C0), c1)
+                    bits = pts[d] ^ shift
+                else:
+                    bits = rng_lib.random_bits(k0, k1, c0, c1)
+                u = rng_lib.bits_to_uniform(bits)
+                return lo[f, d] + u * (hi[f, d] - lo[f, d])
+
+            val = body(draw, p, f, dim)
+            val = jnp.where(valid, val, 0.0)
+            parts.append(jnp.stack([jnp.sum(val), jnp.sum(val * val)]))
+        return jnp.stack(parts)            # (F_BLK, 2)
+
+    if has_forms and len(bodies) > 1:
+        part = jax.lax.switch(
+            form_ref[0], [functools.partial(eval_block, b) for b in bodies])
+    else:
+        part = eval_block(bodies[0])
+
+    accumulate(j, out_ref, part)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dim", "n_sample_blocks", "bodies", "sampler", "interpret", "name"))
+def fused_mc_pallas(scalars, fn_ids, packed, lo, hi, form_ids=None,
+                    dirvecs=None, *, dim: int, n_sample_blocks: int,
+                    bodies: tuple, sampler: str = "mc", interpret: bool,
+                    name: str = "mc_eval_fused"):
+    """One pallas_call over a (padded) stack of functions.
+
+    Args:
+      scalars: u32[4] (k0, k1, sample_offset, n_valid).
+      fn_ids: u32[n_fn_pad] with n_fn_pad % F_BLK == 0.
+      packed: f32[n_fn_pad, n_cols] form-packed parameters.
+      lo, hi: f32[n_fn_pad, dim] domain boxes.
+      form_ids: optional i32[n_fn_pad // F_BLK] per-block body index
+        (required when len(bodies) > 1; blocks must be form-homogeneous).
+      dirvecs: u32[dim, 32] Sobol direction vectors (sampler="sobol").
+      bodies: static tuple of eval bodies (see module docstring).
+    Returns:
+      f32[n_fn_pad, 2] of (sum f, sum f^2) per function.
+    """
+    n_fn_pad = fn_ids.shape[0]
+    assert n_fn_pad % F_BLK == 0
+    if len(bodies) > 1 and form_ids is None:
+        raise ValueError(
+            "multiple eval bodies need per-block form_ids; without them "
+            "every block would silently run bodies[0]")
+    grid = (n_fn_pad // F_BLK, n_sample_blocks)
+    fn_blk = lambda i, j: (i, 0)
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),                    # scalars
+        pl.BlockSpec((F_BLK,), lambda i, j: (i,),
+                     memory_space=pltpu.SMEM),                    # fn_ids
+    ]
+    args = [scalars, fn_ids]
+    has_forms = form_ids is not None
+    if has_forms:
+        in_specs.append(pl.BlockSpec((1,), lambda i, j: (i,),
+                                     memory_space=pltpu.SMEM))    # form_ids
+        args.append(form_ids)
+    if sampler == "sobol":
+        in_specs.append(pl.BlockSpec((dim, 32), lambda i, j: (0, 0)))
+        args.append(dirvecs)
+    n_cols = packed.shape[1]
+    in_specs += [
+        pl.BlockSpec((F_BLK, n_cols), fn_blk),                    # packed
+        pl.BlockSpec((F_BLK, dim), fn_blk),                       # lo
+        pl.BlockSpec((F_BLK, dim), fn_blk),                       # hi
+    ]
+    args += [packed, lo, hi]
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, dim=dim, bodies=bodies,
+                          sampler=sampler, has_forms=has_forms),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((F_BLK, 2), fn_blk),
+        out_shape=jax.ShapeDtypeStruct((n_fn_pad, 2), jnp.float32),
+        compiler_params=compiler_params(
+            # function blocks are independent; the sample axis revisits
+            # the accumulator block and must stay sequential
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name=name,
+    )(*args)
+
+
+def pack_scalars(key, sample_offset, n_samples):
+    """u32[4] SMEM operand shared by every fused MC kernel."""
+    return jnp.stack([
+        jnp.asarray(key[0], jnp.uint32).reshape(()),
+        jnp.asarray(key[1], jnp.uint32).reshape(()),
+        jnp.asarray(sample_offset, jnp.uint32).reshape(()),
+        jnp.asarray(n_samples, jnp.uint32).reshape(()),
+    ])
+
+
+def make_family_impl(form, sampler: str):
+    """Build a registry fast-path callable for one form + sampler.
+
+    The returned impl matches ``direct_mc.family_sums`` semantics exactly:
+    same Threefry counters, same uniforms, same estimates (up to f32
+    association order) — asserted by the kernel test sweeps.
+    """
+    from repro.core.direct_mc import SumsState
+
+    def impl(family, n_samples: int, key, *, fn_offset: int = 0,
+             sample_offset=0, fn_ids=None,
+             interpret: bool | None = None) -> SumsState:
+        n_fn, dim = family.n_fn, family.dim
+        if not form.supports(dim=dim, sampler=sampler):
+            raise ValueError(
+                f"kernel {form.name!r} does not support dim={dim} with "
+                f"sampler={sampler!r}")
+        if fn_ids is None:
+            fn_ids = jnp.uint32(fn_offset) + jnp.arange(n_fn,
+                                                        dtype=jnp.uint32)
+        interpret = resolve_interpret(interpret)
+
+        n_fn_pad = math.ceil(n_fn / F_BLK) * F_BLK
+        pad = n_fn_pad - n_fn
+        packed = pad_rows(jnp.asarray(form.pack_params(family),
+                                      jnp.float32), pad)
+        lo = pad_rows(jnp.asarray(family.domains[..., 0], jnp.float32), pad)
+        hi = pad_rows(jnp.asarray(family.domains[..., 1], jnp.float32), pad)
+        fn_ids = pad_rows(jnp.asarray(fn_ids, jnp.uint32), pad)
+
+        dirvecs = None
+        if sampler == "sobol":
+            from repro.core.sobol import direction_vectors
+            dirvecs = jnp.asarray(direction_vectors(dim))
+
+        n_sample_blocks = max(1, math.ceil(int(n_samples) / S_BLK))
+        scalars = pack_scalars(key, sample_offset, n_samples)
+        record_launch()
+        out = fused_mc_pallas(
+            scalars, fn_ids, packed, lo, hi, dirvecs=dirvecs, dim=dim,
+            n_sample_blocks=n_sample_blocks, bodies=(form.body,),
+            sampler=sampler, interpret=interpret,
+            name=form.name if sampler == "mc" else f"{form.name}@{sampler}")
+        return SumsState(s1=out[:n_fn, 0], s2=out[:n_fn, 1],
+                         n=jnp.float32(n_samples))
+
+    impl.__name__ = form.name if sampler == "mc" else f"{form.name}@{sampler}"
+    impl.form = form
+    impl.sampler = sampler
+    return impl

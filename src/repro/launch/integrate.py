@@ -9,6 +9,7 @@ mesh handling intra-pod distribution (functions x model, samples x data).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -19,6 +20,9 @@ from repro.distributed.fault_tolerance import StepWatchdog, run_with_restarts
 
 
 def main():
+    if os.environ.get("REPRO_MULTIHOST"):
+        from repro.launch.multihost import initialize_if_needed
+        initialize_if_needed()
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-functions", type=int, default=100)
     ap.add_argument("--dim", type=int, default=4)

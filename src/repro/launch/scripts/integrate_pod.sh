@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Per-host integration entrypoint: the paper's multi-function workload as
+# a fault-tolerant pod job (checkpointed rounds + restart-on-failure).
+#
+# Same multi-host wiring as train_pod.sh: REPRO_MULTIHOST=1 routes through
+# repro.launch.multihost.initialize_if_needed() before jax comes up, so
+# `--mesh` sees every chip in the pod.
+#
+# Example:
+#   REPRO_COORD=10.0.0.1:8476 REPRO_NUM_PROCS=2 REPRO_PROC_ID=0 \
+#     ./integrate_pod.sh --n-functions 1000 --samples 1000000 \
+#       --mesh --use-kernel --ckpt-dir /ckpt
+set -euo pipefail
+
+cd "$(dirname "$0")/../../../.."
+
+export REPRO_MULTIHOST=1
+export PYTHONPATH="${PWD}/src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m repro.launch.integrate "$@"

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Per-host training entrypoint for multi-host (pod) deployments.
+#
+# Run once on every host of the pod (e.g. via `gcloud compute tpus tpu-vm
+# ssh --worker=all`).  REPRO_MULTIHOST=1 makes repro.launch.train call
+# repro.launch.multihost.initialize_if_needed() before any other jax use,
+# which welds the hosts into one runtime from either
+#   * the Cloud TPU / GKE metadata (autodetected), or
+#   * explicit REPRO_COORD / REPRO_NUM_PROCS / REPRO_PROC_ID env vars.
+#
+# Example (2-host generic cluster):
+#   REPRO_COORD=10.0.0.1:8476 REPRO_NUM_PROCS=2 REPRO_PROC_ID=0 \
+#     ./train_pod.sh --arch stablelm-3b --steps 1000 --ckpt-dir /ckpt
+set -euo pipefail
+
+cd "$(dirname "$0")/../../../.."
+
+export REPRO_MULTIHOST=1
+export PYTHONPATH="${PWD}/src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python -m repro.launch.train "$@"

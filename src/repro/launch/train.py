@@ -211,21 +211,34 @@ def train_loop(cfg: ModelConfig, hp: TrainHParams, *, batch: int, seq: int,
 
     losses = []
     watchdog = StepWatchdog()
-    with logical_sharding(mesh, rules=rules_for(cfg)):
-        for i in range(start, steps):
-            batch_i = stream.next_batch()
-            with watchdog:
-                state, metrics = step_fn(state, batch_i)
-            if fail_at_step is not None and i == fail_at_step:
-                raise RuntimeError(f"injected failure at step {i}")
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            if i % log_every == 0:
-                print(f"step {i:5d} loss {loss:.4f} "
-                      f"gnorm {float(metrics['grad_norm']):.3f}")
-            if writer and (i + 1) % ckpt_every == 0:
-                writer.save(i + 1, state,
-                            extra={"data_step": stream.snapshot()["step"]})
+    try:
+        with logical_sharding(mesh, rules=rules_for(cfg)):
+            for i in range(start, steps):
+                batch_i = stream.next_batch()
+                with watchdog:
+                    state, metrics = step_fn(state, batch_i)
+                if fail_at_step is not None and i == fail_at_step:
+                    raise RuntimeError(f"injected failure at step {i}")
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                if i % log_every == 0:
+                    print(f"step {i:5d} loss {loss:.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f}")
+                if writer and (i + 1) % ckpt_every == 0:
+                    writer.save(i + 1, state,
+                                extra={"data_step": stream.snapshot()["step"]})
+    except BaseException:
+        # Crash path: drain the async queue so every checkpoint enqueued
+        # *before* the failure is durable by the time the exception
+        # propagates — otherwise an immediate restart races the writer
+        # thread, sees no checkpoint, and silently replays completed steps
+        # from scratch.  Writer errors must not mask the original failure.
+        if writer:
+            try:
+                writer.close()
+            except Exception:
+                pass
+        raise
     if writer:
         writer.close()
     return state, losses, watchdog

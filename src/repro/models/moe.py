@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed import sharding
 from repro.models.config import ModelConfig, PSpec
 from repro.models import layers
@@ -203,7 +204,7 @@ def moe_ffn(x, params, cfg: ModelConfig):
         # check_vma=False: the output IS replicated over 'model' by
         # construction (trailing all_gather over the EP axis), which the
         # varying-axes checker cannot prove through the gather+slice.
-        routed = jax.shard_map(
+        routed = shard_map(
             island, mesh=mesh,
             in_specs=(x_spec, P(None, None), e_spec_gu, e_spec_gu, e_spec_d),
             out_specs=x_spec, check_vma=False,

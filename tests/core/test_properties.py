@@ -2,6 +2,12 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional 'test' extra (pip install "
+           "hypothesis); the rest of the suite runs without it")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import IntegrandFamily, family_sums, finalize, merge_sums

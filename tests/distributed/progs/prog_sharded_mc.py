@@ -31,6 +31,7 @@ assert np.all(np.abs(r2.means[0] - r.means[0])
               <= 6 * np.maximum(r.stderrs.mean(0), 1e-12))
 
 # compressed psum inside shard_map
+from repro.compat import shard_map
 from repro.distributed.compression import compressed_psum
 
 x = jnp.arange(32, dtype=jnp.float32).reshape(8, 4) / 7.0
@@ -40,8 +41,8 @@ def f(xl):
     return compressed_psum(xl, "data")
 
 
-got = jax.shard_map(f, mesh=mesh, in_specs=P("data", None),
-                    out_specs=P("data", None))(x)
+got = shard_map(f, mesh=mesh, in_specs=P("data", None),
+                out_specs=P("data", None))(x)
 ref = np.tile(np.asarray(x).reshape(4, 2, 4).sum(0), (4, 1)).reshape(8, 4)
 # int8 over shared scale: tolerance = scale
 tol = float(np.abs(x).max()) / 127 * 4 + 1e-5

@@ -3,6 +3,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional 'test' extra (pip install "
+           "hypothesis); the rest of the suite runs without it")
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed import compression as C
