@@ -1,0 +1,63 @@
+"""Service quickstart: integrals as requests against a caching engine.
+
+    PYTHONPATH=src python examples/service_quickstart.py
+
+Where ``examples/quickstart.py`` evaluates one spec in one shot, this
+drives the request-serving layer (``repro.service``): clients submit
+*requests* — families plus a precision ask — and the engine batches
+pending work across clients into fused kernel launches, dedupes
+equivalent integrals via content hashing, and serves repeats straight
+from its stderr-aware cache.  Three invariants to notice below:
+
+1. two clients asking for the same integral share one evaluation;
+2. re-asking to the *same or looser* precision costs zero launches;
+3. asking for *more* precision resumes the cached counter stream
+   (top-up) — the result is bit-identical to having run the bigger
+   budget from the start.
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import harmonic_analytic, harmonic_family, gaussian_family
+from repro.kernels import template
+from repro.service import IntegrationClient, IntegrationEngine
+
+engine = IntegrationEngine(seed=0, round_samples=8192)
+client = IntegrationClient(engine)
+
+# -- client A: harmonic modes; client B: an overlapping grid scan ----------
+template.reset_launch_count()
+res_a = client.integrate([harmonic_family(50, 4), gaussian_family(10, 3)],
+                         n_samples=32768)
+res_b = client.integrate([harmonic_family(50, 4)],   # same integrals as A!
+                         n_samples=32768)
+print(f"cold: {template.launch_count()} launches for both clients "
+      f"(B deduped onto A's cache entry: from_cache={res_b.served_from_cache})")
+
+exact = harmonic_analytic(50, 4)
+print("first three harmonic modes (estimate +- stderr vs analytic):")
+for i in range(3):
+    print(f"  F_{i+1:<3d} = {res_a.means[i]:+.5f} "
+          f"+- {res_a.stderrs[i]:.1e}   exact {exact[i]:+.5f}")
+
+# -- warm cache: zero launches -------------------------------------------
+template.reset_launch_count()
+res_c = client.integrate([harmonic_family(50, 4)], n_samples=32768)
+assert template.launch_count() == 0 and res_c.served_from_cache
+np.testing.assert_array_equal(res_c.means, res_b.means)
+print("warm: 0 launches, identical result")
+
+# -- top-up: resume the stream instead of recomputing ---------------------
+template.reset_launch_count()
+res_d = client.integrate([harmonic_family(50, 4)], n_samples=65536)
+print(f"top-up to 2x budget: {template.launch_count()} launches, "
+      f"stderr {res_b.stderrs.max():.2e} -> {res_d.stderrs.max():.2e}")
+
+# -- or ask for precision directly ----------------------------------------
+res_e = client.integrate([harmonic_family(50, 4)], target_stderr=2.5e-3)
+print(f"to-precision: max stderr {res_e.stderrs.max():.2e} "
+      f"after {res_e.n_per_family[0]} samples")
+print(f"engine stats: {engine.stats}")

@@ -42,13 +42,13 @@ def _params(n: int, dim: int, seed: int, difficulty: float):
     return a.astype(np.float32), u.astype(np.float32)
 
 
-def _family(fn, a, u, name):
+def _family(fn, a, u, name, kernel=None):
     n, dim = a.shape
     dom = np.broadcast_to(np.asarray([0.0, 1.0], np.float32),
                           (n, dim, 2)).copy()
     return IntegrandFamily(
         fn=fn, params={"a": jnp.asarray(a), "u": jnp.asarray(u)},
-        domains=jnp.asarray(dom), name=name).validate()
+        domains=jnp.asarray(dom), name=name, kernel=kernel).validate()
 
 
 # -- oscillatory -------------------------------------------------------------
@@ -64,7 +64,8 @@ def oscillatory(n: int, dim: int, seed: int = 0, difficulty: float = 9.0):
     phase = 2 * np.pi * u[:, 0] + a.sum(1) / 2
     mag = np.prod(2 * np.sin(a / 2) / a, axis=1)
     exact = mag * np.cos(phase)
-    return _family(fn, a, u, f"genz_osc[{n}x{dim}]"), exact
+    return _family(fn, a, u, f"genz_osc[{n}x{dim}]",
+                   kernel="mc_eval_genz_osc"), exact
 
 
 # -- product peak -------------------------------------------------------------
@@ -99,7 +100,8 @@ def corner_peak(n: int, dim: int, seed: int = 2, difficulty: float = 1.85):
             sub = sum(a[i, j] for j in range(dim) if (mask >> j) & 1)
             total += (-1.0) ** s / (1.0 + sub)
         exact[i] = total / (math.factorial(dim) * np.prod(a[i]))
-    return _family(fn, a, u, f"genz_corner[{n}x{dim}]"), exact
+    return _family(fn, a, u, f"genz_corner[{n}x{dim}]",
+                   kernel="mc_eval_genz_corner"), exact
 
 
 # -- gaussian ------------------------------------------------------------------

@@ -107,18 +107,28 @@ class ZMCMultiFunctions:
     def _trial_sums(self, trial: int, n_samples: int, sample_offset: int):
         """Raw per-function sums for one independent trial.
 
-        With ``use_kernel=True`` (single-device), every family whose form
-        is registered runs through the fused multi-family path — one
-        pallas_call per (dim, sampler) bucket for the whole spec, the
-        paper's 10^3-integrand workload included — and only unregistered
-        forms fall back to the per-family chunked JAX path below.
+        With ``use_kernel=True``, every family whose form is registered
+        runs through the fused multi-family path — one pallas_call per
+        (dim, sampler) bucket for the whole spec, the paper's
+        10^3-integrand workload included — and only unregistered forms
+        fall back to the per-family chunked JAX path below.  On a mesh
+        the same buckets are built host-side and launched inside
+        ``shard_map`` (functions over ``fn_axis``, samples over the
+        remaining axes), so multi-chip runs get the same launch
+        reduction as the single-device path.
         """
         key = rng.fold_key(self.seed, trial)
         fused = {}
-        if self.use_kernel and self.mesh is None:
+        if self.use_kernel:
             from repro.kernels.mc_eval import multi
-            fused = multi.eval_plan(self._get_fusion_plan(), n_samples, key,
-                                    sample_offset=sample_offset)
+            if self.mesh is None:
+                fused = multi.eval_plan(self._get_fusion_plan(), n_samples,
+                                        key, sample_offset=sample_offset)
+            else:
+                fused = multi.sharded_eval_plan(
+                    self._get_fusion_plan(), n_samples, key, self.mesh,
+                    fn_axis=self.fn_axis, sample_axes=self.sample_axes,
+                    sample_offset=sample_offset)
         out = []
         offsets = self.spec.offsets()
         for idx, (fam, off) in enumerate(zip(self.spec.families, offsets)):

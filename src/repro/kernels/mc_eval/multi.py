@@ -29,10 +29,13 @@ it once and re-run it per trial/round with different keys/offsets.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import registry, template
 from repro.kernels.pallas_compat import resolve_interpret
@@ -180,4 +183,109 @@ def eval_plan(plan: FusionPlan, n_samples: int, key, *,
             rows = sums[sl.row_start:sl.row_start + sl.n_fn]
             out[sl.family_index] = SumsState(
                 s1=rows[:, 0], s2=rows[:, 1], n=jnp.float32(n_samples))
+    return out
+
+
+def _shard_bucket(bucket: _Bucket, fn_par: int) -> _Bucket:
+    """Pad a bucket so its F_BLK blocks divide evenly over ``fn_par``.
+
+    Padded rows are zeros (sliced off by the caller, exactly like the
+    per-family padding) and padded blocks carry body index 0.
+    """
+    blocks = bucket.fn_ids.shape[0] // F_BLK
+    tgt_blocks = math.ceil(blocks / fn_par) * fn_par
+    extra = (tgt_blocks - blocks) * F_BLK
+    if extra == 0:
+        return bucket
+    form_ids = bucket.form_ids
+    if form_ids is not None:
+        form_ids = jnp.concatenate(
+            [form_ids, jnp.zeros(tgt_blocks - blocks, jnp.int32)])
+    return dataclasses.replace(
+        bucket,
+        packed=template.pad_rows(bucket.packed, extra),
+        lo=template.pad_rows(bucket.lo, extra),
+        hi=template.pad_rows(bucket.hi, extra),
+        fn_ids=template.pad_rows(bucket.fn_ids, extra),
+        form_ids=form_ids,
+    )
+
+
+def sharded_eval_plan(plan: FusionPlan, n_samples: int, key, mesh, *,
+                      fn_axis: str = "model", sample_axes=("data",),
+                      sample_offset=0, interpret: bool | None = None):
+    """Mesh variant of :func:`eval_plan`: one fused launch per bucket,
+    *inside* ``shard_map``.
+
+    The bucketed operands are built once on the host (same planner as the
+    single-device path), then function rows shard over ``fn_axis`` and
+    each sample-axis shard draws a disjoint counter range; a single
+    ``psum`` over the sample axes merges the (s1, s2) partials — the same
+    communication shape as ``direct_mc.sharded_family_sums``, but one
+    launch per (dim, sampler) bucket instead of one per family.
+
+    Returns {family_index: SumsState} with ``n`` *exactly* ``n_samples``:
+    unlike the per-family sharded path, the last shard masks its tail
+    instead of rounding the total up, so counter ranges of consecutive
+    windows (``sample_offset`` advancing by ``n_samples``) never overlap
+    — the invariant the service cache's top-up fold relies on.
+    """
+    from repro.compat import shard_map
+    from repro.core.direct_mc import SumsState
+
+    interpret = resolve_interpret(interpret)
+    sample_axes = tuple(sample_axes)
+    fn_par = mesh.shape[fn_axis]
+    sample_par = int(np.prod([mesh.shape[a] for a in sample_axes]))
+    per_shard = math.ceil(int(n_samples) / sample_par)
+    n_sample_blocks = max(1, math.ceil(per_shard / S_BLK))
+    k0, k1 = key
+    fs = P(fn_axis)
+
+    out: dict[int, SumsState] = {}
+    for bucket in plan.buckets:
+        sb = _shard_bucket(bucket, fn_par)
+        dirvecs = None
+        if plan.sampler == "sobol":
+            from repro.core.sobol import direction_vectors
+            dirvecs = jnp.asarray(direction_vectors(sb.dim))
+
+        def local(fn_ids, packed, lo, hi, form_ids, *, _bucket=sb,
+                  _dirvecs=dirvecs):
+            idx = jnp.uint32(0)
+            mult = 1
+            for a in reversed(sample_axes):
+                idx = idx + jnp.uint32(jax.lax.axis_index(a)) * jnp.uint32(mult)
+                mult *= mesh.shape[a]
+            # exact split: the last shard masks the tail so the call draws
+            # precisely n_samples counters in total
+            start = jnp.minimum(idx * jnp.uint32(per_shard),
+                                jnp.uint32(n_samples))
+            n_local = jnp.minimum(jnp.uint32(n_samples) - start,
+                                  jnp.uint32(per_shard))
+            shard_offset = jnp.uint32(sample_offset) + start
+            scalars = template.pack_scalars((k0, k1), shard_offset, n_local)
+            sums = template.fused_mc_pallas(
+                scalars, fn_ids, packed, lo, hi, form_ids=form_ids,
+                dirvecs=_dirvecs, dim=_bucket.dim,
+                n_sample_blocks=n_sample_blocks, bodies=_bucket.bodies,
+                sampler=plan.sampler, interpret=interpret,
+                name=_bucket.name + "_sharded")
+            return jax.lax.psum(sums, sample_axes)
+
+        in_specs = [fs, fs, fs, fs]
+        args = [sb.fn_ids, sb.packed, sb.lo, sb.hi]
+        if sb.form_ids is not None:
+            in_specs.append(fs)
+            args.append(sb.form_ids)
+        else:
+            local = functools.partial(local, form_ids=None)
+        template.record_launch()
+        sums = shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=fs)(*args)
+        n_actual = jnp.float32(int(n_samples))
+        for sl in bucket.slices:
+            rows = sums[sl.row_start:sl.row_start + sl.n_fn]
+            out[sl.family_index] = SumsState(
+                s1=rows[:, 0], s2=rows[:, 1], n=n_actual)
     return out

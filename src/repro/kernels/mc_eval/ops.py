@@ -41,6 +41,44 @@ def pack_abs_sum(family):
     ], axis=1)
 
 
+def genz_osc_body(draw, p, f, dim: int):
+    """Genz oscillatory cos(2 pi u_1 + sum a_d x_d); cols [u_1, a_0..]."""
+    phase = jnp.full((S_ROWS, S_LANES), 2.0 * jnp.pi, jnp.float32) * p[f, 0]
+    for d in range(dim):
+        phase = phase + p[f, 1 + d] * draw(d)
+    return jnp.cos(phase)
+
+
+def pack_genz_osc(family):
+    prm = family.params
+    if not {"a", "u"} <= set(prm):
+        raise ValueError("genz oscillatory kernel needs params {'a','u'}")
+    n_fn, dim = family.n_fn, family.dim
+    return jnp.concatenate([
+        jnp.asarray(prm["u"], jnp.float32).reshape(n_fn, dim)[:, :1],
+        jnp.asarray(prm["a"], jnp.float32).reshape(n_fn, dim),
+    ], axis=1)
+
+
+def genz_corner_body(draw, p, f, dim: int):
+    """Genz corner peak (1 + sum a_d x_d)^-(dim+1); cols [a_0..a_{dim-1}].
+
+    The base is >= 1 on [0,1]^d with a >= 0, so the power is computed as
+    exp(-(dim+1) log(base)) — branch-free and safe for padded zero rows.
+    """
+    acc = jnp.ones((S_ROWS, S_LANES), jnp.float32)
+    for d in range(dim):
+        acc = acc + p[f, d] * draw(d)
+    return jnp.exp(-(dim + 1.0) * jnp.log(acc))
+
+
+def pack_genz_corner(family):
+    prm = family.params
+    if "a" not in prm:
+        raise ValueError("genz corner-peak kernel needs params {'a'}")
+    return jnp.asarray(prm["a"], jnp.float32).reshape(family.n_fn, family.dim)
+
+
 def gaussian_body(draw, p, f, dim: int):
     """f(x) = exp(-0.5 ||x||^2 / sigma^2); packed cols [sigma]."""
     r2 = jnp.zeros((S_ROWS, S_LANES), jnp.float32)
@@ -76,6 +114,20 @@ GAUSSIAN = registry.register_form(KernelForm(
     body=gaussian_body,
     pack_params=pack_gaussian,
     n_cols=lambda dim: 1,
+))
+
+GENZ_OSC = registry.register_form(KernelForm(
+    name="mc_eval_genz_osc",
+    body=genz_osc_body,
+    pack_params=pack_genz_osc,
+    n_cols=lambda dim: 1 + dim,
+))
+
+GENZ_CORNER = registry.register_form(KernelForm(
+    name="mc_eval_genz_corner",
+    body=genz_corner_body,
+    pack_params=pack_genz_corner,
+    n_cols=lambda dim: dim,
 ))
 
 # Directly-importable fast paths (historical public names).

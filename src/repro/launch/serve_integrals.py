@@ -1,0 +1,124 @@
+"""Integration-as-a-service launcher.
+
+``python -m repro.launch.serve_integrals --requests 64`` stands up the
+continuously-batching :class:`~repro.service.engine.IntegrationEngine`,
+feeds it a mixed-dimension grid-scan workload (the ZMCintegral-v5 usage
+pattern: many clients asking for related parameter sweeps), and reports
+throughput, launch counts and cache behavior.  ``--thread`` exercises
+the async submit/poll worker; the default drives waves synchronously.
+
+This is the service-layer sibling of ``repro.launch.integrate`` (the
+one-shot fault-tolerant job): same kernels, same counters, but requests
+arrive over time, dedupe against each other and top up cached streams.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import abs_sum_family, gaussian_family, harmonic_family
+from repro.core import genz
+from repro.service.api import IntegrationRequest
+
+
+def demo_workload(n_requests: int, *, n_fn: int = 8,
+                  n_samples: int | None = 16384,
+                  target_stderr: float | None = None,
+                  duplicate_every: int = 4) -> list[IntegrationRequest]:
+    """A mixed-dimension request stream with deliberate overlap.
+
+    Cycles through the registered forms at dims 2-4 (so batching has
+    buckets to fuse) and re-issues every ``duplicate_every``-th request
+    verbatim, modeling distinct clients scanning overlapping grids — the
+    canonicalizer must dedupe those into shared cache entries.
+    """
+    reqs: list[IntegrationRequest] = []
+    makers = [
+        lambda i: harmonic_family(n_fn, 2 + i % 3),
+        lambda i: abs_sum_family(n_fn, 2 + i % 3,
+                                 np.linspace(0.5, 2.0, n_fn), ),
+        lambda i: gaussian_family(n_fn, 2 + i % 3),
+        lambda i: genz.oscillatory(n_fn, 2 + i % 3, seed=i % 5)[0],
+        lambda i: genz.corner_peak(n_fn, 2 + i % 3, seed=i % 5)[0],
+    ]
+    for i in range(n_requests):
+        if duplicate_every and i % duplicate_every == duplicate_every - 1:
+            # verbatim re-ask of an earlier request (different client)
+            src = reqs[i // 2]
+            fams = src.families
+        else:
+            fams = (makers[i % len(makers)](i),)
+        reqs.append(IntegrationRequest.make(
+            fams, n_samples=n_samples, target_stderr=target_stderr))
+    return reqs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--n-fn", type=int, default=8,
+                    help="functions per requested family")
+    ap.add_argument("--samples", type=int, default=16384)
+    ap.add_argument("--target-stderr", type=float, default=None,
+                    help="serve to precision instead of a fixed budget")
+    ap.add_argument("--round-samples", type=int, default=8192)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="chunked JAX path instead of fused Pallas")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over all local devices")
+    ap.add_argument("--thread", action="store_true",
+                    help="run the async worker thread (submit/poll mode)")
+    args = ap.parse_args()
+
+    from repro.kernels import template
+    from repro.service import IntegrationEngine
+
+    mesh = None
+    if args.mesh:
+        import jax
+        from repro.launch.mesh import make_mesh_for
+        n = len(jax.devices())
+        mp = 2 if n % 2 == 0 and n > 1 else 1
+        mesh = make_mesh_for(model_parallel=mp)
+
+    engine = IntegrationEngine(
+        seed=args.seed, round_samples=args.round_samples,
+        use_kernel=not args.no_kernel, mesh=mesh)
+    reqs = demo_workload(
+        args.requests, n_fn=args.n_fn,
+        n_samples=None if args.target_stderr else args.samples,
+        target_stderr=args.target_stderr)
+
+    template.reset_launch_count()
+    t0 = time.time()
+    if args.thread:
+        engine.start()
+        tickets = [engine.submit(r) for r in reqs]
+        results = [engine.result(t, timeout=600.0) for t in tickets]
+        engine.stop()
+    else:
+        tickets = [engine.submit(r) for r in reqs]
+        while engine.step():
+            pass
+        results = [engine.poll(t) for t in tickets]
+    dt = time.time() - t0
+    launches = template.launch_count()
+
+    n_fn_total = sum(r.n_fn_total for r in results)
+    hits = sum(r.served_from_cache for r in results)
+    print(f"served {len(results)} requests ({n_fn_total} integrands) "
+          f"in {dt:.1f}s -> {len(results) / dt:.1f} req/s, "
+          f"{launches} kernel launches, {hits} pure cache hits")
+    print(f"engine: {engine.stats}")
+    print(f"cache:  {engine.cache.stats()}")
+    print(f"stragglers: {engine.watchdog.straggler_count}")
+    worst = max(float(r.stderrs.max()) for r in results)
+    print(f"worst stderr served: {worst:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+# Integration-as-a-service: the request-serving layer above the MC engine.
+#
+#   canonical  - deterministic canonicalization + content hashing of requests
+#   cache      - stderr-aware result cache with counter-stream top-up
+#   batcher    - cross-request coalescing into fused dimension buckets
+#   engine     - continuously-batching submit/poll worker with backpressure
+#   api        - request/response dataclasses and the blocking client
+
+from repro.service.api import (Backpressure, IntegrationClient,
+                               IntegrationRequest, IntegrationResult)
+from repro.service.cache import CacheEntry, ResultCache
+from repro.service.canonical import canonical_family, family_hash, spec_hash
+from repro.service.engine import EngineStats, IntegrationEngine
+
+__all__ = [
+    "Backpressure",
+    "CacheEntry",
+    "EngineStats",
+    "IntegrationClient",
+    "IntegrationEngine",
+    "IntegrationRequest",
+    "IntegrationResult",
+    "ResultCache",
+    "canonical_family",
+    "family_hash",
+    "spec_hash",
+]

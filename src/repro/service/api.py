@@ -1,0 +1,111 @@
+"""Public request/response surface of the integration service.
+
+A request names *what* to integrate (a list of
+:class:`~repro.core.integrand.IntegrandFamily`) and *how well*: a sample
+budget, a standard-error target, or both.  The engine decides everything
+else — batching, caching, counter-space placement, kernel dispatch.
+
+``IntegrationClient`` is the blocking convenience wrapper: it submits,
+drives the engine if no background worker is running, and returns the
+finished result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.integrand import IntegrandFamily, MultiFunctionSpec
+
+
+class Backpressure(RuntimeError):
+    """Raised by non-blocking submit when the pending table is full."""
+
+
+@dataclasses.dataclass(frozen=True)
+class IntegrationRequest:
+    """One client ask: evaluate these families to this precision.
+
+    Attributes:
+      families: the integrands; a ``MultiFunctionSpec`` is accepted too.
+      n_samples: minimum sample budget per function (quantized up to the
+        engine's round size).
+      target_stderr: serve once every function's standard error is at or
+        below this.  With both set, both must hold.
+      sampler: "mc" | "sobol" — selects the sample stream (and therefore
+        the cache entry: the two streams never mix).
+    """
+
+    families: tuple[IntegrandFamily, ...]
+    n_samples: int | None = None
+    target_stderr: float | None = None
+    sampler: str = "mc"
+
+    @classmethod
+    def make(cls, families: Sequence[IntegrandFamily] | MultiFunctionSpec,
+             *, n_samples: int | None = None,
+             target_stderr: float | None = None,
+             sampler: str = "mc") -> "IntegrationRequest":
+        if isinstance(families, MultiFunctionSpec):
+            families = families.families
+        families = tuple(f.validate() for f in families)
+        if not families:
+            raise ValueError("request needs at least one family")
+        if n_samples is None and target_stderr is None:
+            raise ValueError("request needs n_samples or target_stderr")
+        if n_samples is not None and n_samples <= 0:
+            raise ValueError("n_samples must be positive")
+        if target_stderr is not None and target_stderr <= 0:
+            raise ValueError("target_stderr must be positive")
+        if sampler not in ("mc", "sobol"):
+            raise ValueError(f"unknown sampler {sampler!r}")
+        return cls(families=families, n_samples=n_samples,
+                   target_stderr=target_stderr, sampler=sampler)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntegrationResult:
+    """Finished estimates, in the request's family-by-family order."""
+
+    means: np.ndarray            # (n_fn_total,)
+    stderrs: np.ndarray          # (n_fn_total,)
+    n_per_family: tuple[int, ...]  # samples accumulated per family stream
+    names: tuple[str, ...]
+    served_from_cache: bool      # True -> zero new launches were needed
+    ticket: int
+
+    @property
+    def n_fn_total(self) -> int:
+        return int(self.means.shape[0])
+
+
+class IntegrationClient:
+    """Blocking client over an :class:`~repro.service.engine.IntegrationEngine`.
+
+    When the engine runs a background worker, ``integrate`` just waits;
+    otherwise it drives ``engine.step()`` itself — handy for tests,
+    benchmarks and single-process batch jobs where determinism matters.
+    """
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def submit(self, families, **kwargs) -> int:
+        return self.engine.submit(IntegrationRequest.make(families, **kwargs))
+
+    def integrate(self, families, **kwargs) -> IntegrationResult:
+        ticket = self.submit(families, **kwargs)
+        return self.wait(ticket)
+
+    def wait(self, ticket: int, timeout: float | None = None) -> IntegrationResult:
+        if self.engine.running:
+            return self.engine.result(ticket, timeout=timeout)
+        while (res := self.engine.poll(ticket)) is None:
+            if not self.engine.step():
+                res = self.engine.poll(ticket)
+                if res is None:
+                    raise RuntimeError(f"ticket {ticket} cannot make progress")
+                return res
+        return res

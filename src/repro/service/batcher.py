@@ -1,0 +1,148 @@
+"""Cross-request coalescing into fused dimension buckets.
+
+The unit of work in the service is a **(canonical family, round)** pair:
+``round_samples`` samples of one cached stream, addressed purely by
+counters (key, fn_offset, round * round_samples).  This module takes the
+set of work items one engine wave produced — typically spanning many
+client requests at different cache fill levels — and evaluates them in
+as few kernel launches as possible:
+
+* items are grouped by ``(round_index, sampler)`` — every item in a
+  group shares the same sample window and therefore the same kernel
+  scalars;
+* each group's families are handed to the fused multi-family planner
+  (:mod:`repro.kernels.mc_eval.multi`), which buckets them by integrand
+  dimension and runs each bucket in ONE ``pallas_call`` — so one launch
+  serves every request that contributed a same-dimension family, exactly
+  mirroring the single-spec fusion of PR 1;
+* families whose form is not fusable fall back to the chunked JAX path,
+  one at a time (still counter-addressed, still cacheable).
+
+Evaluation is **side-effect free until the end of the wave**: all sums
+are computed first and deposited into the cache afterwards, in round
+order.  Deposits of rounds the cache already folded are skipped by the
+cache (a replayed or racing wave recomputes bit-identical sums), so a
+crash-and-restart of a wave (``run_with_restarts``) and concurrent
+``step()`` drivers are both safe.
+
+Fusion plans are cached per (entry set, sampler): the packed/concatenated
+bucket operands depend only on the families and their counter offsets,
+so a multi-round refinement re-launches the same plan with new scalars
+instead of rebuilding it every wave.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core import direct_mc
+from repro.core.direct_mc import SumsState
+from repro.core.integrand import MultiFunctionSpec
+from repro.service.cache import CacheEntry, ResultCache
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkItem:
+    """One round of one cached stream."""
+    chash: str
+    round_index: int
+    sampler: str
+
+
+class RoundBatcher:
+    """Coalesces work items into fused launches against one RNG key."""
+
+    def __init__(self, cache: ResultCache, key, *, use_kernel: bool = True,
+                 mesh=None, fn_axis: str = "model",
+                 sample_axes: Sequence[str] = ("data",), chunk: int = 8192):
+        self.cache = cache
+        self.key = key
+        self.use_kernel = bool(use_kernel)
+        self.mesh = mesh
+        self.fn_axis = fn_axis
+        self.sample_axes = tuple(sample_axes)
+        self.chunk = int(chunk)
+        self._plans: dict[tuple, object] = {}
+
+    # -- wave evaluation ------------------------------------------------------
+    def execute(self, items: Sequence[WorkItem]) -> int:
+        """Evaluate all items, then deposit; returns items executed.
+
+        Items are deduplicated (two requests wanting the same round of
+        the same stream cost one evaluation) and deposits happen only
+        after every group evaluated, keeping the wave restartable.
+        """
+        unique = sorted(set(items),
+                        key=lambda it: (it.round_index, it.sampler, it.chash))
+        groups: dict[tuple[int, str], list[WorkItem]] = {}
+        for it in unique:
+            groups.setdefault((it.round_index, it.sampler), []).append(it)
+
+        results: list[tuple[CacheEntry, int, SumsState]] = []
+        for (round_index, sampler) in sorted(groups):
+            batch = groups[(round_index, sampler)]
+            entries = [self.cache.get(it.chash) for it in batch]
+            for it, entry in zip(batch, entries):
+                if entry is None:
+                    raise KeyError(f"work item for unknown entry {it.chash}")
+            results.extend(
+                (entry, round_index, sums)
+                for entry, sums in self._eval_group(entries, round_index,
+                                                    sampler))
+
+        # in-order left fold: per entry, rounds arrive ascending because
+        # groups were processed in round order
+        for entry, round_index, sums in results:
+            self.cache.deposit(entry, round_index, sums)
+        return len(unique)
+
+    def _eval_group(self, entries: list[CacheEntry], round_index: int,
+                    sampler: str):
+        """One fused evaluation of same-round entries. No side effects."""
+        n = self.cache.round_samples
+        sample_offset = round_index * n
+        families = tuple(e.family for e in entries)
+        fn_offsets = [e.fn_offset for e in entries]
+        spec = MultiFunctionSpec(families=families)
+
+        fused: dict[int, SumsState] = {}
+        if self.use_kernel:
+            from repro.kernels.mc_eval import multi
+            plan_key = (tuple(e.chash for e in entries), sampler)
+            plan = self._plans.get(plan_key)
+            if plan is None:
+                if len(self._plans) >= 256:   # bound stale entry-set combos
+                    self._plans.clear()
+                plan = multi.plan_spec(spec, sampler=sampler,
+                                       fn_offsets=fn_offsets)
+                self._plans[plan_key] = plan
+            if self.mesh is not None:
+                fused = multi.sharded_eval_plan(
+                    plan, n, self.key, self.mesh, fn_axis=self.fn_axis,
+                    sample_axes=self.sample_axes,
+                    sample_offset=sample_offset)
+            else:
+                fused = multi.eval_plan(plan, n, self.key,
+                                        sample_offset=sample_offset)
+
+        out = []
+        for idx, entry in enumerate(entries):
+            if idx in fused:
+                sums = fused[idx]
+            elif self.mesh is not None:
+                sums, _ = direct_mc.sharded_family_sums(
+                    entry.family, n, self.key, self.mesh,
+                    fn_axis=self.fn_axis, sample_axes=self.sample_axes,
+                    fn_offset=entry.fn_offset, sample_offset=sample_offset,
+                    chunk=self.chunk, use_kernel=self.use_kernel,
+                    sampler=sampler)
+                sums = SumsState(s1=sums.s1[: entry.n_fn],
+                                 s2=sums.s2[: entry.n_fn], n=sums.n)
+            else:
+                sums = direct_mc.family_sums(
+                    entry.family, n, self.key, fn_offset=entry.fn_offset,
+                    sample_offset=sample_offset, chunk=self.chunk,
+                    use_kernel=self.use_kernel, sampler=sampler)
+            out.append((entry, sums))
+        return out

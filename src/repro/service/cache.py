@@ -1,0 +1,240 @@
+"""Stderr-aware result cache with counter-stream top-up.
+
+A cache entry stores the *raw accumulators* ``(s1, s2, n)`` of a
+canonical family, not the finished estimate.  That choice buys two
+things:
+
+* **hit** — when the cached sample count already yields a standard error
+  at or below the requested precision, the result is finalized straight
+  from the accumulators: zero new kernel launches;
+* **top-up** — when it does not, the engine *resumes* the counter-based
+  sample stream at ``sample_offset = n`` instead of recomputing from
+  scratch: the cached work is never wasted, and the merged accumulators
+  are bit-identical to an uninterrupted run of the same total budget
+  (asserted by ``tests/core/test_resume.py``).
+
+Bit-identity needs a fixed association order for the f32 merges, so all
+accumulation is quantized into fixed-size **rounds** of
+``round_samples`` each, deposited strictly in order and left-folded one
+round at a time — the same fold an uninterrupted service evaluation
+performs.  A replayed round (same index deposited twice — restarted
+waves, racing wave drivers) is skipped, which is exact: the counters
+make any recomputation of a round bit-identical to the folded one.
+``rounds_needed`` converts a stderr target into additional rounds using
+the cached variance estimate (stderr shrinks as 1/sqrt(n)).
+
+Entries also own the family's **counter-space offset**: the service
+allocates each distinct integral a disjoint global function-id range (a
+bump allocator over the 2^24-id space of ``rng.DIM_STRIDE``), so every
+Threefry counter of every cached stream stays addressable and collision
+free no matter which batch the family first arrived in.
+
+Concurrency: an entry's mutable accumulator state lives in ONE tuple,
+swapped atomically under the cache lock by :meth:`deposit`; readers
+(``stderr``/``finalize``/``meets``) work from a single snapshot, so a
+submit racing a worker deposit sees either the old or the new round —
+never half of one.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+import numpy as np
+
+from repro.core import direct_mc
+from repro.core.direct_mc import SumsState
+from repro.core.integrand import IntegrandFamily
+
+# id space addressable by the counter layout: fn_id * DIM_STRIDE + dim
+# must fit u32, so fn_id < 2**24 (DIM_STRIDE = 256)
+_ID_SPACE = 1 << 24
+
+
+class CacheEntry:
+    """Accumulated sample stream of one canonical family."""
+
+    def __init__(self, chash: str, family: IntegrandFamily, fn_offset: int):
+        self.chash = chash
+        self.family = family         # canonical (compactified) representative
+        self.fn_offset = fn_offset   # allocated global function-id range start
+        self.hits = 0
+        n_fn = family.n_fn
+        # box volume cached as numpy so the precision checks the engine
+        # runs under its lock every wave stay off the device
+        from repro.core.domains import box_volume
+        self._vol = np.asarray(box_volume(family.domains), np.float32)
+        # (s1, s2, n, rounds_done): replaced wholesale, never mutated
+        self._state = (np.zeros(n_fn, np.float32),
+                       np.zeros(n_fn, np.float32), 0, 0)
+
+    @property
+    def n_fn(self) -> int:
+        return self.family.n_fn
+
+    def snapshot(self) -> tuple[np.ndarray, np.ndarray, int, int]:
+        """One consistent (s1, s2, n, rounds_done) view."""
+        return self._state
+
+    @property
+    def s1(self) -> np.ndarray:
+        return self._state[0]
+
+    @property
+    def s2(self) -> np.ndarray:
+        return self._state[1]
+
+    @property
+    def n(self) -> int:
+        return self._state[2]
+
+    @property
+    def rounds_done(self) -> int:
+        return self._state[3]
+
+    def sums(self) -> SumsState:
+        s1, s2, n, _ = self.snapshot()
+        return SumsState(s1=s1, s2=s2, n=np.float32(n))
+
+    def finalize(self) -> direct_mc.MCResult:
+        s1, s2, n, _ = self.snapshot()
+        return direct_mc.finalize(
+            self.family, SumsState(s1=s1, s2=s2, n=np.float32(n)))
+
+    def stderr(self) -> np.ndarray:
+        """Current per-function standard error (inf before any round)."""
+        return self._stderr_of(self.snapshot())
+
+    def _stderr_of(self, state) -> np.ndarray:
+        # numpy mirror of direct_mc.finalize's stderr (hot path: called
+        # per pending request per wave, often under the engine lock)
+        s1, s2, n, _ = state
+        if n == 0:
+            return np.full(self.n_fn, np.inf, np.float32)
+        nf = np.float32(n)
+        mean_f = s1 / nf
+        var_f = np.maximum(s2 / nf - np.square(mean_f), np.float32(0.0))
+        return self._vol * np.sqrt(var_f / nf)
+
+
+class ResultCache:
+    """In-memory cache of canonical-family accumulators (thread-safe)."""
+
+    def __init__(self, round_samples: int = 65536):
+        if round_samples <= 0:
+            raise ValueError("round_samples must be positive")
+        self.round_samples = int(round_samples)
+        self._entries: dict[str, CacheEntry] = {}
+        self._next_id = 0
+        self._lock = threading.Lock()
+
+    # -- lookup / allocation --------------------------------------------------
+    def get(self, chash: str) -> CacheEntry | None:
+        return self._entries.get(chash)
+
+    def get_or_allocate(self, chash: str, family: IntegrandFamily) -> CacheEntry:
+        """Existing entry for ``chash``, or a fresh one with its own
+        counter-space range.  ``family`` must already be canonical."""
+        with self._lock:
+            entry = self._entries.get(chash)
+            if entry is not None:
+                entry.hits += 1
+                return entry
+            n_fn = family.n_fn
+            if self._next_id + n_fn > _ID_SPACE:
+                raise RuntimeError(
+                    f"counter id space exhausted ({_ID_SPACE} function ids)")
+            entry = CacheEntry(chash=chash, family=family,
+                               fn_offset=self._next_id)
+            self._next_id += n_fn
+            self._entries[chash] = entry
+            return entry
+
+    # -- precision logic ------------------------------------------------------
+    def rounds_for_budget(self, n_samples: int) -> int:
+        """Rounds needed to cover an ``n_samples`` budget (quantized up)."""
+        return max(1, math.ceil(int(n_samples) / self.round_samples))
+
+    def meets(self, entry: CacheEntry, *, target_stderr: float | None,
+              n_samples: int | None) -> bool:
+        """Does the cached stream already satisfy the request?"""
+        state = entry.snapshot()
+        if state[2] == 0:
+            return False
+        if n_samples is not None and state[3] < self.rounds_for_budget(n_samples):
+            return False
+        if target_stderr is not None and not np.all(
+                entry._stderr_of(state) <= target_stderr):
+            return False
+        return True
+
+    def rounds_needed(self, entry: CacheEntry, *, target_stderr: float | None,
+                      n_samples: int | None, max_rounds: int = 1 << 16) -> int:
+        """Additional rounds to schedule for this entry (0 = cache hit).
+
+        Budget requests are exact; stderr targets are predicted from the
+        cached variance (stderr ~ 1/sqrt(n)), with one bootstrap round
+        when no variance estimate exists yet.  The engine re-checks after
+        every wave, so an under-prediction just schedules another wave.
+        """
+        state = entry.snapshot()
+        _, _, n, rounds_done = state
+        need = 0
+        if n_samples is not None:
+            need = max(need, self.rounds_for_budget(n_samples) - rounds_done)
+        if target_stderr is not None:
+            if n == 0:
+                need = max(need, 1)
+            else:
+                err = entry._stderr_of(state)
+                if np.any(err > target_stderr):
+                    # n_target / n_now = (err_now / target)^2, per function
+                    ratio = float(np.max(err / max(target_stderr, 1e-30))) ** 2
+                    total = math.ceil(ratio * n / self.round_samples)
+                    need = max(need, total - rounds_done)
+        return int(min(max(need, 0), max_rounds))
+
+    # -- deposits -------------------------------------------------------------
+    def deposit(self, entry: CacheEntry, round_index: int,
+                sums: SumsState) -> bool:
+        """Fold one round of sums into the entry, strictly in order.
+
+        Returns True when the round was folded, False when it was
+        already present (a replayed wave or a racing wave driver
+        recomputed it — bit-identical by counter addressing, so skipping
+        is exact).  A round *beyond* the fold frontier is a planner bug
+        and raises: folding it would skip samples.
+        """
+        with self._lock:
+            s1, s2, n, done = entry._state
+            if round_index < done:
+                return False
+            if round_index > done:
+                raise ValueError(
+                    f"deposit gap: round {round_index} into entry at "
+                    f"round {done}")
+            entry._state = (
+                np.asarray(s1 + np.asarray(sums.s1, np.float32)),
+                np.asarray(s2 + np.asarray(sums.s2, np.float32)),
+                n + int(np.asarray(sums.n)),
+                done + 1,
+            )
+            return True
+
+    # -- stats ----------------------------------------------------------------
+    @property
+    def n_entries(self) -> int:
+        return len(self._entries)
+
+    @property
+    def total_samples(self) -> int:
+        return sum(e.n for e in self._entries.values())
+
+    def stats(self) -> dict:
+        return {
+            "entries": self.n_entries,
+            "function_ids_allocated": self._next_id,
+            "total_samples": self.total_samples,
+            "hits": sum(e.hits for e in self._entries.values()),
+        }

@@ -1,0 +1,339 @@
+"""The continuously-batching integration engine (submit/poll worker).
+
+Life of a request:
+
+1. **submit** — each family is canonicalized and content-hashed
+   (:mod:`repro.service.canonical`); the hash (plus sampler) addresses a
+   :class:`~repro.service.cache.CacheEntry`, allocated on first sight
+   with its own counter-space range.  If every entry already meets the
+   requested precision the result is finalized immediately — a pure
+   cache hit, zero launches.  Otherwise the request parks in the pending
+   table (bounded: submits beyond ``max_pending`` block, or raise
+   :class:`~repro.service.api.Backpressure` when non-blocking).
+
+2. **wave** (``step``) — the engine sweeps the pending table, asks the
+   cache how many more rounds each entry needs, and emits deduplicated
+   ``(entry, round)`` work items — two clients scanning overlapping
+   parameter grids share evaluations here.  The
+   :class:`~repro.service.batcher.RoundBatcher` coalesces the wave into
+   fused dimension-bucket launches.  Each wave runs under the
+   :class:`~repro.distributed.fault_tolerance.StepWatchdog` and inside
+   :func:`~repro.distributed.fault_tolerance.run_with_restarts`: because
+   work is counter-addressed and deposits happen only at wave end, a
+   crashed wave replays identically.
+
+3. **complete** — requests whose entries all meet their precision are
+   finalized from the cache accumulators and their tickets released.
+
+``start()`` spawns the worker thread for async submit/poll service;
+``step()`` drives the same loop synchronously (tests, batch jobs).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import rng as rng_lib
+from repro.distributed.fault_tolerance import StepWatchdog, run_with_restarts
+from repro.service.api import (Backpressure, IntegrationRequest,
+                               IntegrationResult)
+from repro.service.batcher import RoundBatcher, WorkItem
+from repro.service.cache import CacheEntry, ResultCache
+from repro.service.canonical import canonical_family, family_hash
+
+
+@dataclasses.dataclass
+class EngineStats:
+    submitted: int = 0
+    served: int = 0
+    cache_hits: int = 0        # requests served with zero new rounds
+    waves: int = 0
+    items_executed: int = 0
+    items_requested: int = 0   # before cross-request dedup
+    restarts: int = 0
+
+    @property
+    def items_deduped(self) -> int:
+        return self.items_requested - self.items_executed
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    request: IntegrationRequest
+    entries: list[CacheEntry]
+    event: threading.Event
+    result: IntegrationResult | None = None
+    new_rounds_scheduled: bool = False
+
+
+class IntegrationEngine:
+    """Batching, caching, fault-tolerant integral server."""
+
+    def __init__(self, *, seed: int = 0, round_samples: int = 65536,
+                 use_kernel: bool = True, mesh=None, fn_axis: str = "model",
+                 sample_axes: Sequence[str] | None = None,
+                 chunk: int = 8192, max_pending: int = 256,
+                 max_rounds_per_wave: int = 8, max_restarts: int = 2,
+                 max_retained_results: int = 4096,
+                 watchdog: StepWatchdog | None = None):
+        self.seed = int(seed)
+        self.key = rng_lib.fold_key(self.seed, 0)
+        self.cache = ResultCache(round_samples=round_samples)
+        if sample_axes is None and mesh is not None:
+            sample_axes = tuple(a for a in mesh.axis_names if a != fn_axis)
+        if mesh is not None:
+            sample_par = int(np.prod([mesh.shape[a] for a in sample_axes]))
+            # the unfused fallback (sharded_family_sums) rounds the budget
+            # up to per-shard multiples; an inexact split would draw
+            # overlapping counters across consecutive cache rounds
+            if round_samples % sample_par:
+                raise ValueError(
+                    f"round_samples={round_samples} must divide evenly over "
+                    f"the {sample_par} sample-axis shards of the mesh")
+        self.batcher = RoundBatcher(
+            self.cache, self.key, use_kernel=use_kernel, mesh=mesh,
+            fn_axis=fn_axis, sample_axes=sample_axes or ("data",),
+            chunk=chunk)
+        self.max_pending = int(max_pending)
+        self.max_rounds_per_wave = int(max_rounds_per_wave)
+        self.max_restarts = int(max_restarts)
+        self.max_retained_results = int(max_retained_results)
+        self.watchdog = watchdog if watchdog is not None else StepWatchdog()
+        self.stats = EngineStats()
+
+        self._pending: dict[int, _Pending] = {}
+        # FIFO-bounded: a continuously-serving engine must not retain
+        # every result ever served; clients that care call release()
+        self._results: collections.OrderedDict[int, IntegrationResult] = \
+            collections.OrderedDict()
+        self._next_ticket = 0
+        self._lock = threading.RLock()
+        self._work_cv = threading.Condition(self._lock)
+        self._space_cv = threading.Condition(self._lock)
+        self._worker: threading.Thread | None = None
+        self._stop = False
+
+    # -- submit / poll --------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    def submit(self, request: IntegrationRequest, *, block: bool = True,
+               timeout: float | None = None) -> int:
+        """Register a request; returns a ticket for :meth:`poll`/:meth:`result`.
+
+        Pure cache hits complete inline (no waiting, no launches, and no
+        pending-table space needed).  Otherwise, when the pending table
+        is full, blocks until space frees up — or raises
+        :class:`Backpressure` with ``block=False``.  A rejected submit
+        allocates nothing: counter-space ranges are only consumed once
+        the request is accepted.
+        """
+        canon_fams = []
+        for fam in request.families:
+            canon = canonical_family(fam)
+            chash = f"{family_hash(canon, canonicalize=False)}:{request.sampler}"
+            canon_fams.append((chash, canon))
+
+        # hit path needs no allocation: all entries must already exist
+        peek = [self.cache.get(chash) for chash, _ in canon_fams]
+        if all(e is not None for e in peek):
+            req = request
+            if all(self.cache.meets(e, target_stderr=req.target_stderr,
+                                    n_samples=req.n_samples) for e in peek):
+                with self._lock:
+                    ticket = self._new_ticket()
+                    pend = _Pending(ticket=ticket, request=request,
+                                    entries=list(peek),
+                                    event=threading.Event())
+                    self.stats.cache_hits += 1
+                    self._finish(pend, served_from_cache=True)
+                return ticket
+
+        with self._lock:
+            while len(self._pending) >= self.max_pending:
+                if not block:
+                    raise Backpressure(
+                        f"{len(self._pending)} requests pending "
+                        f"(max_pending={self.max_pending})")
+                if not self._space_cv.wait(timeout=timeout):
+                    raise Backpressure("timed out waiting for pending space")
+            entries = [self.cache.get_or_allocate(chash, canon)
+                       for chash, canon in canon_fams]
+            ticket = self._new_ticket()
+            pend = _Pending(ticket=ticket, request=request, entries=entries,
+                            event=threading.Event())
+            if self._meets(pend):     # became satisfiable while we waited
+                self.stats.cache_hits += 1
+                self._finish(pend, served_from_cache=True)
+                return ticket
+            self._pending[ticket] = pend
+            self._work_cv.notify_all()
+        return ticket
+
+    def _new_ticket(self) -> int:
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.stats.submitted += 1
+        return ticket
+
+    def poll(self, ticket: int) -> IntegrationResult | None:
+        """Finished result for ``ticket``, or None while in flight.
+
+        Results are retained FIFO up to ``max_retained_results``;
+        long-lived clients should :meth:`release` tickets they are done
+        with rather than rely on retention.
+        """
+        with self._lock:
+            return self._results.get(ticket)
+
+    def release(self, ticket: int) -> None:
+        """Drop a finished result the client no longer needs."""
+        with self._lock:
+            self._results.pop(ticket, None)
+
+    def result(self, ticket: int, timeout: float | None = None) -> IntegrationResult:
+        """Block until ``ticket`` finishes (worker thread must be running
+        or another thread driving :meth:`step`)."""
+        with self._lock:
+            res = self._results.get(ticket)
+            if res is not None:
+                return res
+            pend = self._pending.get(ticket)
+        if pend is None:
+            raise KeyError(f"unknown ticket {ticket}")
+        if not pend.event.wait(timeout=timeout):
+            raise TimeoutError(f"ticket {ticket} still pending")
+        return pend.result
+
+    # -- the wave loop --------------------------------------------------------
+    def step(self) -> bool:
+        """Run one batching wave synchronously.
+
+        Returns True when work was executed, False when the pending
+        table made no progress (empty or already satisfiable).
+        """
+        with self._lock:
+            items = self._plan_wave()
+        if not items:
+            with self._lock:
+                self._complete_ready()
+            return False
+
+        def wave(attempt: int) -> int:
+            if attempt:
+                with self._lock:
+                    self.stats.restarts += 1
+            with self.watchdog:
+                return self.batcher.execute(items)
+
+        executed = run_with_restarts(wave, max_restarts=self.max_restarts)
+        with self._lock:
+            self.stats.waves += 1
+            self.stats.items_executed += executed
+            self._complete_ready()
+        return True
+
+    def _plan_wave(self) -> list[WorkItem]:
+        items: list[WorkItem] = []
+        seen: set[WorkItem] = set()
+        for pend in self._pending.values():
+            req = pend.request
+            for entry in pend.entries:
+                need = self.cache.rounds_needed(
+                    entry, target_stderr=req.target_stderr,
+                    n_samples=req.n_samples,
+                    max_rounds=self.max_rounds_per_wave)
+                if need:
+                    pend.new_rounds_scheduled = True
+                for r in range(entry.rounds_done, entry.rounds_done + need):
+                    it = WorkItem(chash=entry.chash, round_index=r,
+                                  sampler=req.sampler)
+                    self.stats.items_requested += 1
+                    if it not in seen:
+                        seen.add(it)
+                        items.append(it)
+        return items
+
+    def _meets(self, pend: _Pending) -> bool:
+        req = pend.request
+        return all(
+            self.cache.meets(e, target_stderr=req.target_stderr,
+                             n_samples=req.n_samples)
+            for e in pend.entries)
+
+    def _complete_ready(self) -> None:
+        done = [p for p in self._pending.values() if self._meets(p)]
+        for pend in done:
+            del self._pending[pend.ticket]
+            self._finish(pend,
+                         served_from_cache=not pend.new_rounds_scheduled)
+        if done:
+            self._space_cv.notify_all()
+
+    def _finish(self, pend: _Pending, *, served_from_cache: bool) -> None:
+        means, errs = [], []
+        for entry in pend.entries:
+            res = entry.finalize()
+            means.append(np.asarray(res.mean))
+            errs.append(np.asarray(res.stderr))
+        pend.result = IntegrationResult(
+            means=np.concatenate(means), stderrs=np.concatenate(errs),
+            n_per_family=tuple(e.n for e in pend.entries),
+            names=tuple(f.name for f in pend.request.families),
+            served_from_cache=served_from_cache, ticket=pend.ticket)
+        self._results[pend.ticket] = pend.result
+        while len(self._results) > self.max_retained_results:
+            self._results.popitem(last=False)
+        self.stats.served += 1
+        pend.event.set()
+
+    # -- background worker ----------------------------------------------------
+    def start(self) -> None:
+        """Spawn the worker thread (idempotent)."""
+        with self._lock:
+            if self.running:
+                return
+            self._stop = False
+            self._worker = threading.Thread(
+                target=self._run, name="integration-engine", daemon=True)
+            self._worker.start()
+
+    def stop(self, timeout: float | None = 30.0) -> None:
+        with self._lock:
+            self._stop = True
+            self._work_cv.notify_all()
+            worker = self._worker
+        if worker is not None:
+            worker.join(timeout=timeout)
+            if worker.is_alive():
+                # mid-wave; keep the handle so running stays True and a
+                # start() cannot spawn a second concurrent worker
+                raise TimeoutError(
+                    "worker still executing a wave; it will exit at the "
+                    "wave boundary (retry stop())")
+            self._worker = None
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Block until the pending table is empty (worker running)."""
+        events = []
+        with self._lock:
+            events = [p.event for p in self._pending.values()]
+        for ev in events:
+            if not ev.wait(timeout=timeout):
+                raise TimeoutError("pending requests did not drain")
+
+    def _run(self) -> None:
+        while True:
+            with self._lock:
+                while not self._pending and not self._stop:
+                    self._work_cv.wait(timeout=0.5)
+                if self._stop:
+                    return
+            self.step()

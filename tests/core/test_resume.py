@@ -46,6 +46,55 @@ def test_checkpoint_files_atomic(zmc, tmp_path):
     assert not any(f.endswith(".tmp.npz") for f in files), files
 
 
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_cache_topup_bit_identical(use_kernel):
+    """Resuming from cached (s1, s2, n) == uninterrupted run, bitwise.
+
+    The service cache quantizes budgets into fixed rounds and left-folds
+    deposits in order, so a topped-up stream and an uninterrupted stream
+    perform the *same* f32 additions — not merely statistically equal.
+    """
+    from repro.service import IntegrationClient, IntegrationEngine
+
+    def engine():
+        return IntegrationEngine(seed=7, round_samples=4096,
+                                 use_kernel=use_kernel)
+
+    warm = IntegrationClient(engine())
+    first = warm.integrate([harmonic_family(6, 3)], n_samples=4096)
+    topped = warm.integrate([harmonic_family(6, 3)], n_samples=3 * 4096)
+    assert topped.n_per_family == (3 * 4096,)
+
+    cold = IntegrationClient(engine()).integrate(
+        [harmonic_family(6, 3)], n_samples=3 * 4096)
+    np.testing.assert_array_equal(topped.means, cold.means)
+    np.testing.assert_array_equal(topped.stderrs, cold.stderrs)
+    # and the first answer really was served from the shared stream
+    assert not np.array_equal(first.means, topped.means)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_cache_topup_matches_resumable_driver(use_kernel):
+    """Service accumulation == the checkpointed evaluate_resumable fold.
+
+    Both paths left-fold identical per-round sums (same counters, same
+    round boundaries), so the service's topped-up stream is bit-identical
+    to the fault-tolerant driver's checkpoint/restart stream.
+    """
+    from repro.service import IntegrationClient, IntegrationEngine
+
+    cli = IntegrationClient(IntegrationEngine(seed=7, round_samples=4096,
+                                              use_kernel=use_kernel))
+    cli.integrate([harmonic_family(6, 3)], n_samples=4096)
+    topped = cli.integrate([harmonic_family(6, 3)], n_samples=3 * 4096)
+
+    zmc = ZMCMultiFunctions([harmonic_family(6, 3)], n_samples=3 * 4096,
+                            seed=7, use_kernel=use_kernel)
+    driver = zmc.evaluate_resumable(rounds=3)
+    np.testing.assert_array_equal(topped.means, driver.means[0])
+    np.testing.assert_array_equal(topped.stderrs, driver.stderrs[0])
+
+
 def test_work_queue_reissue():
     from repro.distributed.fault_tolerance import WorkQueue
     q = WorkQueue(total_samples=100, chunk=30)

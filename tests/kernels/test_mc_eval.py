@@ -108,6 +108,44 @@ def test_sobol_kernel_vs_engine(n_fn, dim):
                                rtol=1e-4, atol=1e-2)
 
 
+@pytest.mark.parametrize("name", ["oscillatory", "corner_peak"])
+@pytest.mark.parametrize("dim", [2, 4])
+def test_genz_kernel_forms_vs_engine(name, dim):
+    """Registered Genz forms run the fused kernel == chunked JAX path."""
+    from repro.core import genz
+    fam, _ = genz.ALL[name](6, dim)
+    assert fam.kernel is not None
+    n = S_BLK + 100
+    kq = family_sums(fam, n, KEY, use_kernel=True)
+    eq = family_sums(fam, n, KEY, use_kernel=False, chunk=S_BLK)
+    np.testing.assert_allclose(np.asarray(kq.s1), np.asarray(eq.s1),
+                               rtol=5e-5, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(kq.s2), np.asarray(eq.s2),
+                               rtol=5e-5, atol=5e-3)
+
+
+@pytest.mark.parametrize("name", ["oscillatory", "corner_peak"])
+def test_genz_kernel_estimates_accurate(name):
+    """Kernel-path Genz estimates hit the known closed forms."""
+    from repro.core import genz
+    fam, exact = genz.ALL[name](6, 3)
+    res = finalize(fam, family_sums(fam, 8 * S_BLK, KEY, use_kernel=True))
+    assert np.all(np.abs(np.asarray(res.mean) - exact)
+                  <= 5 * np.asarray(res.stderr) + 1e-4)
+
+
+def test_genz_families_fuse_into_buckets():
+    """Grid-scan service workloads stay on the fused kernel path."""
+    from repro.core import genz
+    from repro.core.integrand import MultiFunctionSpec
+    from repro.kernels.mc_eval import multi
+    fams = [genz.oscillatory(5, 3)[0], genz.corner_peak(4, 3)[0],
+            harmonic_family(3, 3)]
+    plan = multi.plan_spec(MultiFunctionSpec.from_families(fams))
+    assert not plan.unfused
+    assert plan.n_launches == 1       # one dim -> one fused launch
+
+
 def test_sobol_kernel_estimates_accurate():
     from repro.core import harmonic_analytic
     fam = harmonic_family(8, 4)

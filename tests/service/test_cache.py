@@ -1,0 +1,84 @@
+"""Result cache: allocation, precision logic, in-order deposits."""
+
+import numpy as np
+import pytest
+
+from repro.core import family_sums, harmonic_family
+from repro.core import rng as rng_lib
+from repro.service.cache import ResultCache
+
+KEY = rng_lib.fold_key(3, 0)
+R = 4096
+
+
+@pytest.fixture
+def cache():
+    return ResultCache(round_samples=R)
+
+
+def _round(entry, idx):
+    return family_sums(entry.family, R, KEY, fn_offset=entry.fn_offset,
+                       sample_offset=idx * R)
+
+
+def test_allocator_disjoint_counter_ranges(cache):
+    a = cache.get_or_allocate("a", harmonic_family(10, 3))
+    b = cache.get_or_allocate("b", harmonic_family(7, 2))
+    c = cache.get_or_allocate("a", harmonic_family(10, 3))
+    assert c is a                      # same hash -> same entry
+    ra = range(a.fn_offset, a.fn_offset + a.n_fn)
+    rb = range(b.fn_offset, b.fn_offset + b.n_fn)
+    assert not set(ra) & set(rb)
+
+
+def test_empty_entry_never_meets(cache):
+    e = cache.get_or_allocate("x", harmonic_family(4, 2))
+    assert np.all(np.isinf(e.stderr()))
+    assert not cache.meets(e, target_stderr=None, n_samples=1)
+    assert not cache.meets(e, target_stderr=1e9, n_samples=None)
+    # stderr target with no variance estimate -> one bootstrap round
+    assert cache.rounds_needed(e, target_stderr=1e-3, n_samples=None) == 1
+
+
+def test_budget_quantized_up(cache):
+    e = cache.get_or_allocate("x", harmonic_family(4, 2))
+    assert cache.rounds_needed(e, target_stderr=None, n_samples=1) == 1
+    assert cache.rounds_needed(e, target_stderr=None, n_samples=R + 1) == 2
+    cache.deposit(e, 0, _round(e, 0))
+    assert cache.meets(e, target_stderr=None, n_samples=R)
+    assert not cache.meets(e, target_stderr=None, n_samples=R + 1)
+
+
+def test_stderr_prediction_converges(cache):
+    e = cache.get_or_allocate("x", harmonic_family(4, 2))
+    cache.deposit(e, 0, _round(e, 0))
+    target = float(e.stderr().max()) / 2.0
+    # stderr ~ 1/sqrt(n): halving needs ~4x the samples
+    need = cache.rounds_needed(e, target_stderr=target, n_samples=None)
+    assert 2 <= need <= 6
+    for r in range(1, 1 + need):
+        cache.deposit(e, r, _round(e, r))
+    assert cache.meets(e, target_stderr=1.1 * target, n_samples=None)
+
+
+def test_deposit_ordering(cache):
+    e = cache.get_or_allocate("x", harmonic_family(4, 2))
+    sums = _round(e, 0)
+    with pytest.raises(ValueError, match="gap"):
+        cache.deposit(e, 1, sums)          # skipping samples is a bug
+    assert cache.deposit(e, 0, sums)
+    # replay of a folded round (restarted wave / racing driver): exact
+    # no-op, because a recomputed round is bit-identical by counters
+    assert not cache.deposit(e, 0, sums)
+    assert e.n == R and e.rounds_done == 1
+
+
+def test_topup_equals_single_shot_estimate(cache):
+    """Two deposited rounds == one family_sums call over both windows."""
+    e = cache.get_or_allocate("x", harmonic_family(6, 3))
+    cache.deposit(e, 0, _round(e, 0))
+    cache.deposit(e, 1, _round(e, 1))
+    ref = family_sums(e.family, 2 * R, KEY, fn_offset=e.fn_offset)
+    np.testing.assert_allclose(e.s1, np.asarray(ref.s1), rtol=1e-6)
+    np.testing.assert_allclose(e.s2, np.asarray(ref.s2), rtol=1e-6)
+    assert e.n == 2 * R

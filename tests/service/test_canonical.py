@@ -1,0 +1,70 @@
+"""Canonicalization: equivalent requests hash together, distinct don't."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import abs_sum_family, gaussian_family, harmonic_family
+from repro.core.integrand import IntegrandFamily
+from repro.service.canonical import family_hash, spec_hash
+
+
+def test_independent_constructions_dedupe():
+    # two clients building "the same integral" from scratch
+    assert family_hash(harmonic_family(8, 3)) == family_hash(harmonic_family(8, 3))
+    assert (family_hash(gaussian_family(4, 2))
+            == family_hash(gaussian_family(4, 2)))
+
+
+def test_name_is_cosmetic():
+    a = harmonic_family(5, 2)
+    b = harmonic_family(5, 2)
+    b.name = "client-7-scan"
+    assert family_hash(a) == family_hash(b)
+
+
+def test_content_changes_hash():
+    base = harmonic_family(8, 3)
+    assert family_hash(base) != family_hash(harmonic_family(9, 3))   # size
+    assert family_hash(base) != family_hash(harmonic_family(8, 4))   # dim
+    assert family_hash(base) != family_hash(
+        harmonic_family(8, 3, a=2 * np.ones(8, np.float32)))         # params
+    assert family_hash(base) != family_hash(
+        harmonic_family(8, 3, lo=-1.0))                              # domain
+
+
+def test_dtype_normalized_to_engine_precision():
+    c32 = np.linspace(0.5, 2.0, 6).astype(np.float32)
+    a = abs_sum_family(6, 2, c32)
+    b = abs_sum_family(6, 2, c32.astype(np.float64))
+    assert family_hash(a) == family_hash(b)
+
+
+def test_closure_values_participate():
+    def make(scale):
+        return IntegrandFamily(
+            fn=lambda x, p: scale * jnp.sum(x * p["w"], -1),
+            params={"w": jnp.ones((3, 2))},
+            domains=jnp.broadcast_to(jnp.asarray([0.0, 1.0]), (3, 2, 2)),
+        ).validate()
+
+    assert family_hash(make(1.0)) == family_hash(make(1.0))
+    assert family_hash(make(1.0)) != family_hash(make(2.0))
+
+
+def test_compactification_canonical():
+    # an infinite-domain ask and its pre-compactified twin are one integral
+    inf_dom = np.broadcast_to(
+        np.asarray([-np.inf, np.inf], np.float32), (2, 2, 2)).copy()
+    fam = IntegrandFamily(
+        fn=lambda x, p: jnp.exp(-jnp.sum(jnp.square(x), -1)) * p["c"],
+        params={"c": jnp.ones(2)},
+        domains=jnp.asarray(inf_dom),
+    ).validate()
+    assert family_hash(fam) == family_hash(fam.compactified())
+
+
+def test_spec_hash_order_sensitive():
+    a, b = harmonic_family(4, 2), gaussian_family(3, 2)
+    assert spec_hash([a, b]) != spec_hash([b, a])
+    assert spec_hash([a, b]) == spec_hash([a, b])
+    assert spec_hash([a, b], sampler="sobol") != spec_hash([a, b])

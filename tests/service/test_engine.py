@@ -1,0 +1,240 @@
+"""Engine behavior: batching, dedupe, warm cache, backpressure, faults."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (abs_sum_family, gaussian_family, harmonic_analytic,
+                        harmonic_family)
+from repro.kernels import template
+from repro.service import (Backpressure, IntegrationClient, IntegrationEngine,
+                           IntegrationRequest)
+
+R = 4096
+
+
+def make_engine(**kw):
+    kw.setdefault("round_samples", R)
+    return IntegrationEngine(seed=0, **kw)
+
+
+def mixed_requests(n=8, n_fn=4, budget=R):
+    makers = [lambda d: harmonic_family(n_fn, d),
+              lambda d: gaussian_family(n_fn, d),
+              lambda d: abs_sum_family(n_fn, d, np.ones(n_fn))]
+    return [IntegrationRequest.make([makers[i % 3](2 + i % 3)],
+                                    n_samples=budget) for i in range(n)]
+
+
+def test_batched_fewer_launches_than_sequential():
+    reqs = mixed_requests(8)
+    engine = make_engine()
+    template.reset_launch_count()
+    tickets = [engine.submit(r) for r in reqs]
+    while engine.step():
+        pass
+    batched = template.launch_count()
+    results = [engine.poll(t) for t in tickets]
+    assert all(r is not None for r in results)
+    # 8 single-family requests over dims {2,3,4} coalesce to 3 buckets
+    assert batched < len(reqs)
+    assert batched == 3
+    # estimates are real: harmonic requests match the closed form
+    for req, res in zip(reqs, results):
+        if "harmonic" in res.names[0]:
+            exact = harmonic_analytic(req.families[0].n_fn, req.families[0].dim)
+            assert np.all(np.abs(res.means - exact)
+                          <= 6 * res.stderrs + 1e-6)
+
+
+def test_dedupe_across_clients():
+    engine = make_engine()
+    fams = lambda: [harmonic_family(4, 3)]
+    t1 = engine.submit(IntegrationRequest.make(fams(), n_samples=2 * R))
+    t2 = engine.submit(IntegrationRequest.make(fams(), n_samples=2 * R))
+    while engine.step():
+        pass
+    r1, r2 = engine.poll(t1), engine.poll(t2)
+    np.testing.assert_array_equal(r1.means, r2.means)
+    assert engine.stats.items_requested > engine.stats.items_executed
+    assert engine.cache.n_entries == 1
+
+
+def test_warm_cache_zero_launches():
+    engine = make_engine()
+    cli = IntegrationClient(engine)
+    cli.integrate([harmonic_family(4, 3)], n_samples=R)
+    template.reset_launch_count()
+    res = cli.integrate([harmonic_family(4, 3)], n_samples=R)
+    assert template.launch_count() == 0
+    assert res.served_from_cache
+    # looser precision is also a pure hit
+    res2 = cli.integrate([harmonic_family(4, 3)],
+                         target_stderr=float(res.stderrs.max()) * 2)
+    assert template.launch_count() == 0 and res2.served_from_cache
+
+
+def test_topup_resumes_stream():
+    engine = make_engine()
+    cli = IntegrationClient(engine)
+    cli.integrate([harmonic_family(4, 3)], n_samples=R)
+    template.reset_launch_count()
+    res = cli.integrate([harmonic_family(4, 3)], n_samples=3 * R)
+    assert template.launch_count() == 2        # only the two delta rounds
+    assert res.n_per_family == (3 * R,)
+    assert not res.served_from_cache
+
+
+def test_samplers_use_distinct_streams():
+    engine = make_engine()
+    cli = IntegrationClient(engine)
+    a = cli.integrate([harmonic_family(4, 3)], n_samples=R, sampler="mc")
+    b = cli.integrate([harmonic_family(4, 3)], n_samples=R, sampler="sobol")
+    assert engine.cache.n_entries == 2
+    assert not np.array_equal(a.means, b.means)
+
+
+def test_backpressure():
+    engine = make_engine(max_pending=1)
+    engine.submit(IntegrationRequest.make([harmonic_family(4, 3)],
+                                          n_samples=R))
+    with pytest.raises(Backpressure):
+        engine.submit(IntegrationRequest.make([gaussian_family(4, 3)],
+                                              n_samples=R), block=False)
+    with pytest.raises(Backpressure):
+        engine.submit(IntegrationRequest.make([gaussian_family(4, 3)],
+                                              n_samples=R), timeout=0.05)
+
+
+def test_async_worker_thread():
+    engine = make_engine()
+    engine.start()
+    try:
+        tickets = [engine.submit(r) for r in mixed_requests(4)]
+        results = [engine.result(t, timeout=120.0) for t in tickets]
+        assert all(r.n_per_family[0] >= R for r in results)
+        engine.drain(timeout=10.0)
+    finally:
+        engine.stop()
+    assert not engine.running
+
+
+def test_wave_restart_on_transient_failure():
+    """A crashed wave replays identically (counter-addressed work)."""
+    engine = make_engine()
+    fails = {"left": 1}
+    orig = engine.batcher.execute
+
+    def flaky(items):
+        if fails["left"]:
+            fails["left"] -= 1
+            raise RuntimeError("injected wave failure")
+        return orig(items)
+
+    engine.batcher.execute = flaky
+    res = IntegrationClient(engine).integrate([harmonic_family(4, 3)],
+                                              n_samples=2 * R)
+    assert engine.stats.restarts == 1
+    # bit-identical to an undisturbed engine
+    clean = IntegrationClient(make_engine()).integrate(
+        [harmonic_family(4, 3)], n_samples=2 * R)
+    np.testing.assert_array_equal(res.means, clean.means)
+
+
+def test_exhausted_restart_budget_raises():
+    engine = make_engine(max_restarts=1)
+
+    def always_fail(items):
+        raise RuntimeError("permanent failure")
+
+    engine.batcher.execute = always_fail
+    engine.submit(IntegrationRequest.make([harmonic_family(4, 3)],
+                                          n_samples=R))
+    with pytest.raises(RuntimeError, match="permanent"):
+        engine.step()
+
+
+def test_multifamily_request_order_preserved():
+    engine = make_engine()
+    res = IntegrationClient(engine).integrate(
+        [gaussian_family(3, 2), harmonic_family(5, 4)], n_samples=R)
+    assert res.names == ("gaussian[3x2d]", "harmonic[5x4d]")
+    assert res.means.shape == (8,)
+    exact = harmonic_analytic(5, 4)
+    assert np.all(np.abs(res.means[3:] - exact) <= 6 * res.stderrs[3:] + 1e-6)
+
+
+def test_concurrent_step_drivers():
+    """Two blocking clients driving step() themselves race their waves:
+    duplicate rounds are skipped as exact replays, both get answers."""
+    engine = make_engine()
+    results = {}
+
+    def client(i):
+        results[i] = IntegrationClient(engine).integrate(
+            [harmonic_family(4, 3)], n_samples=2 * R)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180.0)
+    assert len(results) == 2
+    np.testing.assert_array_equal(results[0].means, results[1].means)
+    clean = IntegrationClient(make_engine()).integrate(
+        [harmonic_family(4, 3)], n_samples=2 * R)
+    np.testing.assert_array_equal(results[0].means, clean.means)
+
+
+def test_rejected_submit_allocates_nothing():
+    engine = make_engine(max_pending=1)
+    engine.submit(IntegrationRequest.make([harmonic_family(4, 3)],
+                                          n_samples=R))
+    before = engine.cache.stats()["function_ids_allocated"]
+    with pytest.raises(Backpressure):
+        engine.submit(IntegrationRequest.make([gaussian_family(4, 3)],
+                                              n_samples=R), block=False)
+    assert engine.cache.stats()["function_ids_allocated"] == before
+    assert engine.cache.n_entries == 1
+
+
+def test_result_retention_bounded():
+    engine = make_engine(max_retained_results=2)
+    cli = IntegrationClient(engine)
+    tickets = []
+    for n in (1, 2, 3):
+        tickets.append(engine.submit(IntegrationRequest.make(
+            [harmonic_family(4, 3)], n_samples=n * R)))
+        while engine.step():
+            pass
+    assert engine.poll(tickets[0]) is None     # evicted FIFO
+    assert engine.poll(tickets[2]) is not None
+    engine.release(tickets[2])
+    assert engine.poll(tickets[2]) is None
+
+
+def test_concurrent_submitters_against_worker():
+    """Many client threads against the running worker: all served, shared
+    entries deduped."""
+    engine = make_engine()
+    engine.start()
+    results = {}
+
+    def client(i):
+        cli = IntegrationClient(engine)
+        results[i] = cli.integrate([harmonic_family(4, 2 + i % 2)],
+                                   n_samples=2 * R)
+
+    try:
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180.0)
+    finally:
+        engine.stop()
+    assert len(results) == 6
+    assert engine.cache.n_entries == 2         # dims 2 and 3 only
+    np.testing.assert_array_equal(results[0].means, results[2].means)

@@ -1,0 +1,64 @@
+"""Fused-bucket dispatch on a mesh (single-device mesh; the multi-device
+semantics run in tests/distributed/progs/prog_sharded_mc.py)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (MultiFunctionSpec, ZMCMultiFunctions, gaussian_family,
+                        harmonic_family)
+from repro.core import genz
+from repro.core import rng as rng_lib
+from repro.kernels import template
+from repro.kernels.mc_eval import multi
+
+R = 4096
+
+
+@pytest.fixture
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _spec():
+    return MultiFunctionSpec.from_families([
+        harmonic_family(6, 3), gaussian_family(4, 3),
+        genz.corner_peak(5, 2)[0]])
+
+
+def test_sharded_eval_plan_matches_single_device(mesh):
+    spec = _spec()
+    plan = multi.plan_spec(spec)
+    key = rng_lib.fold_key(4, 0)
+    single = multi.eval_plan(plan, R, key)
+    sharded = multi.sharded_eval_plan(plan, R, key, mesh)
+    assert set(single) == set(sharded)
+    for idx in single:
+        np.testing.assert_array_equal(np.asarray(single[idx].s1),
+                                      np.asarray(sharded[idx].s1))
+        np.testing.assert_array_equal(np.asarray(single[idx].s2),
+                                      np.asarray(sharded[idx].s2))
+
+
+def test_mesh_solver_uses_fused_buckets(mesh):
+    spec = _spec()
+    template.reset_launch_count()
+    rm = ZMCMultiFunctions(spec, n_samples=R, seed=3, mesh=mesh,
+                           use_kernel=True).evaluate(1)
+    mesh_launches = template.launch_count()
+    rs = ZMCMultiFunctions(spec, n_samples=R, seed=3,
+                           use_kernel=True).evaluate(1)
+    # one launch per dim bucket, not one per family
+    assert mesh_launches == 2
+    np.testing.assert_allclose(rm.means, rs.means, rtol=1e-6, atol=1e-7)
+
+
+def test_service_engine_on_mesh(mesh):
+    from repro.service import IntegrationClient, IntegrationEngine
+    engine = IntegrationEngine(seed=0, round_samples=R, mesh=mesh)
+    res = IntegrationClient(engine).integrate(
+        [harmonic_family(4, 3), genz.oscillatory(4, 2)[0]], n_samples=R)
+    ref_engine = IntegrationEngine(seed=0, round_samples=R)
+    ref = IntegrationClient(ref_engine).integrate(
+        [harmonic_family(4, 3), genz.oscillatory(4, 2)[0]], n_samples=R)
+    np.testing.assert_allclose(res.means, ref.means, rtol=1e-6, atol=1e-7)
