@@ -57,7 +57,7 @@ def _batched(engine, reqs):
 
 
 def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
-        seed: int = 0) -> int:
+        seed: int = 0, json_out: str | None = None) -> int:
     reqs = demo_workload(n_requests, n_fn=n_fn, n_samples=n_samples)
     n_fams = sum(len(r.families) for r in reqs)
     dims = sorted({f.dim for r in reqs for f in r.families})
@@ -90,6 +90,7 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
     top_res, top_launches, top_dt = _batched(engine, top_reqs)
     assert 0 < top_launches <= cold_launches, (top_launches, cold_launches)
 
+    rows = []
     print("path,requests,launches,seconds,req_per_s")
     for name, res, launches, dt in [
             ("sequential", seq_res, seq_launches, seq_dt),
@@ -98,11 +99,23 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
             ("batched_topup", top_res, top_launches, top_dt)]:
         print(f"{name},{len(res)},{launches},{dt:.2f},"
               f"{len(res) / max(dt, 1e-9):.1f}")
+        rows.append({"path": name, "requests": len(res),
+                     "launches": int(launches), "seconds": round(dt, 3)})
     print(f"-> {seq_launches} sequential launches vs {cold_launches} "
           f"batched ({seq_launches / max(cold_launches, 1):.1f}x fewer); "
           f"warm cache: 0 launches; "
           f"dedup saved {engine.stats.items_deduped} round evaluations")
     print(f"cache: {engine.cache.stats()}")
+    if json_out:
+        import json
+        with open(json_out, "w", encoding="utf-8") as f:
+            json.dump({"bench": "service", "requests": n_requests,
+                       "n_fn": n_fn, "n_samples": n_samples,
+                       "round_samples": round_samples, "rows": rows,
+                       "items_deduped": engine.stats.items_deduped,
+                       "cache": engine.cache.stats()},
+                      f, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
     return 0
 
 
@@ -115,12 +128,14 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (still >= 64 requests, smaller "
                          "families and budgets)")
+    ap.add_argument("--json-out", default=None,
+                    help="write measurements as JSON (BENCH_*.json)")
     args = ap.parse_args()
     if args.smoke:
         return run(max(64, args.requests), n_fn=4, n_samples=8192,
-                   round_samples=4096)
+                   round_samples=4096, json_out=args.json_out)
     return run(args.requests, n_fn=args.n_fn, n_samples=args.samples,
-               round_samples=args.round_samples)
+               round_samples=args.round_samples, json_out=args.json_out)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,10 @@ from its stderr-aware cache.  Three invariants to notice below:
 2. re-asking to the *same or looser* precision costs zero launches;
 3. asking for *more* precision resumes the cached counter stream
    (top-up) — the result is bit-identical to having run the bigger
-   budget from the start.
+   budget from the start;
+4. with a ``state_dir`` all of the above survives process death: the
+   cache journals every round to disk, so a brand-new process (or one
+   recovering from a SIGKILL) warm-starts the same streams.
 """
 
 import sys, os
@@ -61,3 +64,26 @@ res_e = client.integrate([harmonic_family(50, 4)], target_stderr=2.5e-3)
 print(f"to-precision: max stderr {res_e.stderrs.max():.2e} "
       f"after {res_e.n_per_family[0]} samples")
 print(f"engine stats: {engine.stats}")
+
+# -- durability: the cache survives process death -------------------------
+# pass state_dir= and every round deposit is journaled to disk
+# (crash-safe: fsynced + checksummed, compacted to npz on close).  A new
+# process pointing at the same dir resumes every stream at its exact
+# counter offset — zero launches for work already done, bit-identical
+# results.  `serve_integrals --state-dir` exposes the same thing on the
+# CLI; `benchmarks/persistence_bench.py` proves it under real SIGKILLs.
+import tempfile
+with tempfile.TemporaryDirectory(prefix="zmc-state-") as state_dir:
+    with IntegrationEngine(seed=1, round_samples=8192,
+                           state_dir=state_dir) as eng1:
+        res_cold = IntegrationClient(eng1).integrate(
+            [harmonic_family(50, 4)], n_samples=32768)
+    # eng1 is gone — "the process died".  Boot a fresh engine on its state:
+    with IntegrationEngine(seed=1, round_samples=8192,
+                           state_dir=state_dir) as eng2:
+        template.reset_launch_count()
+        res_warm = IntegrationClient(eng2).integrate(
+            [harmonic_family(50, 4)], n_samples=32768)
+        assert template.launch_count() == 0 and res_warm.served_from_cache
+        np.testing.assert_array_equal(res_warm.means, res_cold.means)
+print("restart: 0 launches, bit-identical result from persisted state")

@@ -10,6 +10,22 @@ the async submit/poll worker; the default drives waves synchronously.
 This is the service-layer sibling of ``repro.launch.integrate`` (the
 one-shot fault-tolerant job): same kernels, same counters, but requests
 arrive over time, dedupe against each other and top up cached streams.
+
+**Warm starts**: pass ``--state-dir PATH`` and the engine journals every
+round deposit to disk (crash-safe, checksummed) and snapshots on clean
+shutdown.  Re-launching against the same state dir — even after a
+SIGKILL — resumes every cached stream at its exact ``sample_offset``:
+requests the previous process already satisfied are served with zero
+kernel launches, partially-met ones only pay for the missing rounds, and
+all results are bit-identical to an uninterrupted run.  ``--state-dir``
+pins the seed and round size (stored in ``meta.json``); reopening with
+different values is refused.  ``--compact-on-start`` folds the replayed
+journal into one npz snapshot before serving:
+
+    python -m repro.launch.serve_integrals --requests 64 --state-dir /tmp/zmc
+    # ... kill -9 it, then:
+    python -m repro.launch.serve_integrals --requests 64 --state-dir /tmp/zmc \\
+        --compact-on-start      # -> 64 pure cache hits, 0 launches
 """
 
 from __future__ import annotations
@@ -72,6 +88,12 @@ def main():
                     help="shard over all local devices")
     ap.add_argument("--thread", action="store_true",
                     help="run the async worker thread (submit/poll mode)")
+    ap.add_argument("--state-dir", default=None,
+                    help="persist the cache here (journal + snapshots); "
+                         "re-launching against it warm-starts every stream")
+    ap.add_argument("--compact-on-start", action="store_true",
+                    help="fold the replayed journal into one npz snapshot "
+                         "before serving")
     args = ap.parse_args()
 
     from repro.kernels import template
@@ -87,7 +109,13 @@ def main():
 
     engine = IntegrationEngine(
         seed=args.seed, round_samples=args.round_samples,
-        use_kernel=not args.no_kernel, mesh=mesh)
+        use_kernel=not args.no_kernel, mesh=mesh,
+        state_dir=args.state_dir, compact_on_start=args.compact_on_start)
+    if engine.cache.recovered is not None:
+        rec = engine.cache.recovered
+        print(f"warm start: {len(rec.entries)} persisted streams "
+              f"({rec.journal_records} journal records replayed, "
+              f"{rec.truncated_bytes} corrupt tail bytes truncated)")
     reqs = demo_workload(
         args.requests, n_fn=args.n_fn,
         n_samples=None if args.target_stderr else args.samples,
@@ -118,6 +146,10 @@ def main():
     print(f"stragglers: {engine.watchdog.straggler_count}")
     worst = max(float(r.stderrs.max()) for r in results)
     print(f"worst stderr served: {worst:.3e}")
+    engine.close()   # snapshot-on-shutdown when --state-dir is set
+    if args.state_dir:
+        print(f"state snapshotted to {args.state_dir} "
+              f"(journal compacted to {engine.store.journal_size()} bytes)")
 
 
 if __name__ == "__main__":

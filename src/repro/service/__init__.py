@@ -4,6 +4,7 @@
 #   cache      - stderr-aware result cache with counter-stream top-up
 #   batcher    - cross-request coalescing into fused dimension buckets
 #   engine     - continuously-batching submit/poll worker with backpressure
+#   store      - crash-safe journal + snapshot persistence (warm restarts)
 #   api        - request/response dataclasses and the blocking client
 
 from repro.service.api import (Backpressure, IntegrationClient,
@@ -11,15 +12,19 @@ from repro.service.api import (Backpressure, IntegrationClient,
 from repro.service.cache import CacheEntry, ResultCache
 from repro.service.canonical import canonical_family, family_hash, spec_hash
 from repro.service.engine import EngineStats, IntegrationEngine
+from repro.service.store import DurableStore, EntryState, RecoveredState
 
 __all__ = [
     "Backpressure",
     "CacheEntry",
+    "DurableStore",
     "EngineStats",
+    "EntryState",
     "IntegrationClient",
     "IntegrationEngine",
     "IntegrationRequest",
     "IntegrationResult",
+    "RecoveredState",
     "ResultCache",
     "canonical_family",
     "family_hash",

@@ -87,10 +87,25 @@ class IntegrationClient:
     When the engine runs a background worker, ``integrate`` just waits;
     otherwise it drives ``engine.step()`` itself — handy for tests,
     benchmarks and single-process batch jobs where determinism matters.
+
+    Usable as a context manager: ``with IntegrationClient(engine) as c:``
+    closes the engine on exit — for an engine with a ``state_dir`` that
+    is the snapshot-on-shutdown path (journal compacted into one npz).
     """
 
     def __init__(self, engine):
         self.engine = engine
+
+    def close(self) -> None:
+        """Shut the engine down cleanly (snapshots persistent state)."""
+        self.engine.close()
+
+    def __enter__(self) -> "IntegrationClient":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def submit(self, families, **kwargs) -> int:
         return self.engine.submit(IntegrationRequest.make(families, **kwargs))

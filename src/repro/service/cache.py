@@ -34,6 +34,16 @@ swapped atomically under the cache lock by :meth:`deposit`; readers
 (``stderr``/``finalize``/``meets``) work from a single snapshot, so a
 submit racing a worker deposit sees either the old or the new round —
 never half of one.
+
+Durability: with a :class:`~repro.service.store.DurableStore` attached,
+every allocation and deposit is journaled *before* the in-memory fold
+(write-ahead), and persisted streams from a previous process live in a
+**dormant** table until a request re-asks for them — rehydration
+restores the exact ``(s1, s2, n, rounds_done)`` accumulators and the
+original counter-space ``fn_offset``, so a warm restart serves satisfied
+requests with zero launches and tops up partial ones bit-identically.
+Dormant streams survive compaction: :meth:`snapshot_to_store` persists
+them alongside the live entries.
 """
 
 from __future__ import annotations
@@ -46,6 +56,7 @@ import numpy as np
 from repro.core import direct_mc
 from repro.core.direct_mc import SumsState
 from repro.core.integrand import IntegrandFamily
+from repro.service.store import DurableStore, EntryState
 
 # id space addressable by the counter layout: fn_id * DIM_STRIDE + dim
 # must fit u32, so fn_id < 2**24 (DIM_STRIDE = 256)
@@ -121,23 +132,73 @@ class CacheEntry:
 class ResultCache:
     """In-memory cache of canonical-family accumulators (thread-safe)."""
 
-    def __init__(self, round_samples: int = 65536):
+    def __init__(self, round_samples: int = 65536,
+                 store: DurableStore | None = None):
         if round_samples <= 0:
             raise ValueError("round_samples must be positive")
         self.round_samples = int(round_samples)
         self._entries: dict[str, CacheEntry] = {}
         self._next_id = 0
         self._lock = threading.Lock()
+        self.store = store
+        self._dormant: dict[str, EntryState] = {}
+        self.recovered = None
+        if store is not None:
+            state = store.load()
+            if (state.round_samples is not None
+                    and state.round_samples != self.round_samples):
+                raise ValueError(
+                    f"state dir holds streams quantized into rounds of "
+                    f"{state.round_samples} samples; this cache is "
+                    f"configured with round_samples={self.round_samples}")
+            self._dormant = dict(state.entries)
+            self._next_id = max(self._next_id, state.next_id)
+            self.recovered = state
 
     # -- lookup / allocation --------------------------------------------------
-    def get(self, chash: str) -> CacheEntry | None:
-        return self._entries.get(chash)
+    def get(self, chash: str,
+            family: IntegrandFamily | None = None) -> CacheEntry | None:
+        """Entry for ``chash`` if it exists — in memory, or (when the
+        canonical ``family`` is supplied) rehydrated from persisted
+        state.  Never allocates a new counter range."""
+        entry = self._entries.get(chash)
+        if entry is not None or family is None:
+            return entry
+        if not self._dormant:     # only ever shrinks: cold misses stay
+            return None           # lock-free (every store-less engine)
+        with self._lock:
+            return self._rehydrate_locked(chash, family)
+
+    def _rehydrate_locked(self, chash: str,
+                          family: IntegrandFamily) -> CacheEntry | None:
+        entry = self._entries.get(chash)
+        if entry is not None:
+            return entry
+        st = self._dormant.pop(chash, None)
+        if st is None:
+            return None
+        if st.n_fn != family.n_fn:
+            raise ValueError(
+                f"persisted stream {chash[:16]} has n_fn={st.n_fn} but the "
+                f"submitted family has n_fn={family.n_fn}")
+        if st.round_samples != self.round_samples:
+            raise ValueError(
+                f"persisted stream {chash[:16]} was quantized into rounds "
+                f"of {st.round_samples}; cache uses {self.round_samples}")
+        entry = CacheEntry(chash=chash, family=family,
+                           fn_offset=st.fn_offset)
+        entry._state = (np.asarray(st.s1, np.float32),
+                        np.asarray(st.s2, np.float32),
+                        int(st.n), int(st.rounds_done))
+        self._entries[chash] = entry
+        return entry
 
     def get_or_allocate(self, chash: str, family: IntegrandFamily) -> CacheEntry:
-        """Existing entry for ``chash``, or a fresh one with its own
-        counter-space range.  ``family`` must already be canonical."""
+        """Existing entry for ``chash`` (rehydrating persisted state if
+        needed), or a fresh one with its own counter-space range.
+        ``family`` must already be canonical."""
         with self._lock:
-            entry = self._entries.get(chash)
+            entry = self._rehydrate_locked(chash, family)
             if entry is not None:
                 entry.hits += 1
                 return entry
@@ -149,7 +210,16 @@ class ResultCache:
                                fn_offset=self._next_id)
             self._next_id += n_fn
             self._entries[chash] = entry
-            return entry
+        if self.store is not None:
+            # journaled outside the cache lock (disk I/O must not stall
+            # readers; lock order is always store.mutex -> cache lock).
+            # Should a crash land in this gap, any deposit journaled for
+            # the missing alloc is dropped on replay and recomputed —
+            # counter addressing makes that recomputation bit-identical.
+            self.store.append_alloc(chash, fn_offset=entry.fn_offset,
+                                    n_fn=n_fn,
+                                    round_samples=self.round_samples)
+        return entry
 
     # -- precision logic ------------------------------------------------------
     def rounds_for_budget(self, n_samples: int) -> int:
@@ -206,21 +276,81 @@ class ResultCache:
         is exact).  A round *beyond* the fold frontier is a planner bug
         and raises: folding it would skip samples.
         """
-        with self._lock:
-            s1, s2, n, done = entry._state
+        s1_delta = np.asarray(sums.s1, np.float32)
+        s2_delta = np.asarray(sums.s2, np.float32)
+        n_delta = int(np.asarray(sums.n))
+        if self.store is None:
+            with self._lock:
+                return self._fold_locked(entry, round_index,
+                                         s1_delta, s2_delta, n_delta)
+        # Durable path: hold the store mutex across journal + fold so the
+        # write-ahead record and the in-memory fold are one atomic unit
+        # w.r.t. concurrent deposits and snapshot compaction — while the
+        # per-round fsync runs OUTSIDE the cache lock, leaving readers
+        # (submit peeks, meets, stats) unblocked.  Lock order everywhere:
+        # store.mutex -> cache lock, never the reverse.
+        with self.store.mutex:
+            with self._lock:
+                done = entry._state[3]
             if round_index < done:
-                return False
+                return False       # replayed round: exact no-op, unjournaled
             if round_index > done:
                 raise ValueError(
                     f"deposit gap: round {round_index} into entry at "
                     f"round {done}")
-            entry._state = (
-                np.asarray(s1 + np.asarray(sums.s1, np.float32)),
-                np.asarray(s2 + np.asarray(sums.s2, np.float32)),
-                n + int(np.asarray(sums.n)),
-                done + 1,
-            )
-            return True
+            # write-ahead: journal the exact f32 bits before folding, so
+            # a replayed journal performs this same left fold
+            self.store.append_deposit(entry.chash, round_index,
+                                      s1_delta, s2_delta, n_delta)
+            with self._lock:
+                return self._fold_locked(entry, round_index,
+                                         s1_delta, s2_delta, n_delta)
+
+    def _fold_locked(self, entry: CacheEntry, round_index: int,
+                     s1_delta, s2_delta, n_delta: int) -> bool:
+        s1, s2, n, done = entry._state
+        if round_index < done:
+            return False
+        if round_index > done:
+            raise ValueError(
+                f"deposit gap: round {round_index} into entry at "
+                f"round {done}")
+        entry._state = (
+            np.asarray(s1 + s1_delta),
+            np.asarray(s2 + s2_delta),
+            n + n_delta,
+            done + 1,
+        )
+        return True
+
+    # -- persistence ----------------------------------------------------------
+    def snapshot_to_store(self) -> None:
+        """Compact journal + accumulators into one atomic npz snapshot.
+
+        Includes dormant persisted streams no request has re-asked for
+        yet — compaction must never forget a stream.
+        """
+        if self.store is None:
+            raise RuntimeError("cache has no DurableStore attached")
+        # mutex first (same order as deposit): no deposit can journal or
+        # fold between state collection and the journal reset, so the
+        # snapshot + fresh journal always cover every folded round.  The
+        # npz write itself runs outside the cache lock — readers proceed.
+        with self.store.mutex:
+            with self._lock:
+                states = []
+                for chash, entry in self._entries.items():
+                    s1, s2, n, done = entry.snapshot()
+                    states.append(EntryState(
+                        chash=chash, fn_offset=entry.fn_offset,
+                        n_fn=entry.n_fn, round_samples=self.round_samples,
+                        s1=np.asarray(s1, np.float32),
+                        s2=np.asarray(s2, np.float32),
+                        n=int(n), rounds_done=int(done)))
+                states.extend(self._dormant.values())
+                next_id = self._next_id
+            self.store.snapshot(states, next_id=next_id,
+                                round_samples=self.round_samples)
 
     # -- stats ----------------------------------------------------------------
     @property
@@ -234,6 +364,7 @@ class ResultCache:
     def stats(self) -> dict:
         return {
             "entries": self.n_entries,
+            "dormant": len(self._dormant),
             "function_ids_allocated": self._next_id,
             "total_samples": self.total_samples,
             "hits": sum(e.hits for e in self._entries.values()),

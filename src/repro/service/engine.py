@@ -27,6 +27,13 @@ Life of a request:
 
 ``start()`` spawns the worker thread for async submit/poll service;
 ``step()`` drives the same loop synchronously (tests, batch jobs).
+
+With a ``state_dir``, the cache journals every deposit through a
+:class:`~repro.service.store.DurableStore` (replayed on boot, corrupt
+tails truncated) and ``stop()``/``close()`` snapshot-compact on
+shutdown — so a SIGKILLed engine restarts warm: already-satisfied
+requests cost zero launches and partially-met ones top up from their
+persisted ``sample_offset`` bit-identically to an uninterrupted run.
 """
 
 from __future__ import annotations
@@ -45,6 +52,7 @@ from repro.service.api import (Backpressure, IntegrationRequest,
 from repro.service.batcher import RoundBatcher, WorkItem
 from repro.service.cache import CacheEntry, ResultCache
 from repro.service.canonical import canonical_family, family_hash
+from repro.service.store import DurableStore
 
 
 @dataclasses.dataclass
@@ -81,10 +89,17 @@ class IntegrationEngine:
                  chunk: int = 8192, max_pending: int = 256,
                  max_rounds_per_wave: int = 8, max_restarts: int = 2,
                  max_retained_results: int = 4096,
-                 watchdog: StepWatchdog | None = None):
+                 watchdog: StepWatchdog | None = None,
+                 state_dir: str | None = None,
+                 compact_on_start: bool = False,
+                 store_fsync: bool = True):
         self.seed = int(seed)
         self.key = rng_lib.fold_key(self.seed, 0)
-        self.cache = ResultCache(round_samples=round_samples)
+        self.store = None
+        if state_dir is not None:
+            self.store = DurableStore(state_dir, fsync=store_fsync)
+        self.cache = ResultCache(round_samples=round_samples,
+                                 store=self.store)
         if sample_axes is None and mesh is not None:
             sample_axes = tuple(a for a in mesh.axis_names if a != fn_axis)
         if mesh is not None:
@@ -100,6 +115,15 @@ class IntegrationEngine:
             self.cache, self.key, use_kernel=use_kernel, mesh=mesh,
             fn_axis=fn_axis, sample_axes=sample_axes or ("data",),
             chunk=chunk)
+        if self.store is not None:
+            # only after every constructor check passed: a rejected
+            # configuration must not pin meta into a fresh state dir.
+            # A state dir replays one counter stream — same seed, same
+            # round quantization, or the resumed samples would differ.
+            self.store.ensure_meta({"seed": self.seed,
+                                    "round_samples": int(round_samples)})
+            if compact_on_start:
+                self.cache.snapshot_to_store()
         self.max_pending = int(max_pending)
         self.max_rounds_per_wave = int(max_rounds_per_wave)
         self.max_restarts = int(max_restarts)
@@ -142,7 +166,10 @@ class IntegrationEngine:
             canon_fams.append((chash, canon))
 
         # hit path needs no allocation: all entries must already exist
-        peek = [self.cache.get(chash) for chash, _ in canon_fams]
+        # (a persisted stream from a previous process counts — passing
+        # the family lets the cache rehydrate it, so a warm *restart*
+        # serves satisfied requests with zero launches too)
+        peek = [self.cache.get(chash, canon) for chash, canon in canon_fams]
         if all(e is not None for e in peek):
             req = request
             if all(self.cache.meets(e, target_stderr=req.target_stderr,
@@ -319,6 +346,36 @@ class IntegrationEngine:
                     "worker still executing a wave; it will exit at the "
                     "wave boundary (retry stop())")
             self._worker = None
+        # snapshot-on-shutdown: compact the journal once no worker can
+        # deposit anymore (a kill before this point only costs replay)
+        self.checkpoint()
+
+    def checkpoint(self) -> None:
+        """Compact accumulated state into an atomic snapshot (no-op
+        without a ``state_dir``).  Safe at any wave boundary."""
+        if self.store is not None:
+            self.cache.snapshot_to_store()
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Clean shutdown: stop the worker, snapshot, release the store.
+
+        If the worker outlives ``timeout`` the TimeoutError from
+        :meth:`stop` still propagates, but the store handle is released
+        regardless — the journal already holds every folded round, so
+        skipping the shutdown snapshot costs replay time, never data.
+        """
+        try:
+            self.stop(timeout=timeout)
+        finally:
+            if self.store is not None:
+                self.store.close()
+
+    def __enter__(self) -> "IntegrationEngine":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
     def drain(self, timeout: float | None = None) -> None:
         """Block until the pending table is empty (worker running)."""

@@ -1,0 +1,329 @@
+"""Crash-safe persistence for the service result cache.
+
+The engine's strongest invariant — a cache top-up is *bit-identical* to
+an uninterrupted run (``tests/core/test_resume.py``) — is in-process
+only as long as the accumulators live in memory.  This module makes it a
+cross-process property: every unit of durable state the cache owns is
+either journaled or snapshotted, so a SIGKILL at any instant loses at
+most the round deposit being written, never a folded one.
+
+Two files under ``state_dir``:
+
+* ``journal.bin`` — an append-only **write-ahead journal**.  Each record
+  is ``MAGIC | u32 length | u32 crc32 | payload`` with a JSON payload
+  (f32 accumulator arrays base64-encoded raw little-endian, so replay
+  folds the *exact bits* the live cache folded).  Two record types:
+  ``alloc`` (a stream's counter-space placement: chash, fn_offset,
+  n_fn, round size) and ``dep`` (one round's ``(s1, s2, n)`` delta).
+  Records are fsynced by default; a record is journaled *before* the
+  in-memory fold it describes (WAL ordering).
+
+* ``snapshot.npz`` — periodic **compaction** of journal + accumulators
+  into one atomic npz (tmp + fsync + ``os.replace``), after which the
+  journal is reset.  A crash between snapshot commit and journal reset
+  is benign: replay skips deposits of rounds the snapshot already folded
+  (the same skip rule the live cache applies to replayed waves).
+
+``load()`` restores snapshot then journal, **truncating** a partial or
+corrupt journal tail (torn write at the kill instant, garbage append)
+instead of crashing — everything before the first bad record survives.
+The bump allocator's high-water mark rides along in both formats, so a
+reloaded stream resumes at the exact ``sample_offset`` and counter range
+it would have had uninterrupted, and new streams never collide with
+persisted ones.
+
+``meta.json`` pins the engine configuration a state dir was created
+with (seed, round size); reopening with a different configuration is an
+error rather than a silently different sample stream.
+"""
+
+from __future__ import annotations
+
+import base64
+import dataclasses
+import json
+import os
+import struct
+import threading
+import zlib
+
+import numpy as np
+
+_MAGIC = b"ZMJ1"
+_HEADER = struct.Struct("<II")          # payload length, crc32(payload)
+_HEADER_BYTES = len(_MAGIC) + _HEADER.size
+_SNAPSHOT_VERSION = 1
+
+
+def _encode_f32(arr: np.ndarray) -> str:
+    return base64.b64encode(
+        np.ascontiguousarray(arr, dtype="<f4").tobytes()).decode("ascii")
+
+
+def _decode_f32(text: str) -> np.ndarray:
+    return np.frombuffer(base64.b64decode(text), dtype="<f4")
+
+
+@dataclasses.dataclass
+class EntryState:
+    """Durable image of one cached stream's accumulators + placement."""
+
+    chash: str
+    fn_offset: int
+    n_fn: int
+    round_samples: int
+    s1: np.ndarray            # (n_fn,) f32
+    s2: np.ndarray            # (n_fn,) f32
+    n: int = 0
+    rounds_done: int = 0
+
+
+@dataclasses.dataclass
+class RecoveredState:
+    """What ``load()`` reconstructed from disk."""
+
+    entries: dict[str, EntryState]
+    next_id: int = 0                  # allocator high-water mark
+    round_samples: int | None = None  # None when the dir is fresh
+    journal_records: int = 0          # complete records replayed
+    dropped_records: int = 0          # valid records that could not fold
+    truncated_bytes: int = 0          # corrupt/partial tail removed
+
+
+class DurableStore:
+    """Append-only journal + atomic npz snapshots under one directory."""
+
+    JOURNAL = "journal.bin"
+    SNAPSHOT = "snapshot.npz"
+    META = "meta.json"
+
+    def __init__(self, state_dir: str, *, fsync: bool = True):
+        self.state_dir = str(state_dir)
+        self.fsync = bool(fsync)
+        os.makedirs(self.state_dir, exist_ok=True)
+        self.journal_path = os.path.join(self.state_dir, self.JOURNAL)
+        self.snapshot_path = os.path.join(self.state_dir, self.SNAPSHOT)
+        self.meta_path = os.path.join(self.state_dir, self.META)
+        self._journal_f = None
+        # serializes appends against each other and against snapshot's
+        # journal reset; a caller may hold it across append + its own
+        # in-memory apply to stay coherent with a concurrent snapshot
+        # (reentrant so such callers can still invoke append/snapshot)
+        self.mutex = threading.RLock()
+
+    # -- configuration guard --------------------------------------------------
+    def ensure_meta(self, meta: dict) -> None:
+        """Pin ``meta`` on first use; verify it on every reopen.
+
+        A state dir replays a specific counter stream: reopening it with
+        a different seed or round size would top up with *different*
+        samples and silently break bit-identity, so mismatches raise.
+        """
+        if os.path.exists(self.meta_path):
+            with open(self.meta_path, encoding="utf-8") as f:
+                existing = json.load(f)
+            for key, value in meta.items():
+                if key in existing and existing[key] != value:
+                    raise ValueError(
+                        f"state dir {self.state_dir!r} was created with "
+                        f"{key}={existing[key]!r}; this engine is configured "
+                        f"with {key}={value!r}")
+            return
+        tmp = self.meta_path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(meta, f, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.meta_path)
+        self._sync_dir()
+
+    # -- journal appends ------------------------------------------------------
+    def append_alloc(self, chash: str, *, fn_offset: int, n_fn: int,
+                     round_samples: int) -> None:
+        self._append({"t": "alloc", "chash": chash,
+                      "fn_offset": int(fn_offset), "n_fn": int(n_fn),
+                      "round_samples": int(round_samples)})
+
+    def append_deposit(self, chash: str, round_index: int,
+                       s1: np.ndarray, s2: np.ndarray, n: int) -> None:
+        """Journal one round's delta — the exact f32 bits being folded."""
+        self._append({"t": "dep", "chash": chash, "round": int(round_index),
+                      "n": int(n), "s1": _encode_f32(s1),
+                      "s2": _encode_f32(s2)})
+
+    def _append(self, payload: dict) -> None:
+        raw = json.dumps(payload, sort_keys=True,
+                         separators=(",", ":")).encode("utf-8")
+        record = _MAGIC + _HEADER.pack(len(raw), zlib.crc32(raw)) + raw
+        with self.mutex:
+            f = self._journal()
+            f.write(record)
+            f.flush()
+            if self.fsync:
+                os.fsync(f.fileno())
+
+    def _journal(self):
+        if self._journal_f is None or self._journal_f.closed:
+            created = not os.path.exists(self.journal_path)
+            self._journal_f = open(self.journal_path, "ab")
+            if created:
+                # fsyncing records is useless if the file's own dirent
+                # is lost to a power cut; persist it on first creation
+                self._sync_dir()
+        return self._journal_f
+
+    def journal_size(self) -> int:
+        try:
+            return os.path.getsize(self.journal_path)
+        except OSError:
+            return 0
+
+    # -- recovery -------------------------------------------------------------
+    def load(self) -> RecoveredState:
+        """Snapshot + journal replay; truncates a bad tail, never raises
+        for torn/corrupt journal bytes."""
+        state = RecoveredState(entries={})
+        if os.path.exists(self.snapshot_path):
+            self._load_snapshot(state)
+        self._replay_journal(state)
+        return state
+
+    def _load_snapshot(self, state: RecoveredState) -> None:
+        with np.load(self.snapshot_path, allow_pickle=False) as z:
+            meta = json.loads(bytes(z["meta"]).decode("utf-8"))
+            if meta.get("version") != _SNAPSHOT_VERSION:
+                raise ValueError(
+                    f"snapshot {self.snapshot_path!r} has version "
+                    f"{meta.get('version')!r}; expected {_SNAPSHOT_VERSION}")
+            state.next_id = int(meta["next_id"])
+            state.round_samples = int(meta["round_samples"])
+            for i, ent in enumerate(meta["entries"]):
+                st = EntryState(
+                    chash=ent["chash"], fn_offset=int(ent["fn_offset"]),
+                    n_fn=int(ent["n_fn"]),
+                    round_samples=int(ent["round_samples"]),
+                    s1=np.asarray(z[f"s1_{i:05d}"], np.float32),
+                    s2=np.asarray(z[f"s2_{i:05d}"], np.float32),
+                    n=int(ent["n"]), rounds_done=int(ent["rounds_done"]))
+                state.entries[st.chash] = st
+
+    def _replay_journal(self, state: RecoveredState) -> None:
+        try:
+            with open(self.journal_path, "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            return
+        offset = 0
+        good_end = 0
+        while True:
+            header_end = offset + _HEADER_BYTES
+            if header_end > len(data):
+                break                               # partial header
+            if data[offset:offset + len(_MAGIC)] != _MAGIC:
+                break                               # corrupt framing
+            length, crc = _HEADER.unpack_from(data, offset + len(_MAGIC))
+            end = header_end + length
+            if end > len(data):
+                break                               # torn payload
+            payload = data[header_end:end]
+            if zlib.crc32(payload) != crc:
+                break                               # bit rot / torn write
+            try:
+                record = json.loads(payload)
+            except ValueError:
+                break
+            self._apply(record, state)
+            state.journal_records += 1
+            good_end = end
+            offset = end
+        if good_end < len(data):
+            # drop the bad tail on disk too, so new appends framing-align
+            state.truncated_bytes = len(data) - good_end
+            self.close()
+            with open(self.journal_path, "r+b") as f:
+                f.truncate(good_end)
+                f.flush()
+                os.fsync(f.fileno())
+
+    def _apply(self, record: dict, state: RecoveredState) -> None:
+        kind = record.get("t")
+        if kind == "alloc":
+            chash = record["chash"]
+            n_fn = int(record["n_fn"])
+            if chash not in state.entries:
+                state.entries[chash] = EntryState(
+                    chash=chash, fn_offset=int(record["fn_offset"]),
+                    n_fn=n_fn, round_samples=int(record["round_samples"]),
+                    s1=np.zeros(n_fn, np.float32),
+                    s2=np.zeros(n_fn, np.float32))
+            state.next_id = max(state.next_id,
+                                int(record["fn_offset"]) + n_fn)
+        elif kind == "dep":
+            st = state.entries.get(record["chash"])
+            if st is None:
+                state.dropped_records += 1
+                return
+            round_index = int(record["round"])
+            if round_index < st.rounds_done:
+                return       # snapshot already folded it (benign overlap)
+            s1 = _decode_f32(record["s1"])
+            s2 = _decode_f32(record["s2"])
+            if round_index > st.rounds_done or s1.shape != (st.n_fn,):
+                state.dropped_records += 1          # can't fold a gap
+                return
+            # the same f32 left fold the live cache performed
+            st.s1 = st.s1 + s1
+            st.s2 = st.s2 + s2
+            st.n += int(record["n"])
+            st.rounds_done += 1
+        else:
+            state.dropped_records += 1
+
+    # -- compaction -----------------------------------------------------------
+    def snapshot(self, states: list[EntryState], *, next_id: int,
+                 round_samples: int) -> None:
+        """Atomically persist all stream states, then reset the journal."""
+        payload: dict[str, np.ndarray] = {}
+        entries_meta = []
+        for i, st in enumerate(states):
+            payload[f"s1_{i:05d}"] = np.ascontiguousarray(st.s1, "<f4")
+            payload[f"s2_{i:05d}"] = np.ascontiguousarray(st.s2, "<f4")
+            entries_meta.append({
+                "chash": st.chash, "fn_offset": int(st.fn_offset),
+                "n_fn": int(st.n_fn),
+                "round_samples": int(st.round_samples),
+                "n": int(st.n), "rounds_done": int(st.rounds_done)})
+        meta = {"version": _SNAPSHOT_VERSION, "next_id": int(next_id),
+                "round_samples": int(round_samples), "entries": entries_meta}
+        payload["meta"] = np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode("utf-8"), np.uint8)
+
+        tmp = self.snapshot_path + ".tmp"
+        with self.mutex:
+            with open(tmp, "wb") as f:
+                np.savez(f, **payload)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.snapshot_path)
+            self._sync_dir()
+            # the snapshot supersedes every journal record; reset it (a
+            # crash between replace and reset only costs replay skips)
+            self.close()
+            with open(self.journal_path, "wb") as f:
+                f.flush()
+                os.fsync(f.fileno())
+
+    def _sync_dir(self) -> None:
+        try:
+            fd = os.open(self.state_dir, os.O_RDONLY)
+        except OSError:
+            return                                  # platform without dir fds
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def close(self) -> None:
+        if self._journal_f is not None and not self._journal_f.closed:
+            self._journal_f.close()
+        self._journal_f = None

@@ -1,0 +1,78 @@
+"""Hypothesis property: arbitrary deposit sequences round-trip exactly.
+
+For any interleaving of entry allocations, f32 round deposits and
+snapshot compactions, reloading the store must reproduce every stream's
+``(s1, s2, n, rounds_done)`` *bit-for-bit* plus the allocator's
+high-water mark — the invariant that makes a warm restart
+indistinguishable from never having died.
+"""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason=("property tests need hypothesis (pip install "
+            "hypothesis); the rest of the suite runs without it"))
+from hypothesis import given, settings, strategies as st
+
+from repro.core import harmonic_family
+from repro.core.direct_mc import SumsState
+from repro.service import ResultCache
+from repro.service.store import DurableStore
+
+f32 = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32)
+
+
+@st.composite
+def deposit_scenarios(draw):
+    """Entries with shapes, an interleaved deposit order, f32 round sums,
+    and compaction points sprinkled anywhere in the sequence."""
+    n_entries = draw(st.integers(1, 3))
+    n_fns = [draw(st.integers(1, 4)) for _ in range(n_entries)]
+    rounds = [draw(st.integers(0, 3)) for _ in range(n_entries)]
+    order = draw(st.permutations(
+        [i for i, k in enumerate(rounds) for _ in range(k)]))
+    deposits = [(i, tuple(draw(st.lists(f32, min_size=n_fns[i],
+                                        max_size=n_fns[i]))),
+                 tuple(draw(st.lists(f32, min_size=n_fns[i],
+                                     max_size=n_fns[i]))),
+                 draw(st.integers(1, 10_000)))
+                for i in order]
+    compact_after = draw(st.sets(st.integers(0, max(len(deposits), 1))))
+    return n_fns, deposits, compact_after
+
+
+@given(deposit_scenarios())
+@settings(max_examples=25, deadline=None)
+def test_journal_replay_roundtrip_exact(scenario):
+    n_fns, deposits, compact_after = scenario
+    with tempfile.TemporaryDirectory() as root:
+        store = DurableStore(root)
+        cache = ResultCache(round_samples=64, store=store)
+        entries = [cache.get_or_allocate(f"e{i}", harmonic_family(n_fn, 2))
+                   for i, n_fn in enumerate(n_fns)]
+        if 0 in compact_after:
+            cache.snapshot_to_store()
+        for step, (i, s1, s2, n) in enumerate(deposits, start=1):
+            cache.deposit(entries[i], entries[i].rounds_done, SumsState(
+                s1=np.asarray(s1, np.float32),
+                s2=np.asarray(s2, np.float32), n=n))
+            if step in compact_after:
+                cache.snapshot_to_store()
+        expected = {e.chash: e.snapshot() for e in entries}
+        next_id = cache.stats()["function_ids_allocated"]
+        store.close()
+
+        cache2 = ResultCache(round_samples=64, store=DurableStore(root))
+        assert cache2.stats()["function_ids_allocated"] == next_id
+        for i, entry in enumerate(entries):
+            revived = cache2.get(entry.chash, harmonic_family(n_fns[i], 2))
+            assert revived is not None
+            assert revived.fn_offset == entry.fn_offset
+            s1, s2, n, done = expected[entry.chash]
+            assert revived.s1.tobytes() == s1.tobytes()     # exact bits
+            assert revived.s2.tobytes() == s2.tobytes()
+            assert (revived.n, revived.rounds_done) == (n, done)
