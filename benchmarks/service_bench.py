@@ -1,7 +1,8 @@
-"""Service-layer benchmark: batched vs sequential, cold vs warm cache.
+"""Service-layer benchmark: batched vs sequential, cold vs warm cache,
+multi-round waves vs per-round waves.
 
-Measures the two properties the service exists for, and asserts both
-(this doubles as the CI regression gate via ``--smoke``):
+Measures the properties the service exists for, and asserts them (this
+doubles as the CI regression gate via ``--smoke``):
 
 * **batching** — a stream of >= 64 mixed-dimension requests served by
   the continuously-batching engine must issue *strictly fewer* kernel
@@ -11,7 +12,13 @@ Measures the two properties the service exists for, and asserts both
 
 * **caching** — replaying the identical request stream against the warm
   engine must return meeting-precision results with *zero* new launches,
-  and topping up to a larger budget must only pay for the delta rounds.
+  and topping up to a larger budget must only pay for the delta rounds;
+
+* **wave pipeline** — an R-round refinement wave over B dimension
+  buckets must run in at most **B** fused multi-round launches (the
+  per-round path pays R x B), with per-round deposited sums
+  *bit-identical* to the per-round path (digest equality on the final
+  estimates), reported as launches-per-wave and wall-clock-per-wave.
 
 Wall-clock numbers are reported but only meaningful on a real
 accelerator; on CPU the Pallas kernels run interpreted.  Launch counts
@@ -56,8 +63,59 @@ def _batched(engine, reqs):
     return results, template.launch_count(), time.time() - t0
 
 
+def _refinement_wave(reqs, *, seed: int, round_samples: int, rounds: int):
+    """R-round refinement: one multi-round wave vs R per-round waves.
+
+    Returns the comparison dict (also asserts the CI gate: launches for
+    the fused wave <= B buckets, and final estimates bit-identical to
+    the per-round path — same per-round sums, same fold order).
+    """
+    big = [type(r).make(r.families, n_samples=rounds * round_samples)
+           for r in reqs]
+    buckets = len({f.dim for r in reqs for f in r.families})
+
+    fused_engine = IntegrationEngine(seed=seed, round_samples=round_samples,
+                                     max_rounds_per_wave=rounds)
+    fused_res, fused_launches, fused_dt = _batched(fused_engine, big)
+    fused_waves = fused_engine.stats.waves
+
+    per_engine = IntegrationEngine(seed=seed, round_samples=round_samples,
+                                   max_rounds_per_wave=1)
+    per_res, per_launches, per_dt = _batched(per_engine, big)
+    per_waves = per_engine.stats.waves
+
+    for f, p in zip(fused_res, per_res):
+        assert f.means.tobytes() == p.means.tobytes(), \
+            "multi-round wave is not bit-identical to the per-round path"
+        assert f.stderrs.tobytes() == p.stderrs.tobytes()
+    assert fused_launches <= buckets, (
+        f"an {rounds}-round wave over {buckets} buckets took "
+        f"{fused_launches} launches (gate: <= {buckets})")
+    assert per_launches == rounds * fused_launches, \
+        (per_launches, rounds, fused_launches)
+
+    print(f"refinement wave: {rounds} rounds x {buckets} buckets -> "
+          f"{fused_launches} launches in {fused_waves} wave(s) "
+          f"(per-round path: {per_launches} launches in {per_waves} waves); "
+          f"{per_launches / fused_launches:.1f}x fewer, bit-identical")
+    return {
+        "rounds": rounds, "buckets": buckets,
+        "fused": {"launches": int(fused_launches), "waves": int(fused_waves),
+                  "launches_per_wave": fused_launches / max(fused_waves, 1),
+                  "seconds": round(fused_dt, 3),
+                  "seconds_per_wave": round(fused_dt / max(fused_waves, 1),
+                                            3)},
+        "per_round": {"launches": int(per_launches), "waves": int(per_waves),
+                      "launches_per_wave": per_launches / max(per_waves, 1),
+                      "seconds": round(per_dt, 3),
+                      "seconds_per_wave": round(per_dt / max(per_waves, 1),
+                                                3)},
+    }
+
+
 def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
-        seed: int = 0, json_out: str | None = None) -> int:
+        seed: int = 0, json_out: str | None = None,
+        refine_rounds: int = 4) -> int:
     reqs = demo_workload(n_requests, n_fn=n_fn, n_samples=n_samples)
     n_fams = sum(len(r.families) for r in reqs)
     dims = sorted({f.dim for r in reqs for f in r.families})
@@ -90,6 +148,11 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
     top_res, top_launches, top_dt = _batched(engine, top_reqs)
     assert 0 < top_launches <= cold_launches, (top_launches, cold_launches)
 
+    # R-round refinement wave: R x B launches -> B, bit-identical
+    refinement = _refinement_wave(reqs, seed=seed,
+                                  round_samples=round_samples,
+                                  rounds=refine_rounds)
+
     rows = []
     print("path,requests,launches,seconds,req_per_s")
     for name, res, launches, dt in [
@@ -112,6 +175,7 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
             json.dump({"bench": "service", "requests": n_requests,
                        "n_fn": n_fn, "n_samples": n_samples,
                        "round_samples": round_samples, "rows": rows,
+                       "refinement_wave": refinement,
                        "items_deduped": engine.stats.items_deduped,
                        "cache": engine.cache.stats()},
                       f, indent=2, sort_keys=True)
@@ -125,6 +189,9 @@ def main() -> int:
     ap.add_argument("--n-fn", type=int, default=8)
     ap.add_argument("--samples", type=int, default=16384)
     ap.add_argument("--round-samples", type=int, default=8192)
+    ap.add_argument("--refine-rounds", type=int, default=4,
+                    help="R of the refinement-wave phase (R x B -> B "
+                         "launch gate)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (still >= 64 requests, smaller "
                          "families and budgets)")
@@ -133,9 +200,11 @@ def main() -> int:
     args = ap.parse_args()
     if args.smoke:
         return run(max(64, args.requests), n_fn=4, n_samples=8192,
-                   round_samples=4096, json_out=args.json_out)
+                   round_samples=4096, json_out=args.json_out,
+                   refine_rounds=args.refine_rounds)
     return run(args.requests, n_fn=args.n_fn, n_samples=args.samples,
-               round_samples=args.round_samples, json_out=args.json_out)
+               round_samples=args.round_samples, json_out=args.json_out,
+               refine_rounds=args.refine_rounds)
 
 
 if __name__ == "__main__":

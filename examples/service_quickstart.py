@@ -13,10 +13,20 @@ from its stderr-aware cache.  Three invariants to notice below:
 2. re-asking to the *same or looser* precision costs zero launches;
 3. asking for *more* precision resumes the cached counter stream
    (top-up) — the result is bit-identical to having run the bigger
-   budget from the start;
+   budget from the start, and all the delta rounds of a wave ride in
+   ONE multi-round fused kernel launch per dimension bucket (an R-round
+   refinement costs B launches, not R x B);
 4. with a ``state_dir`` all of the above survives process death: the
-   cache journals every round to disk, so a brand-new process (or one
-   recovering from a SIGKILL) warm-starts the same streams.
+   cache journals every round to disk — one group-committed fsync per
+   wave — so a brand-new process (or one recovering from a SIGKILL)
+   warm-starts the same streams.
+
+Engine knobs this example leaves at their defaults:
+``max_rounds_per_wave`` (the R of each fused multi-round launch),
+``max_items_per_wave`` (total wave budget, shared round-robin across
+requests so heavy asks can't starve small ones), and
+``pipeline_waves`` (the background worker dispatches wave k+1 while
+wave k's results deposit — see ``engine.start()``).
 """
 
 import sys, os
@@ -54,9 +64,11 @@ np.testing.assert_array_equal(res_c.means, res_b.means)
 print("warm: 0 launches, identical result")
 
 # -- top-up: resume the stream instead of recomputing ---------------------
+# the 4 delta rounds arrive in ONE multi-round fused launch (R x B -> B)
 template.reset_launch_count()
 res_d = client.integrate([harmonic_family(50, 4)], n_samples=65536)
-print(f"top-up to 2x budget: {template.launch_count()} launches, "
+assert template.launch_count() == 1
+print(f"top-up to 2x budget: {template.launch_count()} launch, "
       f"stderr {res_b.stderrs.max():.2e} -> {res_d.stderrs.max():.2e}")
 
 # -- or ask for precision directly ----------------------------------------

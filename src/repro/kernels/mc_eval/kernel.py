@@ -76,4 +76,4 @@ def mc_harmonic_pallas(scalars, fn_ids, a, b, k, lo, hi, *,
         scalars, fn_ids, packed, jnp.asarray(lo, jnp.float32),
         jnp.asarray(hi, jnp.float32), dim=dim,
         n_sample_blocks=n_sample_blocks, bodies=(harmonic_body,),
-        sampler="mc", interpret=interpret, name="mc_eval_harmonic")
+        sampler="mc", interpret=interpret, name="mc_eval_harmonic")[0]

@@ -24,6 +24,23 @@ the device in a single launch.  This module plans that:
 
 The plan depends only on the spec (shapes, forms, dims) — callers build
 it once and re-run it per trial/round with different keys/offsets.
+
+Compile-cache keying: a bucket's kernel ``name`` (a static argument of
+the jitted ``template.fused_mc_pallas``) encodes only the bucket's
+**shape signature** — (sampler, dim, padded rows, packed cols) — never
+which families produced it.  Two different request mixes that bucket to
+the same shapes and the same body tuple therefore hit the same compiled
+executable instead of retracing; only genuinely new shapes pay a
+compile.
+
+Multi-round plans: :func:`eval_plan_rounds` (and its mesh sibling
+:func:`sharded_eval_plan_rounds`) evaluate R consecutive fixed-size
+counter rounds of every bucket in ONE launch each — a refinement wave of
+R rounds costs B launches instead of R x B.  Per-family ``start_rounds``
+ride in a per-function-block SMEM operand, so streams parked at
+different refinement depths still share the launch; per-round sums are
+bit-identical to the R single-round launches they replace (the service
+cache's in-order fold and resume invariants depend on this).
 """
 
 from __future__ import annotations
@@ -147,7 +164,11 @@ def plan_spec(spec, *, sampler: str = "mc",
             fn_ids=jnp.concatenate(id_parts),
             form_ids=form_ids,
             slices=tuple(slices),
-            name=f"mc_eval_fused_{sampler}_d{dim}x{len(idxs)}fam",
+            # shape-signature name: identical for every entry mix that
+            # buckets to these shapes, so the jit compile cache is keyed
+            # by what the compiler actually sees, not by which families
+            # happened to arrive (see module docstring)
+            name=f"mc_eval_fused_{sampler}_d{dim}f{row}c{n_cols}",
         ))
     return FusionPlan(buckets=tuple(buckets), unfused=tuple(unfused),
                       sampler=sampler)
@@ -178,11 +199,78 @@ def eval_plan(plan: FusionPlan, n_samples: int, key, *,
             scalars, bucket.fn_ids, bucket.packed, bucket.lo, bucket.hi,
             form_ids=bucket.form_ids, dirvecs=dirvecs, dim=bucket.dim,
             n_sample_blocks=n_sample_blocks, bodies=bucket.bodies,
-            sampler=plan.sampler, interpret=interpret, name=bucket.name)
+            sampler=plan.sampler, interpret=interpret, name=bucket.name)[0]
         for sl in bucket.slices:
             rows = sums[sl.row_start:sl.row_start + sl.n_fn]
             out[sl.family_index] = SumsState(
                 s1=rows[:, 0], s2=rows[:, 1], n=jnp.float32(n_samples))
+    return out
+
+
+def _round_base_for(bucket: _Bucket, start_rounds, round_samples: int):
+    """u32 per-function-block window starts for a multi-round launch.
+
+    ``start_rounds`` maps family_index -> absolute index of the first
+    round this launch evaluates for that family.  Blocks are per-family
+    by construction (families are padded to F_BLK multiples), so the
+    per-block value is exact; shard-padding blocks keep offset 0 (their
+    rows are sliced off anyway).
+    """
+    n_blocks = bucket.fn_ids.shape[0] // F_BLK
+    base = np.zeros(n_blocks, np.uint32)
+    for sl in bucket.slices:
+        b0 = sl.row_start // F_BLK
+        nb = math.ceil(sl.n_fn / F_BLK)
+        # counters are u32: streams wrap at 2^32 samples, exactly like
+        # the scalar sample_offset path
+        start = (int(start_rounds[sl.family_index]) * int(round_samples))
+        base[b0:b0 + nb] = np.uint32(start & 0xFFFFFFFF)
+    return jnp.asarray(base)
+
+
+def eval_plan_rounds(plan: FusionPlan, round_samples: int, n_rounds: int,
+                     key, *, start_rounds, interpret: bool | None = None):
+    """R consecutive fixed-size rounds of every bucket, ONE launch each.
+
+    Args:
+      round_samples: samples per round (every round is full-size; the
+        service cache's round quantum).
+      n_rounds: consecutive rounds to evaluate per family.
+      start_rounds: family_index -> absolute first round index; families
+        may start at different depths (fused top-ups).
+    Returns:
+      {family_index: (SumsState, ...)} — ``n_rounds`` states in round
+      order, each bit-identical to the single-round
+      :func:`eval_plan` call at ``sample_offset = round * round_samples``.
+    """
+    from repro.core.direct_mc import SumsState
+
+    interpret = resolve_interpret(interpret)
+    n_sample_blocks = max(1, math.ceil(int(round_samples) / S_BLK))
+    scalars = template.pack_scalars(key, 0, round_samples,
+                                    round_stride=round_samples)
+
+    out: dict[int, tuple] = {}
+    for bucket in plan.buckets:
+        dirvecs = None
+        if plan.sampler == "sobol":
+            from repro.core.sobol import direction_vectors
+            dirvecs = jnp.asarray(direction_vectors(bucket.dim))
+        round_base = _round_base_for(bucket, start_rounds, round_samples)
+        template.record_launch()
+        sums = template.fused_mc_pallas(
+            scalars, bucket.fn_ids, bucket.packed, bucket.lo, bucket.hi,
+            form_ids=bucket.form_ids, round_base=round_base,
+            dirvecs=dirvecs, dim=bucket.dim,
+            n_sample_blocks=n_sample_blocks, bodies=bucket.bodies,
+            n_rounds=n_rounds, sampler=plan.sampler, interpret=interpret,
+            name=f"{bucket.name}_r{n_rounds}")
+        for sl in bucket.slices:
+            rows = sums[:, sl.row_start:sl.row_start + sl.n_fn]
+            out[sl.family_index] = tuple(
+                SumsState(s1=rows[r, :, 0], s2=rows[r, :, 1],
+                          n=jnp.float32(round_samples))
+                for r in range(n_rounds))
     return out
 
 
@@ -270,7 +358,7 @@ def sharded_eval_plan(plan: FusionPlan, n_samples: int, key, mesh, *,
                 dirvecs=_dirvecs, dim=_bucket.dim,
                 n_sample_blocks=n_sample_blocks, bodies=_bucket.bodies,
                 sampler=plan.sampler, interpret=interpret,
-                name=_bucket.name + "_sharded")
+                name=_bucket.name + "_sharded")[0]
             return jax.lax.psum(sums, sample_axes)
 
         in_specs = [fs, fs, fs, fs]
@@ -288,4 +376,82 @@ def sharded_eval_plan(plan: FusionPlan, n_samples: int, key, mesh, *,
             rows = sums[sl.row_start:sl.row_start + sl.n_fn]
             out[sl.family_index] = SumsState(
                 s1=rows[:, 0], s2=rows[:, 1], n=n_actual)
+    return out
+
+
+def sharded_eval_plan_rounds(plan: FusionPlan, round_samples: int,
+                             n_rounds: int, key, mesh, *, start_rounds,
+                             fn_axis: str = "model", sample_axes=("data",),
+                             interpret: bool | None = None):
+    """Mesh variant of :func:`eval_plan_rounds`: R rounds x B buckets in
+    B launches, *inside* ``shard_map``.
+
+    Each sample-axis shard evaluates its window of every round (the last
+    shard masks the tail, so each round draws exactly ``round_samples``
+    counters globally); one ``psum`` over the sample axes merges the
+    whole (n_rounds, fn, 2) stack at once.  Per-round sums are
+    bit-identical to ``n_rounds`` separate :func:`sharded_eval_plan`
+    calls: same per-shard counters, same in-shard fold order, and the
+    psum applies the same per-element association order regardless of
+    how many rounds ride in the stack.
+    """
+    from repro.compat import shard_map
+    from repro.core.direct_mc import SumsState
+
+    interpret = resolve_interpret(interpret)
+    sample_axes = tuple(sample_axes)
+    fn_par = mesh.shape[fn_axis]
+    sample_par = int(np.prod([mesh.shape[a] for a in sample_axes]))
+    per_shard = math.ceil(int(round_samples) / sample_par)
+    n_sample_blocks = max(1, math.ceil(per_shard / S_BLK))
+    k0, k1 = key
+    fs = P(fn_axis)
+
+    out: dict[int, tuple] = {}
+    for bucket in plan.buckets:
+        sb = _shard_bucket(bucket, fn_par)
+        round_base = _round_base_for(sb, start_rounds, round_samples)
+        dirvecs = None
+        if plan.sampler == "sobol":
+            from repro.core.sobol import direction_vectors
+            dirvecs = jnp.asarray(direction_vectors(sb.dim))
+
+        def local(fn_ids, packed, lo, hi, round_base, form_ids, *,
+                  _bucket=sb, _dirvecs=dirvecs):
+            idx = jnp.uint32(0)
+            mult = 1
+            for a in reversed(sample_axes):
+                idx = idx + jnp.uint32(jax.lax.axis_index(a)) * jnp.uint32(mult)
+                mult *= mesh.shape[a]
+            start = jnp.minimum(idx * jnp.uint32(per_shard),
+                                jnp.uint32(round_samples))
+            n_local = jnp.minimum(jnp.uint32(round_samples) - start,
+                                  jnp.uint32(per_shard))
+            scalars = template.pack_scalars((k0, k1), start, n_local,
+                                            round_stride=round_samples)
+            sums = template.fused_mc_pallas(
+                scalars, fn_ids, packed, lo, hi, form_ids=form_ids,
+                round_base=round_base, dirvecs=_dirvecs, dim=_bucket.dim,
+                n_sample_blocks=n_sample_blocks, bodies=_bucket.bodies,
+                n_rounds=n_rounds, sampler=plan.sampler,
+                interpret=interpret,
+                name=f"{_bucket.name}_r{n_rounds}_sharded")
+            return jax.lax.psum(sums, sample_axes)
+
+        in_specs = [fs, fs, fs, fs, fs]
+        args = [sb.fn_ids, sb.packed, sb.lo, sb.hi, round_base]
+        if sb.form_ids is not None:
+            in_specs.append(fs)
+            args.append(sb.form_ids)
+        else:
+            local = functools.partial(local, form_ids=None)
+        template.record_launch()
+        sums = shard_map(local, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=P(None, fn_axis))(*args)
+        for sl in bucket.slices:
+            rows = sums[:, sl.row_start:sl.row_start + sl.n_fn]
+            out[sl.family_index] = tuple(
+                SumsState(s1=rows[r, :, 0], s2=rows[r, :, 1],
+                          n=jnp.float32(int(round_samples)))
+                for r in range(n_rounds))
     return out

@@ -33,4 +33,5 @@ def mc_sobol_harmonic_pallas(scalars, fn_ids, dirvecs, a, b, k, lo, hi, *,
         scalars, fn_ids, packed, jnp.asarray(lo, jnp.float32),
         jnp.asarray(hi, jnp.float32), dirvecs=jnp.asarray(dirvecs, jnp.uint32),
         dim=dim, n_sample_blocks=n_sample_blocks, bodies=(harmonic_body,),
-        sampler="sobol", interpret=interpret, name="mc_eval_sobol_harmonic")
+        sampler="sobol", interpret=interpret,
+        name="mc_eval_sobol_harmonic")[0]

@@ -29,6 +29,20 @@ per block.  Sampling, domain mapping and reduction are shared across
 forms — this is what lets a heterogeneous ``MultiFunctionSpec`` run in
 one ``pallas_call`` per (dim, sampler) bucket instead of one per family.
 
+Multi-round evaluation: the grid carries an optional **round axis**
+(``n_rounds``) so one launch evaluates R consecutive counter-addressed
+sample windows, emitting per-round ``(sum f, sum f^2)`` partials in an
+``f32[n_rounds, n_fn_pad, 2]`` output.  Round ``r`` draws the counters
+``base + r * round_stride + [0, n_valid)`` — exactly the counters a
+separate launch with ``sample_offset = base + r * round_stride`` would
+draw, and each round's accumulator folds its sample blocks in the same
+order — so per-round sums are **bit-identical** to R single-round
+launches.  An optional per-function-block ``round_base`` operand lets
+function blocks start their windows at different offsets (the service
+fuses cache streams sitting at different refinement depths into one
+launch); blocks are per-family, so the Sobol point construction stays
+shared per (tile, dim) exactly as in the single-round kernel.
+
 All Pallas symbols come from :mod:`repro.kernels.pallas_compat` (the
 version-drift shim); nothing here imports ``jax.experimental`` directly.
 """
@@ -130,30 +144,43 @@ def sobol_tiles(idx, v, dim: int):
 
 
 def _fused_kernel(*refs, dim: int, bodies: tuple, sampler: str,
-                  has_forms: bool):
-    """One (function-block, sample-block) grid cell.
+                  has_forms: bool, has_round_base: bool, n_rounds: int):
+    """One (function-block, round, sample-block) grid cell.
 
-    Ref order: scalars, fn_ids, [form_ids], [dirvecs], packed, lo, hi, out.
-      scalars: SMEM u32[4] = (k0, k1, sample_offset, n_valid)
+    Ref order: scalars, fn_ids, [form_ids], [round_base], [dirvecs],
+    packed, lo, hi, out.
+      scalars: SMEM u32[4|5] = (k0, k1, sample_offset, n_valid
+               [, round_stride — required when n_rounds > 1])
       fn_ids:  SMEM u32[F_BLK] global function ids (RNG counters)
       form_ids: SMEM i32[1] body index of this function block (multi-form)
+      round_base: SMEM u32[1] additional per-block sample offset (fused
+               streams at different refinement depths)
       dirvecs: VMEM u32[dim, 32] Sobol direction vectors (sampler="sobol")
       packed:  VMEM f32[F_BLK, n_cols] form-packed parameters
       lo/hi:   VMEM f32[F_BLK, dim] domain boxes
-      out:     VMEM f32[F_BLK, 2] running (sum f, sum f^2) accumulator
+      out:     VMEM f32[1, F_BLK, 2] this round's running (sum f, sum f^2)
     """
     it = iter(refs)
     scalars_ref = next(it)
     fn_ids_ref = next(it)
     form_ref = next(it) if has_forms else None
+    rbase_ref = next(it) if has_round_base else None
     v_ref = next(it) if sampler == "sobol" else None
     packed_ref, lo_ref, hi_ref, out_ref = it
 
-    j = pl.program_id(1)
+    j = pl.program_id(2)
     k0 = scalars_ref[0]
     k1 = scalars_ref[1]
     sample_offset = scalars_ref[2]
     n_valid = scalars_ref[3]
+    if has_round_base:
+        sample_offset = sample_offset + rbase_ref[0]
+    if n_rounds > 1:
+        # round r's window starts round_stride counters after round r-1's;
+        # uint32 adds are exact, so this matches a single-round launch at
+        # sample_offset + r * round_stride bit for bit
+        r = pl.program_id(1)
+        sample_offset = sample_offset + jnp.uint32(r) * scalars_ref[4]
 
     local_idx = tile_sample_index(j)
     c0 = sample_offset + local_idx          # global sample counter
@@ -193,28 +220,37 @@ def _fused_kernel(*refs, dim: int, bodies: tuple, sampler: str,
     else:
         part = eval_block(bodies[0])
 
-    accumulate(j, out_ref, part)
+    accumulate(j, out_ref, part[None])     # (1, F_BLK, 2) round-r block
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "dim", "n_sample_blocks", "bodies", "sampler", "interpret", "name"))
+    "dim", "n_sample_blocks", "n_rounds", "bodies", "sampler", "interpret",
+    "name"))
 def fused_mc_pallas(scalars, fn_ids, packed, lo, hi, form_ids=None,
-                    dirvecs=None, *, dim: int, n_sample_blocks: int,
-                    bodies: tuple, sampler: str = "mc", interpret: bool,
+                    round_base=None, dirvecs=None, *, dim: int,
+                    n_sample_blocks: int, bodies: tuple, n_rounds: int = 1,
+                    sampler: str = "mc", interpret: bool,
                     name: str = "mc_eval_fused"):
-    """One pallas_call over a (padded) stack of functions.
+    """One pallas_call over a (padded) stack of functions x rounds.
 
     Args:
-      scalars: u32[4] (k0, k1, sample_offset, n_valid).
+      scalars: u32[4] (k0, k1, sample_offset, n_valid) — or u32[5] with a
+        trailing ``round_stride`` when ``n_rounds > 1`` (counters round r
+        draws start at ``offset + r * round_stride``).
       fn_ids: u32[n_fn_pad] with n_fn_pad % F_BLK == 0.
       packed: f32[n_fn_pad, n_cols] form-packed parameters.
       lo, hi: f32[n_fn_pad, dim] domain boxes.
       form_ids: optional i32[n_fn_pad // F_BLK] per-block body index
         (required when len(bodies) > 1; blocks must be form-homogeneous).
+      round_base: optional u32[n_fn_pad // F_BLK] per-block extra sample
+        offset, added to ``scalars[2]`` — lets one launch fuse function
+        blocks whose sample windows start at different stream depths.
       dirvecs: u32[dim, 32] Sobol direction vectors (sampler="sobol").
       bodies: static tuple of eval bodies (see module docstring).
+      n_rounds: consecutive counter windows to evaluate in this launch.
     Returns:
-      f32[n_fn_pad, 2] of (sum f, sum f^2) per function.
+      f32[n_rounds, n_fn_pad, 2] of per-round (sum f, sum f^2) per
+      function; each round bit-identical to its own single-round launch.
     """
     n_fn_pad = fn_ids.shape[0]
     assert n_fn_pad % F_BLK == 0
@@ -222,22 +258,31 @@ def fused_mc_pallas(scalars, fn_ids, packed, lo, hi, form_ids=None,
         raise ValueError(
             "multiple eval bodies need per-block form_ids; without them "
             "every block would silently run bodies[0]")
-    grid = (n_fn_pad // F_BLK, n_sample_blocks)
-    fn_blk = lambda i, j: (i, 0)
+    if n_rounds > 1 and scalars.shape[0] < 5:
+        raise ValueError(
+            "multi-round launches need scalars[4] = round_stride "
+            "(pack_scalars(..., round_stride=...))")
+    grid = (n_fn_pad // F_BLK, n_rounds, n_sample_blocks)
+    fn_blk = lambda i, r, j: (i, 0)
 
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.SMEM),                    # scalars
-        pl.BlockSpec((F_BLK,), lambda i, j: (i,),
+        pl.BlockSpec((F_BLK,), lambda i, r, j: (i,),
                      memory_space=pltpu.SMEM),                    # fn_ids
     ]
     args = [scalars, fn_ids]
     has_forms = form_ids is not None
     if has_forms:
-        in_specs.append(pl.BlockSpec((1,), lambda i, j: (i,),
+        in_specs.append(pl.BlockSpec((1,), lambda i, r, j: (i,),
                                      memory_space=pltpu.SMEM))    # form_ids
         args.append(form_ids)
+    has_round_base = round_base is not None
+    if has_round_base:
+        in_specs.append(pl.BlockSpec((1,), lambda i, r, j: (i,),
+                                     memory_space=pltpu.SMEM))    # round_base
+        args.append(round_base)
     if sampler == "sobol":
-        in_specs.append(pl.BlockSpec((dim, 32), lambda i, j: (0, 0)))
+        in_specs.append(pl.BlockSpec((dim, 32), lambda i, r, j: (0, 0)))
         args.append(dirvecs)
     n_cols = packed.shape[1]
     in_specs += [
@@ -249,28 +294,34 @@ def fused_mc_pallas(scalars, fn_ids, packed, lo, hi, form_ids=None,
 
     return pl.pallas_call(
         functools.partial(_fused_kernel, dim=dim, bodies=bodies,
-                          sampler=sampler, has_forms=has_forms),
+                          sampler=sampler, has_forms=has_forms,
+                          has_round_base=has_round_base, n_rounds=n_rounds),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((F_BLK, 2), fn_blk),
-        out_shape=jax.ShapeDtypeStruct((n_fn_pad, 2), jnp.float32),
+        out_specs=pl.BlockSpec((1, F_BLK, 2), lambda i, r, j: (r, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rounds, n_fn_pad, 2), jnp.float32),
         compiler_params=compiler_params(
-            # function blocks are independent; the sample axis revisits
-            # the accumulator block and must stay sequential
-            dimension_semantics=("parallel", "arbitrary")),
+            # function blocks and rounds write independent output blocks;
+            # the sample axis revisits its round's accumulator block and
+            # must stay sequential
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name=name,
     )(*args)
 
 
-def pack_scalars(key, sample_offset, n_samples):
-    """u32[4] SMEM operand shared by every fused MC kernel."""
-    return jnp.stack([
+def pack_scalars(key, sample_offset, n_samples, round_stride=None):
+    """u32[4] SMEM operand shared by every fused MC kernel — u32[5] with
+    the per-round counter stride when the launch is multi-round."""
+    parts = [
         jnp.asarray(key[0], jnp.uint32).reshape(()),
         jnp.asarray(key[1], jnp.uint32).reshape(()),
         jnp.asarray(sample_offset, jnp.uint32).reshape(()),
         jnp.asarray(n_samples, jnp.uint32).reshape(()),
-    ])
+    ]
+    if round_stride is not None:
+        parts.append(jnp.asarray(round_stride, jnp.uint32).reshape(()))
+    return jnp.stack(parts)
 
 
 def make_family_impl(form, sampler: str):
@@ -315,7 +366,7 @@ def make_family_impl(form, sampler: str):
             scalars, fn_ids, packed, lo, hi, dirvecs=dirvecs, dim=dim,
             n_sample_blocks=n_sample_blocks, bodies=(form.body,),
             sampler=sampler, interpret=interpret,
-            name=form.name if sampler == "mc" else f"{form.name}@{sampler}")
+            name=form.name if sampler == "mc" else f"{form.name}@{sampler}")[0]
         return SumsState(s1=out[:n_fn, 0], s2=out[:n_fn, 1],
                          n=jnp.float32(n_samples))
 

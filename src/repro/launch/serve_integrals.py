@@ -11,6 +11,16 @@ This is the service-layer sibling of ``repro.launch.integrate`` (the
 one-shot fault-tolerant job): same kernels, same counters, but requests
 arrive over time, dedupe against each other and top up cached streams.
 
+**Wave pipeline**: each wave fuses its rounds into multi-round kernels —
+an R-round refinement over B dimension buckets costs B launches instead
+of R x B — and with ``--thread`` the worker double-buffers waves
+(wave k+1 dispatches while wave k's results transfer, deposit and
+group-commit to the WAL; ``--no-pipeline`` serializes them).
+``--max-rounds-per-wave`` caps rounds per stream per wave (the fused
+kernel's R); ``--max-items-per-wave`` bounds the whole wave, with the
+budget assigned round-robin across requests so heavy precision asks
+cannot starve small latency-sensitive ones.
+
 **Warm starts**: pass ``--state-dir PATH`` and the engine journals every
 round deposit to disk (crash-safe, checksummed) and snapshots on clean
 shutdown.  Re-launching against the same state dir — even after a
@@ -81,6 +91,16 @@ def main():
     ap.add_argument("--target-stderr", type=float, default=None,
                     help="serve to precision instead of a fixed budget")
     ap.add_argument("--round-samples", type=int, default=8192)
+    ap.add_argument("--max-rounds-per-wave", type=int, default=8,
+                    help="rounds per stream per wave — the R of each "
+                         "fused multi-round launch")
+    ap.add_argument("--max-items-per-wave", type=int, default=None,
+                    help="total round budget per wave, assigned "
+                         "round-robin across pending requests (fairness "
+                         "under load); default unbounded")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="serialize waves instead of double-buffering "
+                         "dispatch against host deposits (--thread mode)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-kernel", action="store_true",
                     help="chunked JAX path instead of fused Pallas")
@@ -110,6 +130,9 @@ def main():
     engine = IntegrationEngine(
         seed=args.seed, round_samples=args.round_samples,
         use_kernel=not args.no_kernel, mesh=mesh,
+        max_rounds_per_wave=args.max_rounds_per_wave,
+        max_items_per_wave=args.max_items_per_wave,
+        pipeline_waves=not args.no_pipeline,
         state_dir=args.state_dir, compact_on_start=args.compact_on_start)
     if engine.cache.recovered is not None:
         rec = engine.cache.recovered

@@ -2,8 +2,9 @@
 #
 #   canonical  - deterministic canonicalization + content hashing of requests
 #   cache      - stderr-aware result cache with counter-stream top-up
-#   batcher    - cross-request coalescing into fused dimension buckets
-#   engine     - continuously-batching submit/poll worker with backpressure
+#   batcher    - cross-request coalescing into fused multi-round buckets
+#   engine     - continuously-batching submit/poll worker (fair wave
+#                planner, double-buffered wave pipeline, backpressure)
 #   store      - crash-safe journal + snapshot persistence (warm restarts)
 #   api        - request/response dataclasses and the blocking client
 

@@ -1,4 +1,4 @@
-"""Cross-request coalescing into fused dimension buckets.
+"""Cross-request coalescing into fused multi-round dimension buckets.
 
 The unit of work in the service is a **(canonical family, round)** pair:
 ``round_samples`` samples of one cached stream, addressed purely by
@@ -7,34 +7,49 @@ set of work items one engine wave produced — typically spanning many
 client requests at different cache fill levels — and evaluates them in
 as few kernel launches as possible:
 
-* items are grouped by ``(round_index, sampler)`` — every item in a
-  group shares the same sample window and therefore the same kernel
-  scalars;
-* each group's families are handed to the fused multi-family planner
-  (:mod:`repro.kernels.mc_eval.multi`), which buckets them by integrand
-  dimension and runs each bucket in ONE ``pallas_call`` — so one launch
-  serves every request that contributed a same-dimension family, exactly
-  mirroring the single-spec fusion of PR 1;
+* per (stream, sampler) the wave's rounds form one contiguous **span**
+  ``[start, start + count)`` rooted at the stream's fold frontier;
+* spans are grouped by ``(sampler, count)`` and each group's families go
+  to the fused multi-round planner (:mod:`repro.kernels.mc_eval.multi`),
+  which buckets them by integrand dimension and evaluates ALL ``count``
+  rounds of a bucket in ONE ``pallas_call`` (``eval_plan_rounds`` /
+  ``sharded_eval_plan_rounds``) — an R-round refinement wave over B
+  buckets costs B launches, not R x B.  Spans may start at different
+  stream depths (a cold stream and a top-up fuse into the same launch:
+  per-function-block ``round_base`` offsets carry each stream's window);
 * families whose form is not fusable fall back to the chunked JAX path,
-  one at a time (still counter-addressed, still cacheable).
+  one round at a time (still counter-addressed, still cacheable).
 
-Evaluation is **side-effect free until the end of the wave**: all sums
-are computed first and deposited into the cache afterwards, in round
-order.  Deposits of rounds the cache already folded are skipped by the
-cache (a replayed or racing wave recomputes bit-identical sums), so a
+Evaluation is split into :meth:`RoundBatcher.launch` (device dispatch —
+returns an :class:`InFlightWave` whose sums are still device futures
+under JAX async dispatch) and :meth:`RoundBatcher.deposit` (host
+transfer + one group-committed cache fold per wave).  The engine
+pipelines the two: wave k+1's launch overlaps wave k's transfer and
+deposit, keeping journaling off the device critical path.
+:meth:`RoundBatcher.execute` composes them for synchronous drivers.
+
+Deposits stay **side-effect free until the end of the wave** and are
+folded in round order per entry.  Rounds the cache already folded are
+skipped (a replayed or racing wave recomputes bit-identical sums), so a
 crash-and-restart of a wave (``run_with_restarts``) and concurrent
 ``step()`` drivers are both safe.
 
-Fusion plans are cached per (entry set, sampler): the packed/concatenated
-bucket operands depend only on the families and their counter offsets,
-so a multi-round refinement re-launches the same plan with new scalars
-instead of rebuilding it every wave.
+Fusion plans (the packed/concatenated bucket operands) are cached per
+(entry set, sampler) with **LRU eviction** — steady-state request mixes
+keep their plans hot instead of periodically re-planning everything.
+Compiled kernels are reused more broadly still: bucket kernel names
+encode only the shape signature, so a *new* entry set whose buckets
+match previously-seen shapes reuses the compiled executable (see
+:mod:`repro.kernels.mc_eval.multi`).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Sequence
+
+import numpy as np
 
 from repro.core import direct_mc
 from repro.core.direct_mc import SumsState
@@ -50,12 +65,34 @@ class WorkItem:
     sampler: str
 
 
+@dataclasses.dataclass(frozen=True)
+class _Span:
+    """One stream's contiguous slice of a wave: rounds [start, start+count)."""
+    entry: CacheEntry
+    sampler: str
+    start: int
+    count: int
+
+
+@dataclasses.dataclass
+class InFlightWave:
+    """A dispatched wave whose sums may still be computing on device.
+
+    ``results`` holds ``(entry, round_index, sums)`` with each entry's
+    rounds ascending; the arrays inside ``sums`` are jax values — they
+    materialize (blocking on the device) in :meth:`RoundBatcher.deposit`.
+    """
+    results: list[tuple[CacheEntry, int, SumsState]]
+    n_items: int
+
+
 class RoundBatcher:
-    """Coalesces work items into fused launches against one RNG key."""
+    """Coalesces work items into fused multi-round launches, one RNG key."""
 
     def __init__(self, cache: ResultCache, key, *, use_kernel: bool = True,
                  mesh=None, fn_axis: str = "model",
-                 sample_axes: Sequence[str] = ("data",), chunk: int = 8192):
+                 sample_axes: Sequence[str] = ("data",), chunk: int = 8192,
+                 plan_cache_size: int = 256):
         self.cache = cache
         self.key = key
         self.use_kernel = bool(use_kernel)
@@ -63,86 +100,139 @@ class RoundBatcher:
         self.fn_axis = fn_axis
         self.sample_axes = tuple(sample_axes)
         self.chunk = int(chunk)
-        self._plans: dict[tuple, object] = {}
+        self.plan_cache_size = int(plan_cache_size)
+        self._plans: collections.OrderedDict[tuple, object] = \
+            collections.OrderedDict()
 
     # -- wave evaluation ------------------------------------------------------
     def execute(self, items: Sequence[WorkItem]) -> int:
-        """Evaluate all items, then deposit; returns items executed.
+        """Launch + deposit one wave synchronously; returns items executed."""
+        return self.deposit(self.launch(items))
+
+    def launch(self, items: Sequence[WorkItem]) -> InFlightWave:
+        """Dispatch all items to the device; no cache side effects.
 
         Items are deduplicated (two requests wanting the same round of
-        the same stream cost one evaluation) and deposits happen only
-        after every group evaluated, keeping the wave restartable.
+        the same stream cost one evaluation), folded into per-stream
+        contiguous spans, and spans sharing a round count are evaluated
+        by one fused multi-round launch per dimension bucket.
         """
         unique = sorted(set(items),
-                        key=lambda it: (it.round_index, it.sampler, it.chash))
-        groups: dict[tuple[int, str], list[WorkItem]] = {}
-        for it in unique:
-            groups.setdefault((it.round_index, it.sampler), []).append(it)
+                        key=lambda it: (it.sampler, it.chash, it.round_index))
+        groups: dict[tuple[str, int], list[_Span]] = {}
+        for span in self._spans_of(unique):
+            groups.setdefault((span.sampler, span.count), []).append(span)
 
         results: list[tuple[CacheEntry, int, SumsState]] = []
-        for (round_index, sampler) in sorted(groups):
-            batch = groups[(round_index, sampler)]
-            entries = [self.cache.get(it.chash) for it in batch]
-            for it, entry in zip(batch, entries):
-                if entry is None:
-                    raise KeyError(f"work item for unknown entry {it.chash}")
-            results.extend(
-                (entry, round_index, sums)
-                for entry, sums in self._eval_group(entries, round_index,
-                                                    sampler))
+        for group_key in sorted(groups):
+            results.extend(self._launch_group(groups[group_key]))
+        return InFlightWave(results=results, n_items=len(unique))
 
-        # in-order left fold: per entry, rounds arrive ascending because
-        # groups were processed in round order
-        for entry, round_index, sums in results:
-            self.cache.deposit(entry, round_index, sums)
-        return len(unique)
+    def deposit(self, wave: InFlightWave) -> int:
+        """Materialize a launched wave and group-commit it to the cache.
 
-    def _eval_group(self, entries: list[CacheEntry], round_index: int,
-                    sampler: str):
-        """One fused evaluation of same-round entries. No side effects."""
+        Blocks on the device results (wave k's transfer overlaps wave
+        k+1's dispatch when the engine pipelines), then folds every round
+        through :meth:`ResultCache.deposit_wave` — one WAL fsync for the
+        whole wave.  Returns the wave's item count.
+        """
+        deposits = [
+            (entry, round_index,
+             SumsState(s1=np.asarray(sums.s1, np.float32),
+                       s2=np.asarray(sums.s2, np.float32),
+                       n=np.float32(np.asarray(sums.n))))
+            for entry, round_index, sums in wave.results]
+        self.cache.deposit_wave(deposits)
+        return wave.n_items
+
+    # -- wave shaping ---------------------------------------------------------
+    def _spans_of(self, unique: Sequence[WorkItem]) -> list[_Span]:
+        by_stream: dict[tuple[str, str], list[int]] = {}
+        for it in unique:
+            by_stream.setdefault((it.chash, it.sampler),
+                                 []).append(it.round_index)
+        spans = []
+        for (chash, sampler) in sorted(by_stream):
+            entry = self.cache.get(chash)
+            if entry is None:
+                raise KeyError(f"work item for unknown entry {chash}")
+            rounds = sorted(by_stream[(chash, sampler)])
+            if rounds != list(range(rounds[0], rounds[0] + len(rounds))):
+                raise ValueError(
+                    f"non-contiguous rounds {rounds} for stream "
+                    f"{chash[:16]}: the planner must emit gap-free spans")
+            spans.append(_Span(entry=entry, sampler=sampler,
+                               start=rounds[0], count=len(rounds)))
+        return spans
+
+    def _launch_group(self, spans: list[_Span]):
+        """One fused multi-round evaluation of same-count spans."""
         n = self.cache.round_samples
-        sample_offset = round_index * n
-        families = tuple(e.family for e in entries)
+        count = spans[0].count
+        sampler = spans[0].sampler
+        entries = [sp.entry for sp in spans]
         fn_offsets = [e.fn_offset for e in entries]
-        spec = MultiFunctionSpec(families=families)
+        spec = MultiFunctionSpec(families=tuple(e.family for e in entries))
 
-        fused: dict[int, SumsState] = {}
+        fused: dict[int, tuple] = {}
         if self.use_kernel:
             from repro.kernels.mc_eval import multi
-            plan_key = (tuple(e.chash for e in entries), sampler)
-            plan = self._plans.get(plan_key)
-            if plan is None:
-                if len(self._plans) >= 256:   # bound stale entry-set combos
-                    self._plans.clear()
-                plan = multi.plan_spec(spec, sampler=sampler,
-                                       fn_offsets=fn_offsets)
-                self._plans[plan_key] = plan
+            plan = self._plan_for(entries, sampler, spec, fn_offsets)
+            start_rounds = {i: sp.start for i, sp in enumerate(spans)}
             if self.mesh is not None:
-                fused = multi.sharded_eval_plan(
-                    plan, n, self.key, self.mesh, fn_axis=self.fn_axis,
-                    sample_axes=self.sample_axes,
-                    sample_offset=sample_offset)
+                fused = multi.sharded_eval_plan_rounds(
+                    plan, n, count, self.key, self.mesh,
+                    start_rounds=start_rounds, fn_axis=self.fn_axis,
+                    sample_axes=self.sample_axes)
             else:
-                fused = multi.eval_plan(plan, n, self.key,
-                                        sample_offset=sample_offset)
+                fused = multi.eval_plan_rounds(
+                    plan, n, count, self.key, start_rounds=start_rounds)
 
         out = []
-        for idx, entry in enumerate(entries):
+        for idx, sp in enumerate(spans):
             if idx in fused:
-                sums = fused[idx]
-            elif self.mesh is not None:
-                sums, _ = direct_mc.sharded_family_sums(
-                    entry.family, n, self.key, self.mesh,
-                    fn_axis=self.fn_axis, sample_axes=self.sample_axes,
-                    fn_offset=entry.fn_offset, sample_offset=sample_offset,
-                    chunk=self.chunk, use_kernel=self.use_kernel,
-                    sampler=sampler)
-                sums = SumsState(s1=sums.s1[: entry.n_fn],
-                                 s2=sums.s2[: entry.n_fn], n=sums.n)
-            else:
-                sums = direct_mc.family_sums(
-                    entry.family, n, self.key, fn_offset=entry.fn_offset,
-                    sample_offset=sample_offset, chunk=self.chunk,
-                    use_kernel=self.use_kernel, sampler=sampler)
-            out.append((entry, sums))
+                for r in range(count):
+                    out.append((sp.entry, sp.start + r, fused[idx][r]))
+                continue
+            # chunked fallback: one counter-addressed eval per round
+            for r in range(count):
+                sample_offset = (sp.start + r) * n
+                if self.mesh is not None:
+                    sums, _ = direct_mc.sharded_family_sums(
+                        sp.entry.family, n, self.key, self.mesh,
+                        fn_axis=self.fn_axis, sample_axes=self.sample_axes,
+                        fn_offset=sp.entry.fn_offset,
+                        sample_offset=sample_offset, chunk=self.chunk,
+                        use_kernel=self.use_kernel, sampler=sampler)
+                    sums = SumsState(s1=sums.s1[: sp.entry.n_fn],
+                                     s2=sums.s2[: sp.entry.n_fn], n=sums.n)
+                else:
+                    sums = direct_mc.family_sums(
+                        sp.entry.family, n, self.key,
+                        fn_offset=sp.entry.fn_offset,
+                        sample_offset=sample_offset, chunk=self.chunk,
+                        use_kernel=self.use_kernel, sampler=sampler)
+                out.append((sp.entry, sp.start + r, sums))
         return out
+
+    def _plan_for(self, entries: list[CacheEntry], sampler: str, spec,
+                  fn_offsets):
+        """LRU-cached fusion plan for this exact entry set.
+
+        The plan holds packed per-entry operands, so the cache key is the
+        entry identity tuple; eviction is least-recently-used (a full
+        cache drops only the coldest mix, never the working set).  The
+        *compiled* kernel behind a plan is shared by shape signature —
+        see the module docstring.
+        """
+        from repro.kernels.mc_eval import multi
+        plan_key = (tuple(e.chash for e in entries), sampler)
+        plan = self._plans.get(plan_key)
+        if plan is not None:
+            self._plans.move_to_end(plan_key)
+            return plan
+        plan = multi.plan_spec(spec, sampler=sampler, fn_offsets=fn_offsets)
+        self._plans[plan_key] = plan
+        while len(self._plans) > self.plan_cache_size:
+            self._plans.popitem(last=False)
+        return plan

@@ -276,35 +276,83 @@ class ResultCache:
         is exact).  A round *beyond* the fold frontier is a planner bug
         and raises: folding it would skip samples.
         """
-        s1_delta = np.asarray(sums.s1, np.float32)
-        s2_delta = np.asarray(sums.s2, np.float32)
-        n_delta = int(np.asarray(sums.n))
+        return self.deposit_wave([(entry, round_index, sums)],
+                                 on_ahead="raise") == 1
+
+    def deposit_wave(self, deposits, *, on_ahead: str = "skip") -> int:
+        """Group-commit a whole wave of round deposits: ONE journal fsync.
+
+        ``deposits`` is a sequence of ``(entry, round_index, sums)`` with
+        each entry's rounds in ascending order (the batcher emits them
+        that way).  Rounds already folded are skipped unjournaled (exact:
+        counter addressing makes any recomputation bit-identical).  The
+        accepted records are journaled in one batch write + fsync
+        (:meth:`DurableStore.append_deposits`) *before* any of them
+        folds, preserving WAL ordering: a crash can lose a suffix of the
+        wave, never a folded round.  Returns the number of rounds folded.
+
+        Rounds *beyond* an entry's fold frontier are, by default, also
+        skipped (unfolded, unjournaled): a wave racing another driver can
+        legitimately carry rounds whose predecessors are still in the
+        other driver's in-flight wave — folding them would skip samples,
+        so they are dropped and the planner re-schedules them once the
+        frontier catches up.  ``on_ahead="raise"`` turns that into an
+        error (the single-round :meth:`deposit` contract, where an
+        ahead-of-frontier round can only be a planner bug).
+
+        Durable path locking: the store mutex is held across journal +
+        fold so the write-ahead batch and the in-memory folds are one
+        atomic unit w.r.t. concurrent deposits and snapshot compaction —
+        while the fsync runs OUTSIDE the cache lock, leaving readers
+        (submit peeks, meets, stats) unblocked.  Lock order everywhere:
+        store.mutex -> cache lock, never the reverse.
+        """
+        recs = [(entry, int(round_index),
+                 np.asarray(sums.s1, np.float32),
+                 np.asarray(sums.s2, np.float32),
+                 int(np.asarray(sums.n)))
+                for entry, round_index, sums in deposits]
         if self.store is None:
             with self._lock:
-                return self._fold_locked(entry, round_index,
-                                         s1_delta, s2_delta, n_delta)
-        # Durable path: hold the store mutex across journal + fold so the
-        # write-ahead record and the in-memory fold are one atomic unit
-        # w.r.t. concurrent deposits and snapshot compaction — while the
-        # per-round fsync runs OUTSIDE the cache lock, leaving readers
-        # (submit peeks, meets, stats) unblocked.  Lock order everywhere:
-        # store.mutex -> cache lock, never the reverse.
+                accepted = self._admit_locked(recs, on_ahead)
+                return sum(
+                    self._fold_locked(entry, ri, s1, s2, n)
+                    for entry, ri, s1, s2, n in accepted)
         with self.store.mutex:
             with self._lock:
-                done = entry._state[3]
-            if round_index < done:
-                return False       # replayed round: exact no-op, unjournaled
-            if round_index > done:
-                raise ValueError(
-                    f"deposit gap: round {round_index} into entry at "
-                    f"round {done}")
-            # write-ahead: journal the exact f32 bits before folding, so
-            # a replayed journal performs this same left fold
-            self.store.append_deposit(entry.chash, round_index,
-                                      s1_delta, s2_delta, n_delta)
+                accepted = self._admit_locked(recs, on_ahead)
+            self.store.append_deposits(
+                self.store.deposit_record(entry.chash, ri, s1, s2, n)
+                for entry, ri, s1, s2, n in accepted)
             with self._lock:
-                return self._fold_locked(entry, round_index,
-                                         s1_delta, s2_delta, n_delta)
+                return sum(
+                    self._fold_locked(entry, ri, s1, s2, n)
+                    for entry, ri, s1, s2, n in accepted)
+
+    def _admit_locked(self, recs, on_ahead: str):
+        """Filter a deposit batch against a local frontier image.
+
+        The frontier advances per accepted record, so consecutive rounds
+        of one entry in the same wave chain correctly.  Caller must hold
+        the cache lock; in the durable path the store mutex additionally
+        keeps the admitted set valid until the folds land (no other
+        depositor can move a frontier in between).
+        """
+        frontier = {id(e): e._state[3] for e, *_ in recs}
+        accepted = []
+        for entry, ri, s1, s2, n in recs:
+            done = frontier[id(entry)]
+            if ri < done:
+                continue               # replayed round: exact, unjournaled
+            if ri > done:
+                if on_ahead == "raise":
+                    raise ValueError(
+                        f"deposit gap: round {ri} into entry at "
+                        f"round {done}")
+                continue               # predecessors still in flight
+            accepted.append((entry, ri, s1, s2, n))
+            frontier[id(entry)] = done + 1
+        return accepted
 
     def _fold_locked(self, entry: CacheEntry, round_index: int,
                      s1_delta, s2_delta, n_delta: int) -> bool:

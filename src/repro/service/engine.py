@@ -12,15 +12,26 @@ Life of a request:
    :class:`~repro.service.api.Backpressure` when non-blocking).
 
 2. **wave** (``step``) — the engine sweeps the pending table, asks the
-   cache how many more rounds each entry needs, and emits deduplicated
-   ``(entry, round)`` work items — two clients scanning overlapping
-   parameter grids share evaluations here.  The
+   cache how many more rounds each entry needs beyond its fold frontier
+   *plus whatever is already in flight*, and assigns the wave's round
+   budget **fairly**: requests are visited round-robin (one round per
+   stream per pass, rotating the starting request every wave), so when
+   ``max_items_per_wave`` bounds the wave, a heavy precision ask can
+   never starve a small latency-sensitive one.  The
    :class:`~repro.service.batcher.RoundBatcher` coalesces the wave into
-   fused dimension-bucket launches.  Each wave runs under the
+   fused multi-round dimension-bucket launches (an R-round wave over B
+   buckets costs B ``pallas_call``\\ s).  Each wave runs under the
    :class:`~repro.distributed.fault_tolerance.StepWatchdog` and inside
    :func:`~repro.distributed.fault_tolerance.run_with_restarts`: because
    work is counter-addressed and deposits happen only at wave end, a
    crashed wave replays identically.
+
+   The background worker **pipelines** waves (double buffering): wave
+   k+1's device work is dispatched while wave k's results transfer and
+   group-commit on the host, keeping deposits and WAL journaling off the
+   device critical path (``pipeline_waves=False`` restores strictly
+   serial waves).  In-flight rounds are tracked per stream so the
+   planner schedules beyond them instead of re-planning them.
 
 3. **complete** — requests whose entries all meet their precision are
    finalized from the cache accumulators and their tickets released.
@@ -49,7 +60,7 @@ from repro.core import rng as rng_lib
 from repro.distributed.fault_tolerance import StepWatchdog, run_with_restarts
 from repro.service.api import (Backpressure, IntegrationRequest,
                                IntegrationResult)
-from repro.service.batcher import RoundBatcher, WorkItem
+from repro.service.batcher import InFlightWave, RoundBatcher, WorkItem
 from repro.service.cache import CacheEntry, ResultCache
 from repro.service.canonical import canonical_family, family_hash
 from repro.service.store import DurableStore
@@ -87,7 +98,9 @@ class IntegrationEngine:
                  use_kernel: bool = True, mesh=None, fn_axis: str = "model",
                  sample_axes: Sequence[str] | None = None,
                  chunk: int = 8192, max_pending: int = 256,
-                 max_rounds_per_wave: int = 8, max_restarts: int = 2,
+                 max_rounds_per_wave: int = 8,
+                 max_items_per_wave: int | None = None,
+                 pipeline_waves: bool = True, max_restarts: int = 2,
                  max_retained_results: int = 4096,
                  watchdog: StepWatchdog | None = None,
                  state_dir: str | None = None,
@@ -126,6 +139,9 @@ class IntegrationEngine:
                 self.cache.snapshot_to_store()
         self.max_pending = int(max_pending)
         self.max_rounds_per_wave = int(max_rounds_per_wave)
+        self.max_items_per_wave = (None if max_items_per_wave is None
+                                   else int(max_items_per_wave))
+        self.pipeline_waves = bool(pipeline_waves)
         self.max_restarts = int(max_restarts)
         self.max_retained_results = int(max_retained_results)
         self.watchdog = watchdog if watchdog is not None else StepWatchdog()
@@ -137,9 +153,15 @@ class IntegrationEngine:
         self._results: collections.OrderedDict[int, IntegrationResult] = \
             collections.OrderedDict()
         self._next_ticket = 0
+        # rounds dispatched but not yet deposited, per stream: the
+        # planner schedules *beyond* these (pipelined waves, racing
+        # step() drivers) instead of re-planning them
+        self._inflight: dict[str, int] = {}
+        self._rr_cursor = 0
         self._lock = threading.RLock()
         self._work_cv = threading.Condition(self._lock)
         self._space_cv = threading.Condition(self._lock)
+        self._deposit_cv = threading.Condition(self._lock)
         self._worker: threading.Thread | None = None
         self._stop = False
 
@@ -243,15 +265,20 @@ class IntegrationEngine:
     def step(self) -> bool:
         """Run one batching wave synchronously.
 
-        Returns True when work was executed, False when the pending
-        table made no progress (empty or already satisfiable).
+        Returns True when work was executed (or is executing in another
+        driver's wave), False when the pending table made no progress
+        (empty or already satisfiable).
         """
         with self._lock:
             items = self._plan_wave()
-        if not items:
-            with self._lock:
+            if not items:
                 self._complete_ready()
-            return False
+                if self._awaiting_other_driver_locked():
+                    # every remaining round is in another driver's wave;
+                    # wait for a deposit instead of claiming deadlock
+                    self._deposit_cv.wait(timeout=1.0)
+                    return True
+                return False
 
         def wave(attempt: int) -> int:
             if attempt:
@@ -260,33 +287,99 @@ class IntegrationEngine:
             with self.watchdog:
                 return self.batcher.execute(items)
 
-        executed = run_with_restarts(wave, max_restarts=self.max_restarts)
+        try:
+            executed = run_with_restarts(wave, max_restarts=self.max_restarts)
+        except Exception:
+            with self._lock:
+                self._retire_items(items)
+            raise
         with self._lock:
+            self._retire_items(items)
             self.stats.waves += 1
             self.stats.items_executed += executed
             self._complete_ready()
         return True
 
+    def _awaiting_other_driver_locked(self) -> bool:
+        return any(self._inflight.get(e.chash) for p in self._pending.values()
+                   for e in p.entries)
+
     def _plan_wave(self) -> list[WorkItem]:
-        items: list[WorkItem] = []
-        seen: set[WorkItem] = set()
+        """Assign the wave's round budget fairly across pending requests.
+
+        Needs are computed beyond each stream's fold frontier plus rounds
+        already in flight (a pipelined or racing wave).  Allocation is
+        round-robin — one round per stream per pass, the starting stream
+        rotating every wave — so with a bounded ``max_items_per_wave``
+        every pending request makes progress every wave: heavy precision
+        asks cannot monopolize the budget.  Scheduled rounds are
+        registered in-flight; callers retire them after deposit (or on
+        permanent failure).  Caller must hold the engine lock.
+        """
+        info: dict[str, dict] = {}
+        order: list[str] = []
         for pend in self._pending.values():
             req = pend.request
             for entry in pend.entries:
-                need = self.cache.rounds_needed(
+                inflight = self._inflight.get(entry.chash, 0)
+                raw = self.cache.rounds_needed(
                     entry, target_stderr=req.target_stderr,
-                    n_samples=req.n_samples,
-                    max_rounds=self.max_rounds_per_wave)
-                if need:
+                    n_samples=req.n_samples, max_rounds=1 << 16)
+                need = min(max(0, raw - inflight), self.max_rounds_per_wave)
+                if need or inflight:
+                    # rounds are being computed on this request's behalf
                     pend.new_rounds_scheduled = True
-                for r in range(entry.rounds_done, entry.rounds_done + need):
-                    it = WorkItem(chash=entry.chash, round_index=r,
-                                  sampler=req.sampler)
-                    self.stats.items_requested += 1
-                    if it not in seen:
-                        seen.add(it)
-                        items.append(it)
+                self.stats.items_requested += need
+                rec = info.get(entry.chash)
+                if rec is None:
+                    info[entry.chash] = {"entry": entry,
+                                         "sampler": req.sampler,
+                                         "need": need}
+                    order.append(entry.chash)
+                else:
+                    rec["need"] = max(rec["need"], need)
+        if not any(info[c]["need"] for c in order):
+            return []
+
+        budget = (self.max_items_per_wave if self.max_items_per_wave
+                  else (1 << 62))
+        alloc = dict.fromkeys(order, 0)
+        start = self._rr_cursor % len(order)
+        self._rr_cursor += 1
+        progress = True
+        while budget > 0 and progress:
+            progress = False
+            for k in range(len(order)):
+                chash = order[(start + k) % len(order)]
+                if alloc[chash] < info[chash]["need"] and budget > 0:
+                    alloc[chash] += 1
+                    budget -= 1
+                    progress = True
+
+        items: list[WorkItem] = []
+        for chash in order:
+            if not alloc[chash]:
+                continue
+            rec = info[chash]
+            frontier = (rec["entry"].rounds_done
+                        + self._inflight.get(chash, 0))
+            items.extend(
+                WorkItem(chash=chash, round_index=r, sampler=rec["sampler"])
+                for r in range(frontier, frontier + alloc[chash]))
+            self._inflight[chash] = (self._inflight.get(chash, 0)
+                                     + alloc[chash])
         return items
+
+    def _retire_items(self, items: Sequence[WorkItem]) -> None:
+        """Drop items from the in-flight table (deposited or abandoned).
+        Caller must hold the engine lock."""
+        for it in items:
+            left = self._inflight.get(it.chash, 0) - 1
+            if left > 0:
+                self._inflight[it.chash] = left
+            else:
+                self._inflight.pop(it.chash, None)
+        self._deposit_cv.notify_all()
 
     def _meets(self, pend: _Pending) -> bool:
         req = pend.request
@@ -387,10 +480,108 @@ class IntegrationEngine:
                 raise TimeoutError("pending requests did not drain")
 
     def _run(self) -> None:
+        if not self.pipeline_waves:
+            while True:
+                with self._lock:
+                    while not self._pending and not self._stop:
+                        self._work_cv.wait(timeout=0.5)
+                    if self._stop:
+                        return
+                self.step()
+        self._run_pipelined()
+
+    def _run_pipelined(self) -> None:
+        """Double-buffered wave loop: dispatch wave k+1, then deposit
+        wave k.
+
+        ``launch`` only enqueues device work (JAX async dispatch), so by
+        the time ``deposit`` blocks on wave k's transfer the device is
+        already chewing on wave k+1 — host-side folding, group-commit
+        journaling and request completion all run off the device
+        critical path.  Deposits stay in wave order, so the cache's
+        in-order fold and the WAL's crash window are exactly those of
+        the serial loop.  On ``stop()`` the tail wave is deposited
+        before the worker exits.
+        """
+        inflight: tuple[InFlightWave, list[WorkItem]] | None = None
         while True:
             with self._lock:
-                while not self._pending and not self._stop:
+                while (not self._pending and inflight is None
+                       and not self._stop):
                     self._work_cv.wait(timeout=0.5)
-                if self._stop:
+                if self._stop and inflight is None:
                     return
-            self.step()
+                items = [] if self._stop else self._plan_wave()
+                if not items and inflight is None:
+                    self._complete_ready()
+                    if self._pending:
+                        # nothing plannable here, rounds owed to another
+                        # driver's wave: wait for its deposit
+                        self._deposit_cv.wait(timeout=0.5)
+                    continue
+
+            handle = None
+            if items:
+                def launch(attempt: int, _items=items) -> InFlightWave:
+                    if attempt:
+                        with self._lock:
+                            self.stats.restarts += 1
+                    with self.watchdog:
+                        return self.batcher.launch(_items)
+
+                try:
+                    handle = run_with_restarts(
+                        launch, max_restarts=self.max_restarts)
+                except Exception:
+                    # the worker is about to die: salvage the sibling
+                    # wave first (its rounds are real), and make sure no
+                    # in-flight registration outlives this thread — a
+                    # leaked count would wedge every other driver's
+                    # planner forever
+                    with self._lock:
+                        self._retire_items(items)
+                    if inflight is not None:
+                        try:
+                            self._deposit_wave(*inflight)
+                        except Exception:
+                            pass   # _deposit_wave retired its items
+                    raise
+
+            if inflight is not None:
+                try:
+                    self._deposit_wave(*inflight)
+                except Exception:
+                    if handle is not None:
+                        with self._lock:
+                            self._retire_items(items)
+                    raise
+            inflight = (handle, items) if handle is not None else None
+
+    def _deposit_wave(self, wave: InFlightWave,
+                      items: list[WorkItem]) -> None:
+        """Host side of one pipelined wave: transfer, group-commit, and
+        complete ready requests.  A transient failure relaunches the
+        wave (counter addressing makes the recomputation bit-identical;
+        already-folded rounds are skipped on deposit)."""
+        state = {"wave": wave}
+
+        def attempt(k: int) -> int:
+            if k:
+                with self._lock:
+                    self.stats.restarts += 1
+                state["wave"] = self.batcher.launch(items)
+            with self.watchdog:
+                return self.batcher.deposit(state["wave"])
+
+        try:
+            executed = run_with_restarts(attempt,
+                                         max_restarts=self.max_restarts)
+        except Exception:
+            with self._lock:
+                self._retire_items(items)
+            raise
+        with self._lock:
+            self._retire_items(items)
+            self.stats.waves += 1
+            self.stats.items_executed += executed
+            self._complete_ready()

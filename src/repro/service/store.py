@@ -16,7 +16,11 @@ Two files under ``state_dir``:
   ``alloc`` (a stream's counter-space placement: chash, fn_offset,
   n_fn, round size) and ``dep`` (one round's ``(s1, s2, n)`` delta).
   Records are fsynced by default; a record is journaled *before* the
-  in-memory fold it describes (WAL ordering).
+  in-memory fold it describes (WAL ordering).  Whole waves of deposits
+  **group-commit** through :meth:`DurableStore.append_deposits` — one
+  write + one fsync for the batch; a crash mid-batch tears at a record
+  boundary, so the durable prefix is always a prefix of the wave's
+  deposits (the per-record crash window, amortized).
 
 * ``snapshot.npz`` — periodic **compaction** of journal + accumulators
   into one atomic npz (tmp + fsync + ``os.replace``), after which the
@@ -144,17 +148,38 @@ class DurableStore:
                       "fn_offset": int(fn_offset), "n_fn": int(n_fn),
                       "round_samples": int(round_samples)})
 
-    def append_deposit(self, chash: str, round_index: int,
-                       s1: np.ndarray, s2: np.ndarray, n: int) -> None:
-        """Journal one round's delta — the exact f32 bits being folded."""
-        self._append({"t": "dep", "chash": chash, "round": int(round_index),
-                      "n": int(n), "s1": _encode_f32(s1),
-                      "s2": _encode_f32(s2)})
+    @staticmethod
+    def deposit_record(chash: str, round_index: int,
+                       s1: np.ndarray, s2: np.ndarray, n: int) -> dict:
+        """The journal payload for one round's delta (see
+        :meth:`append_deposits` for group commit)."""
+        return {"t": "dep", "chash": chash, "round": int(round_index),
+                "n": int(n), "s1": _encode_f32(s1), "s2": _encode_f32(s2)}
 
-    def _append(self, payload: dict) -> None:
+    def append_deposits(self, payloads) -> None:
+        """Group commit: journal a batch of records with ONE fsync.
+
+        The records become durable atomically-in-order: a crash mid-write
+        tears at some record boundary and :meth:`load` truncates from the
+        first bad frame, so any durable prefix of the batch is exactly a
+        prefix of the deposits — the same crash window as per-record
+        appends, amortizing the fsync over a whole wave.
+        """
+        payloads = list(payloads)
+        if not payloads:
+            return
+        self._write(b"".join(self._frame(p) for p in payloads))
+
+    @staticmethod
+    def _frame(payload: dict) -> bytes:
         raw = json.dumps(payload, sort_keys=True,
                          separators=(",", ":")).encode("utf-8")
-        record = _MAGIC + _HEADER.pack(len(raw), zlib.crc32(raw)) + raw
+        return _MAGIC + _HEADER.pack(len(raw), zlib.crc32(raw)) + raw
+
+    def _append(self, payload: dict) -> None:
+        self._write(self._frame(payload))
+
+    def _write(self, record: bytes) -> None:
         with self.mutex:
             f = self._journal()
             f.write(record)

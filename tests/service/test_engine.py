@@ -80,8 +80,11 @@ def test_topup_resumes_stream():
     cli = IntegrationClient(engine)
     cli.integrate([harmonic_family(4, 3)], n_samples=R)
     template.reset_launch_count()
+    before = engine.stats.items_executed
     res = cli.integrate([harmonic_family(4, 3)], n_samples=3 * R)
-    assert template.launch_count() == 2        # only the two delta rounds
+    # only the two delta rounds are computed — in ONE multi-round launch
+    assert engine.stats.items_executed - before == 2
+    assert template.launch_count() == 1
     assert res.n_per_family == (3 * R,)
     assert not res.served_from_cache
 
