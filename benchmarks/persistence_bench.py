@@ -20,6 +20,12 @@ the CI regression gate via ``--smoke``:
   bit-for-bit, with strictly fewer launches than that reference (only
   the missing rounds are paid for).
 
+The workload (``demo_workload``) includes infinite-domain Gaussian
+requests, so the digest-equality assertions also pin the compactified
+fused-kernel path across process death: an integral over R^d served
+before the SIGKILL replays and tops up bit-identically, exactly like a
+finite-box one.
+
 ``--json-out`` writes the measurements as ``BENCH_persistence.json`` so
 CI can archive the perf trajectory per commit.
 

@@ -18,7 +18,15 @@ doubles as the CI regression gate via ``--smoke``):
   buckets must run in at most **B** fused multi-round launches (the
   per-round path pays R x B), with per-round deposited sums
   *bit-identical* to the per-round path (digest equality on the final
-  estimates), reported as launches-per-wave and wall-clock-per-wave.
+  estimates), reported as launches-per-wave and wall-clock-per-wave;
+
+* **infinite domains** (``BENCH_5.json``) — a mixed batch of finite and
+  compactified infinite-domain requests must be served *entirely* by
+  fused kernels: launches per wave <= the number of (dim, sampler)
+  buckets and ZERO chunked fallback rounds
+  (``RoundBatcher.fallback_rounds``), with the R^d / half-infinite
+  Gaussian estimates hitting their analytic values and a warm replay
+  costing zero launches.
 
 Wall-clock numbers are reported but only meaningful on a real
 accelerator; on CPU the Pallas kernels run interpreted.  Launch counts
@@ -113,9 +121,87 @@ def _refinement_wave(reqs, *, seed: int, round_samples: int, rounds: int):
     }
 
 
+def _infinite_phase(*, n_fn: int, round_samples: int, rounds: int,
+                    seed: int, json_out: str | None):
+    """Mixed finite/infinite batch: entirely fused, launches <= buckets.
+
+    Per dim in {2, 3, 4}: a finite Gaussian, a Gaussian over R^d, one
+    over [0, inf)^d and a finite harmonic — all with the same budget, so
+    one wave covers the batch.  Gates (the BENCH_5 CI contract):
+    launches per wave <= B dimension buckets, zero chunked fallback
+    rounds, analytic Gaussian values within stderr, warm replay free.
+    """
+    from repro.core import gaussian_analytic, gaussian_family, harmonic_family
+    from repro.service.api import IntegrationRequest
+
+    dims = (2, 3, 4)
+    budget = rounds * round_samples
+    reqs = []
+    for dim in dims:
+        reqs += [
+            IntegrationRequest.make([gaussian_family(n_fn, dim)],
+                                    n_samples=budget),
+            IntegrationRequest.make(
+                [gaussian_family(n_fn, dim, lo=-np.inf, hi=np.inf)],
+                n_samples=budget),
+            IntegrationRequest.make(
+                [gaussian_family(n_fn, dim, lo=0.0, hi=np.inf)],
+                n_samples=budget),
+            IntegrationRequest.make([harmonic_family(n_fn, dim)],
+                                    n_samples=budget),
+        ]
+    buckets = len(dims)
+
+    engine = IntegrationEngine(seed=seed, round_samples=round_samples,
+                               max_rounds_per_wave=rounds)
+    res, launches, dt = _batched(engine, reqs)
+    waves = engine.stats.waves
+    fallbacks = engine.batcher.fallback_rounds
+    launches_per_wave = launches / max(waves, 1)
+    assert launches_per_wave <= buckets, (
+        f"mixed finite/infinite wave took {launches_per_wave:.1f} launches "
+        f"per wave over {buckets} buckets (gate: <= {buckets})")
+    assert fallbacks == 0, (
+        f"{fallbacks} rounds fell back to the chunked path — compactified "
+        f"requests must stay on the fused kernels")
+
+    # the improper integrals are *right*, not just fused
+    for i, dim in enumerate(dims):
+        r_full, r_half = res[4 * i + 1], res[4 * i + 2]
+        assert np.all(np.abs(r_full.means - gaussian_analytic(n_fn, dim))
+                      <= 6 * r_full.stderrs + 1e-3), f"R^{dim} gaussian off"
+        assert np.all(np.abs(r_half.means
+                             - gaussian_analytic(n_fn, dim, half=True))
+                      <= 6 * r_half.stderrs + 1e-3), f"[0,inf)^{dim} off"
+
+    # warm replay of the infinite-domain asks: pure cache hits
+    warm_res, warm_launches, _ = _batched(engine, reqs)
+    assert warm_launches == 0 and all(r.served_from_cache for r in warm_res)
+
+    print(f"infinite domains: {len(reqs)} mixed finite/infinite requests, "
+          f"{rounds} rounds x {buckets} buckets -> {launches} launches in "
+          f"{waves} wave(s), {fallbacks} chunked fallbacks, warm replay "
+          f"{warm_launches} launches")
+    payload = {
+        "bench": "service_infinite", "requests": len(reqs),
+        "rounds": rounds, "buckets": buckets, "round_samples": round_samples,
+        "launches": int(launches), "waves": int(waves),
+        "launches_per_wave": launches_per_wave,
+        "fallback_rounds": int(fallbacks),
+        "warm_launches": int(warm_launches),
+        "seconds": round(dt, 3),
+    }
+    if json_out:
+        import json
+        with open(json_out, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    return payload
+
+
 def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
         seed: int = 0, json_out: str | None = None,
-        refine_rounds: int = 4) -> int:
+        refine_rounds: int = 4, infinite_json_out: str | None = None) -> int:
     reqs = demo_workload(n_requests, n_fn=n_fn, n_samples=n_samples)
     n_fams = sum(len(r.families) for r in reqs)
     dims = sorted({f.dim for r in reqs for f in r.families})
@@ -153,6 +239,11 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
                                   round_samples=round_samples,
                                   rounds=refine_rounds)
 
+    # mixed finite/infinite batch: fused end to end (BENCH_5 gate)
+    infinite = _infinite_phase(n_fn=n_fn, round_samples=round_samples,
+                               rounds=refine_rounds, seed=seed,
+                               json_out=infinite_json_out)
+
     rows = []
     print("path,requests,launches,seconds,req_per_s")
     for name, res, launches, dt in [
@@ -176,6 +267,7 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
                        "n_fn": n_fn, "n_samples": n_samples,
                        "round_samples": round_samples, "rows": rows,
                        "refinement_wave": refinement,
+                       "infinite_domains": infinite,
                        "items_deduped": engine.stats.items_deduped,
                        "cache": engine.cache.stats()},
                       f, indent=2, sort_keys=True)
@@ -197,14 +289,19 @@ def main() -> int:
                          "families and budgets)")
     ap.add_argument("--json-out", default=None,
                     help="write measurements as JSON (BENCH_*.json)")
+    ap.add_argument("--infinite-json-out", default=None,
+                    help="write the mixed finite/infinite-domain phase "
+                         "as its own JSON artifact (BENCH_5.json)")
     args = ap.parse_args()
     if args.smoke:
         return run(max(64, args.requests), n_fn=4, n_samples=8192,
                    round_samples=4096, json_out=args.json_out,
-                   refine_rounds=args.refine_rounds)
+                   refine_rounds=args.refine_rounds,
+                   infinite_json_out=args.infinite_json_out)
     return run(args.requests, n_fn=args.n_fn, n_samples=args.samples,
                round_samples=args.round_samples, json_out=args.json_out,
-               refine_rounds=args.refine_rounds)
+               refine_rounds=args.refine_rounds,
+               infinite_json_out=args.infinite_json_out)
 
 
 if __name__ == "__main__":

@@ -34,7 +34,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import harmonic_analytic, harmonic_family, gaussian_family
+from repro.core import (harmonic_analytic, harmonic_family,
+                        gaussian_analytic, gaussian_family)
 from repro.kernels import template
 from repro.service import IntegrationClient, IntegrationEngine
 
@@ -75,6 +76,22 @@ print(f"top-up to 2x budget: {template.launch_count()} launch, "
 res_e = client.integrate([harmonic_family(50, 4)], target_stderr=2.5e-3)
 print(f"to-precision: max stderr {res_e.stderrs.max():.2e} "
       f"after {res_e.n_per_family[0]} samples")
+
+# -- infinite domains ride the same fused path -----------------------------
+# a gaussian over R^3: canonicalization compactifies it (tangent
+# transform, Jacobian folded in-kernel), so the request buckets into the
+# SAME fused launches as finite boxes — no chunked fallback — and lands
+# on the analytic value (sigma sqrt(2 pi))^3
+template.reset_launch_count()
+res_inf = client.integrate([gaussian_family(10, 3, lo=-np.inf, hi=np.inf)],
+                           n_samples=32768)
+exact_inf = gaussian_analytic(10, 3)
+assert template.launch_count() == 1 and engine.batcher.fallback_rounds == 0
+assert np.all(np.abs(res_inf.means - exact_inf) <= 6 * res_inf.stderrs + 1e-3)
+print(f"infinite domain: gaussian over R^3 in {template.launch_count()} "
+      f"fused launch, max error "
+      f"{np.abs(res_inf.means - exact_inf).max():.2e} "
+      f"(stderr {res_inf.stderrs.max():.2e})")
 print(f"engine stats: {engine.stats}")
 
 # -- durability: the cache survives process death -------------------------

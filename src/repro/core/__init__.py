@@ -10,6 +10,7 @@ from repro.core.integrand import (
     IntegrandFamily,
     MultiFunctionSpec,
     abs_sum_family,
+    gaussian_analytic,
     gaussian_family,
     harmonic_analytic,
     harmonic_family,
@@ -39,6 +40,7 @@ __all__ = [
     "abs_sum_family",
     "family_sums",
     "finalize",
+    "gaussian_analytic",
     "gaussian_family",
     "harmonic_analytic",
     "harmonic_family",

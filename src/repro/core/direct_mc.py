@@ -129,7 +129,8 @@ def _fn_blocked_sums(family, n_samples, key, *, fn_offset, sample_offset,
     def block(idx):
         sl = lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, idx * fn_chunk, fn_chunk)
         fam = IntegrandFamily(fn=family.fn, params=jax.tree.map(sl, params),
-                              domains=sl(domains), name=family.name)
+                              domains=sl(domains), name=family.name,
+                              compact=family.compact)
         out = family_sums(fam, n_samples, key,
                           fn_offset=fn_offset + idx * fn_chunk,
                           sample_offset=sample_offset, chunk=chunk)
@@ -171,10 +172,12 @@ def _pad_family_to(family: IntegrandFamily, n_fn_padded: int) -> IntegrandFamily
 
     domains = pad_leaf(family.domains)
     domains = domains.at[family.n_fn:, :, 0].set(0.0).at[family.n_fn:, :, 1].set(1.0)
+    # padded compact rows get kind 0 (identity) from the zero-pad, so the
+    # transform stage leaves them untouched
     return IntegrandFamily(fn=family.fn,
                            params=jax.tree.map(pad_leaf, family.params),
                            domains=domains, name=family.name,
-                           kernel=family.kernel)
+                           kernel=family.kernel, compact=family.compact)
 
 
 def sharded_family_sums(
@@ -222,7 +225,8 @@ def sharded_family_sums(
         shard_offset = (jnp.uint32(sample_offset)
                         + idx * jnp.uint32(per_shard_samples))
         fam_local = IntegrandFamily(fn=fam.fn, params=params, domains=domains,
-                                    name=fam.name, kernel=fam.kernel)
+                                    name=fam.name, kernel=fam.kernel,
+                                    compact=fam.compact)
         # fn_offset already folded into fn_ids_local; pass offset via ids
         sums = _sums_with_ids(fam_local, per_shard_samples, (k0, k1),
                               fn_ids_local, shard_offset, chunk, use_kernel,
@@ -247,9 +251,11 @@ def _sums_with_ids(family, n_samples, key, fn_ids, sample_offset, chunk,
     """Like family_sums but with explicit (traced) fn ids / sample offset.
 
     ``use_kernel`` dispatch is capability-checked: the registered Pallas
-    fast path runs only if the family's form supports (dim, sampler);
-    otherwise — unregistered form, unsupported dimension (e.g. Sobol
-    beyond dim 8) — the chunked pure-JAX path below takes over silently.
+    fast path runs only if the family's form supports (dim, sampler) —
+    compactified infinite-domain families included, gated by the form's
+    ``supports_compactified`` flag; otherwise — unregistered form,
+    unsupported dimension (e.g. Sobol beyond dim 8) — the chunked
+    pure-JAX path below takes over silently.
     """
     if sampler == "sobol":
         from repro.core.sobol import MAX_DIM
@@ -260,7 +266,8 @@ def _sums_with_ids(family, n_samples, key, fn_ids, sample_offset, chunk,
     if use_kernel and family.kernel is not None:
         from repro.kernels import registry
         impl = registry.lookup(family.kernel, dim=family.dim,
-                               sampler=sampler)
+                               sampler=sampler,
+                               compactified=family.compact)
         if impl is not None:
             return impl(family, n_samples, key, fn_ids=fn_ids,
                         sample_offset=sample_offset)

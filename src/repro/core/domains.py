@@ -5,15 +5,32 @@ Finite boxes map uniforms affinely; infinite / semi-infinite edges use the
 standard tangent / rational compactifications with their Jacobians folded
 into the integrand value, so every solver only ever samples the unit cube.
 
-The Pallas fast path (``repro.kernels.mc_eval``) handles finite boxes only —
 ``compactify`` rewrites an infinite-domain family into an equivalent
-finite-domain family first, so kernels never see infinities.
+finite-domain family first, so solvers never see infinities.  The
+transform is **static per (function, axis)** — a kind code plus a finite
+shift, derived from the numpy domain array (:func:`transform_params`) —
+which is what lets the fused Pallas path evaluate compactified families
+too: the codes pack into kernel parameter columns and the in-kernel
+wrapper stage (``repro.kernels.template.compactified_body``) applies the
+very same :func:`apply_transform` the chunked closure uses.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
+
+# Per-axis transform kind codes.  Static (host-side) metadata, but they
+# also ride inside f32 kernel parameter columns — keep them exact small
+# ints.
+TRANSFORM_NONE = 0   # finite edge: identity
+TRANSFORM_TAN = 1    # (-inf, inf): x = tan(pi*(u - 1/2))
+TRANSFORM_UPPER = 2  # [a,  inf):   x = a + u/(1-u)
+TRANSFORM_LOWER = 3  # (-inf, b]:   x = b - u/(1-u)
+
+# Samples are clamped into the open unit interval before transforming so
+# the tangent/rational maps stay finite at the box edges.
+CLIP_EPS = 1e-7
 
 
 def box_volume(domains, dims=None):
@@ -46,6 +63,71 @@ def is_finite_box(domains) -> bool:
     return bool(np.all(np.isfinite(np.asarray(domains))))
 
 
+def transform_params(domains):
+    """Static per-(function, axis) compactification metadata.
+
+    Args:
+      domains: (n_fn, dim, 2) possibly-infinite boxes (numpy/array).
+
+    Returns ``(kind, shift, new_domains)``:
+      kind: int32 (n_fn, dim) ``TRANSFORM_*`` code per axis;
+      shift: float32 (n_fn, dim) finite anchor of half-infinite axes
+        (the ``a`` of ``[a, inf)``, the ``b`` of ``(-inf, b]``), 0
+        elsewhere;
+      new_domains: float32 finite sampling box — transformed axes become
+        [0, 1], finite axes keep their original edges.
+
+    All three are host numpy: the transform is static per function, so
+    it can parameterize traced jnp code (:func:`apply_transform`) and
+    pack into fused-kernel parameter columns alike.
+    """
+    domains = np.asarray(domains, np.float64)
+    lo_inf = ~np.isfinite(domains[..., 0])
+    hi_inf = ~np.isfinite(domains[..., 1])
+    kind = np.where(lo_inf & hi_inf, TRANSFORM_TAN,
+                    np.where(~lo_inf & hi_inf, TRANSFORM_UPPER,
+                             np.where(lo_inf & ~hi_inf, TRANSFORM_LOWER,
+                                      TRANSFORM_NONE)))
+    shift = np.where(kind == TRANSFORM_UPPER, domains[..., 0],
+                     np.where(kind == TRANSFORM_LOWER, domains[..., 1], 0.0))
+    new_domains = domains.copy()
+    transformed = kind != TRANSFORM_NONE
+    new_domains[..., 0] = np.where(transformed, 0.0, domains[..., 0])
+    new_domains[..., 1] = np.where(transformed, 1.0, domains[..., 1])
+    return (kind.astype(np.int32), shift.astype(np.float32),
+            new_domains.astype(np.float32))
+
+
+def apply_transform(u, kind, shift):
+    """Map unit-interval samples through the per-axis compactification.
+
+    Pure jnp; ``kind``/``shift`` broadcast against ``u`` — the chunked
+    closure passes per-function ``(dim,)`` rows, the fused kernel
+    per-(function, axis) scalars read from packed parameter columns.
+    ``kind`` may be integer or float (the codes are exact small ints in
+    f32, so the comparisons hold either way).
+
+    Returns ``(x, jac)``: original-space coordinates and the per-axis
+    Jacobian factor ``dx/du`` (1 on finite axes, where ``x == u``
+    untouched by the clamp).
+    """
+    eps = jnp.asarray(CLIP_EPS, u.dtype)
+    uc = jnp.clip(u, eps, 1.0 - eps)
+    tan_x = jnp.tan(jnp.pi * (uc - 0.5))
+    tan_j = jnp.pi / jnp.square(jnp.cos(jnp.pi * (uc - 0.5)))
+    rat = uc / (1.0 - uc)
+    rat_j = 1.0 / jnp.square(1.0 - uc)
+    both = kind == TRANSFORM_TAN
+    upper = kind == TRANSFORM_UPPER
+    lower = kind == TRANSFORM_LOWER
+    x = jnp.where(both, tan_x,
+                  jnp.where(upper, shift + rat,
+                            jnp.where(lower, shift - rat, u)))
+    jac = jnp.where(both, tan_j,
+                    jnp.where(upper | lower, rat_j, jnp.ones_like(uc)))
+    return x, jac
+
+
 def compactify(fn, domains):
     """Rewrite (fn, domains) with infinite edges into a finite-box problem.
 
@@ -56,55 +138,30 @@ def compactify(fn, domains):
     * ``(-inf, b]``    -> x = b - u/(1-u),        u in [0, 1),  J = 1/(1-u)^2
     * finite           -> identity
 
-    Returns ``(fn2, domains2)`` where ``fn2(u, params)`` evaluates the
-    original integrand times the Jacobian, and ``domains2`` is finite.
-    The transform is per-function static (derived from the numpy domain
-    array), so it traces to pure jnp ops.
+    Returns ``(fn2, domains2, aux)`` where ``fn2(u, params)`` evaluates
+    the original integrand times the Jacobian, ``domains2`` is finite,
+    and ``aux = {"kind", "shift"}`` holds the static per-(function, axis)
+    transform parameters (:func:`transform_params`) — the same arrays the
+    fused Pallas path packs into kernel parameter columns.  Finite boxes
+    return ``(fn, domains)`` unchanged.
     """
     domains = np.asarray(domains, np.float64)
     if is_finite_box(domains):
         return fn, jnp.asarray(domains, jnp.float32)
     if domains.ndim != 3:
         raise ValueError("compactify expects (n_fn, dim, 2) domains")
-    lo_inf = ~np.isfinite(domains[..., 0])
-    hi_inf = ~np.isfinite(domains[..., 1])
-    both = lo_inf & hi_inf
-    upper = ~lo_inf & hi_inf
-    lower = lo_inf & ~hi_inf
-
-    new_domains = domains.copy()
-    new_domains[..., 0] = np.where(both | upper | lower, 0.0, domains[..., 0])
-    new_domains[..., 1] = np.where(both | upper | lower, 1.0, domains[..., 1])
-
+    kind, shift, new_domains = transform_params(domains)
     # Per-function transform metadata rides along with the user params so the
     # engine's per-function vmap slices it consistently (leading n_fn axis).
-    aux = {
-        "both": jnp.asarray(both),
-        "upper": jnp.asarray(upper),
-        "lower": jnp.asarray(lower),
-        "flo": jnp.asarray(
-            np.where(np.isfinite(domains[..., 0]), domains[..., 0], 0.0), jnp.float32),
-        "fhi": jnp.asarray(
-            np.where(np.isfinite(domains[..., 1]), domains[..., 1], 0.0), jnp.float32),
-    }
+    aux = {"kind": jnp.asarray(kind), "shift": jnp.asarray(shift)}
 
     def transformed(u, wrapped):
         # u: (..., dim) sampled in the *new* (finite) box: unit interval on
         # transformed dims, the original interval elsewhere. ``wrapped`` is
-        # {"inner": user params, "aux": per-function masks} with the leading
+        # {"inner": user params, "aux": {"kind", "shift"}} with the leading
         # n_fn axis already sliced away by the engine's vmap.
         a = wrapped["aux"]
-        b, up, lw = a["both"], a["upper"], a["lower"]
-        eps = jnp.asarray(1e-7, u.dtype)
-        uc = jnp.clip(u, eps, 1.0 - eps)
-        tan_x = jnp.tan(jnp.pi * (uc - 0.5))
-        tan_j = jnp.pi / jnp.square(jnp.cos(jnp.pi * (uc - 0.5)))
-        rat = uc / (1.0 - uc)
-        rat_j = 1.0 / jnp.square(1.0 - uc)
-        x = jnp.where(b, tan_x,
-            jnp.where(up, a["flo"] + rat,
-            jnp.where(lw, a["fhi"] - rat, u)))
-        jac = jnp.where(b, tan_j, jnp.where(up | lw, rat_j, jnp.ones_like(uc)))
+        x, jac = apply_transform(u, a["kind"], a["shift"])
         return fn(x, wrapped["inner"]) * jnp.prod(jac, axis=-1)
 
     return transformed, jnp.asarray(new_domains, jnp.float32), aux

@@ -49,6 +49,10 @@ class IntegrandFamily:
       name: label used in reports and benchmarks.
       kernel: optional registered Pallas fast-path name (see
         ``repro.kernels.registry``).  ``None`` -> pure-JAX evaluation.
+      compact: set by :meth:`compactified` — ``params`` is the
+        ``{"inner": user params, "aux": {"kind", "shift"}}`` wrapper
+        around an infinite-domain integrand, and kernel dispatch must
+        apply the transform stage (``repro.kernels.template``).
     """
 
     fn: Callable[[Array, Any], Array]
@@ -56,16 +60,19 @@ class IntegrandFamily:
     domains: Array
     name: str = "family"
     kernel: str | None = None
+    compact: bool = False
 
-    # -- pytree plumbing (fn/name/kernel are static) -------------------------
+    # -- pytree plumbing (fn/name/kernel/compact are static) -----------------
     def tree_flatten(self):
-        return (self.params, self.domains), (self.fn, self.name, self.kernel)
+        return ((self.params, self.domains),
+                (self.fn, self.name, self.kernel, self.compact))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        fn, name, kernel = aux
+        fn, name, kernel, compact = aux
         params, domains = children
-        return cls(fn=fn, params=params, domains=domains, name=name, kernel=kernel)
+        return cls(fn=fn, params=params, domains=domains, name=name,
+                   kernel=kernel, compact=compact)
 
     # -- derived sizes --------------------------------------------------------
     @property
@@ -93,7 +100,16 @@ class IntegrandFamily:
         return self
 
     def compactified(self) -> "IntegrandFamily":
-        """Return an equivalent family whose domain box is finite."""
+        """Return an equivalent family whose domain box is finite.
+
+        The result keeps :attr:`kernel`: registered forms evaluate
+        compactified families on the fused Pallas path (the static
+        transform params pack into kernel parameter columns and an
+        in-kernel wrapper stage applies them — see
+        ``repro.kernels.template.compactified_body``).  Forms that opt
+        out via ``supports_compactified=False`` fall back to the chunked
+        path at dispatch time, exactly like any other capability miss.
+        """
         if domains_lib.is_finite_box(self.domains):
             return self
         fn2, new_domains, aux = domains_lib.compactify(self.fn, self.domains)
@@ -102,8 +118,23 @@ class IntegrandFamily:
             params={"inner": self.params, "aux": aux},
             domains=new_domains,
             name=self.name + ":compactified",
-            kernel=None,  # kernels handle finite boxes only
+            kernel=self.kernel,
+            compact=True,
         )
+
+    def inner(self) -> "IntegrandFamily":
+        """The pre-transform parameter view of a compactified family.
+
+        Kernel param packers (``KernelForm.pack_params``) consume this:
+        same shapes and finite box, but ``params`` is the original user
+        pytree rather than the ``{"inner", "aux"}`` wrapper.  Identity
+        for non-compact families.
+        """
+        if not self.compact:
+            return self
+        return IntegrandFamily(fn=self.fn, params=self.params["inner"],
+                               domains=self.domains, name=self.name,
+                               kernel=self.kernel)
 
     def eval_batch(self, x: Array) -> Array:
         """Evaluate all functions on their own sample blocks.
@@ -212,6 +243,18 @@ def abs_sum_family(n: int, dim: int, coeff, *, sign_last: float = 1.0,
         name=f"abs_sum[{n}x{dim}d]",
         kernel="mc_eval_abs_sum",
     ).validate()
+
+
+def gaussian_analytic(n: int, dim: int, *, sigma=None,
+                      half: bool = False) -> np.ndarray:
+    """Closed form of :func:`gaussian_family` over R^dim:
+    ``(sigma sqrt(2 pi))^dim`` — or over the positive orthant
+    ``[0, inf)^dim`` with ``half=True`` (one factor of 2 per axis).
+    Defaults mirror :func:`gaussian_family`'s sigma grid."""
+    if sigma is None:
+        sigma = np.linspace(0.5, 2.0, n)
+    full = (np.asarray(sigma, np.float64) * np.sqrt(2.0 * np.pi)) ** dim
+    return full / (2.0 ** dim) if half else full
 
 
 def gaussian_family(n: int, dim: int, *, sigma=None, lo=-4.0, hi=4.0) -> IntegrandFamily:

@@ -7,7 +7,9 @@ the original ZMCintegral property of splitting the *whole* batch across
 the device in a single launch.  This module plans that:
 
 1. every family whose ``kernel`` names a registered form that supports
-   (dim, sampler) is **fusable**; the rest fall back to the chunked JAX
+   (dim, sampler) is **fusable** — compactified infinite-domain families
+   included, via the transform wrapper stage and extra packed columns of
+   ``template.body_and_packed``; the rest fall back to the chunked JAX
    path (the caller handles them);
 2. fusable families are bucketed by integrand dimension (the kernel's
    sample-drawing loop is specialised on ``dim``);
@@ -111,7 +113,8 @@ def plan_spec(spec, *, sampler: str = "mc",
     unfused: list[int] = []
     for idx, fam in enumerate(families):
         form = registry.form(fam.kernel) if fam.kernel else None
-        if form is None or not form.supports(dim=fam.dim, sampler=sampler):
+        if form is None or not form.supports(
+                dim=fam.dim, sampler=sampler, compactified=fam.compact):
             unfused.append(idx)
             continue
         by_dim.setdefault(fam.dim, []).append(idx)
@@ -123,21 +126,21 @@ def plan_spec(spec, *, sampler: str = "mc",
         packed_parts, lo_parts, hi_parts, id_parts = [], [], [], []
         block_forms: list[int] = []
         slices: list[_Slice] = []
-        n_cols = max(registry.form(families[i].kernel).n_cols(dim)
-                     for i in idxs)
+        n_cols = max(template.packed_cols(registry.form(families[i].kernel),
+                                          families[i]) for i in idxs)
         row = 0
         for idx in idxs:
             fam = families[idx]
             form = registry.form(fam.kernel)
-            if form.body not in bodies:
-                bodies.append(form.body)
-            body_ix = bodies.index(form.body)
+            body, packed = template.body_and_packed(form, fam)
+            if body not in bodies:
+                bodies.append(body)
+            body_ix = bodies.index(body)
 
             n_fn = fam.n_fn
             n_fn_pad = math.ceil(n_fn / F_BLK) * F_BLK
             pad = n_fn_pad - n_fn
-            packed = template.pad_rows(
-                jnp.asarray(form.pack_params(fam), jnp.float32), pad)
+            packed = template.pad_rows(packed, pad)
             if packed.shape[1] < n_cols:
                 packed = jnp.pad(
                     packed, ((0, 0), (0, n_cols - packed.shape[1])))

@@ -58,6 +58,13 @@ class KernelForm:
       samplers: supported samplers, subset of ("mc", "sobol").
       backends: where the kernel can run ("tpu" compiled, "interpret"
         everywhere else via the Pallas interpreter).
+      supports_compactified: whether the eval body composes with the
+        in-kernel compactification stage
+        (``repro.kernels.template.compactified_body``) that serves
+        infinite-domain families.  Bodies that consume every dimension
+        through ``draw`` compose automatically (the wrapper hands them
+        pre-transformed draws and folds the Jacobian into the value);
+        set False for bodies that read domain geometry directly.
     """
 
     name: str
@@ -67,11 +74,15 @@ class KernelForm:
     max_dim: int = _COUNTER_MAX_DIM
     samplers: tuple[str, ...] = ("mc", "sobol")
     backends: tuple[str, ...] = ("tpu", "interpret")
+    supports_compactified: bool = True
 
-    def supports(self, *, dim: int, sampler: str = "mc") -> bool:
+    def supports(self, *, dim: int, sampler: str = "mc",
+                 compactified: bool = False) -> bool:
         if sampler not in self.samplers:
             return False
         if dim > self.max_dim:
+            return False
+        if compactified and not self.supports_compactified:
             return False
         if sampler == "sobol":
             from repro.core.sobol import MAX_DIM
@@ -126,19 +137,26 @@ def form(name: str) -> KernelForm | None:
     return _FORMS.get(name.split("@", 1)[0])
 
 
-def lookup(name: str, *, dim: int, sampler: str = "mc") -> Callable | None:
+def lookup(name: str, *, dim: int, sampler: str = "mc",
+           compactified: bool = False) -> Callable | None:
     """Capability-checked dispatch: impl for (name, dim, sampler) or None.
 
     Unknown names and unsupported (dim, sampler) combinations return None
-    — callers fall back to the chunked pure-JAX path.
+    — callers fall back to the chunked pure-JAX path.  ``compactified``
+    marks families carrying the infinite-domain transform stage: forms
+    opt in via ``supports_compactified`` (legacy bare callables cannot
+    pack the transform columns, so they always miss).
     """
     _load_builtin()
     f = _FORMS.get(name)
     if f is not None:
-        if not f.supports(dim=dim, sampler=sampler):
+        if not f.supports(dim=dim, sampler=sampler,
+                          compactified=compactified):
             return None
         key = name if sampler == "mc" else f"{name}@{sampler}"
         return _REGISTRY.get(key)
+    if compactified:
+        return None
     # legacy bare callables: only the default sampler naming convention
     key = name if sampler == "mc" else f"{name}@{sampler}"
     return _REGISTRY.get(key)

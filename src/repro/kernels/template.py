@@ -29,6 +29,16 @@ per block.  Sampling, domain mapping and reduction are shared across
 forms — this is what lets a heterogeneous ``MultiFunctionSpec`` run in
 one ``pallas_call`` per (dim, sampler) bucket instead of one per family.
 
+Infinite domains: a compactified family (``IntegrandFamily.compact``)
+evaluates through the same machinery with a **wrapper stage** around its
+form's body (:func:`compactified_body`): the per-axis transform kind and
+shift ride as extra packed parameter columns, the wrapper maps every
+draw through the tangent/rational compactification shared with the
+chunked path (``repro.core.domains.apply_transform``) and folds the
+Jacobian product into the value tile.  The wrapped body participates in
+``lax.switch`` selection like any other, so finite and infinite-domain
+families fuse into the same (dim, sampler) bucket launches.
+
 Multi-round evaluation: the grid carries an optional **round axis**
 (``n_rounds``) so one launch evaluates R consecutive counter-addressed
 sample windows, emitting per-round ``(sum f, sum f^2)`` partials in an
@@ -55,6 +65,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import domains as domains_lib
 from repro.core import rng as rng_lib
 from repro.kernels.pallas_compat import (compiler_params, pl, pltpu,
                                          resolve_interpret)
@@ -141,6 +152,74 @@ def sobol_tiles(idx, v, dim: int):
         for d in range(dim):
             outs[d] = outs[d] ^ jnp.where(bit, v[d, j], jnp.uint32(0))
     return outs
+
+
+@functools.lru_cache(maxsize=None)
+def compactified_body(body, base_cols: int):
+    """Wrap an eval body with the infinite-domain compactification stage.
+
+    A compactified family's packed parameters carry, after its form's
+    ``base_cols`` columns, ``2 * dim`` transform columns:
+    ``[kind_0..kind_{dim-1}, shift_0..shift_{dim-1}]`` (kind codes are
+    ``repro.core.domains.TRANSFORM_*`` — exact small ints in f32).  The
+    wrapper draws every dimension once, maps each tile through the
+    tangent/rational transform shared with the chunked path
+    (``domains.apply_transform``), hands the body pre-transformed draws,
+    and folds the per-axis Jacobian product into the returned value tile.
+
+    lru_cached so every plan of the same (body, base_cols) pair reuses
+    ONE wrapper object: bucket body dedupe and the jit compile cache both
+    key on body identity.
+    """
+
+    def wrapped(draw, p, f, dim: int):
+        xs = []
+        jac = None
+        for d in range(dim):
+            x, j = domains_lib.apply_transform(
+                draw(d), p[f, base_cols + d], p[f, base_cols + dim + d])
+            xs.append(x)
+            jac = j if jac is None else jac * j
+        val = body(lambda d: xs[d], p, f, dim)
+        return val * jac
+
+    wrapped.__name__ = f"compactified_{getattr(body, '__name__', 'body')}"
+    return wrapped
+
+
+def transform_cols(family):
+    """f32[n_fn, 2 * dim] packed (kind, shift) columns of a compactified
+    family, appended after its form's own parameter columns."""
+    aux = family.params["aux"]
+    return jnp.concatenate([
+        jnp.asarray(aux["kind"], jnp.float32),
+        jnp.asarray(aux["shift"], jnp.float32)], axis=1)
+
+
+def packed_cols(form, family) -> int:
+    """Total packed width of ``family`` under ``form`` — the width
+    :func:`body_and_packed` produces, transform columns included.  The
+    fused planner sizes its buckets with this so the column layout lives
+    in one module."""
+    extra = 2 * family.dim if family.compact else 0
+    return form.n_cols(family.dim) + extra
+
+
+def body_and_packed(form, family):
+    """The (eval body, f32[n_fn, cols]) pair of one family under ``form``.
+
+    The single place compactified families grow their wrapped body and
+    transform columns; finite families pass through untouched.  Callers
+    (the single-family impl and the fused planner) must have capability-
+    checked ``form.supports(..., compactified=family.compact)`` first.
+    """
+    if not family.compact:
+        return form.body, jnp.asarray(form.pack_params(family), jnp.float32)
+    base_cols = form.n_cols(family.dim)
+    packed = jnp.concatenate([
+        jnp.asarray(form.pack_params(family.inner()), jnp.float32),
+        transform_cols(family)], axis=1)
+    return compactified_body(form.body, base_cols), packed
 
 
 def _fused_kernel(*refs, dim: int, bodies: tuple, sampler: str,
@@ -337,10 +416,12 @@ def make_family_impl(form, sampler: str):
              sample_offset=0, fn_ids=None,
              interpret: bool | None = None) -> SumsState:
         n_fn, dim = family.n_fn, family.dim
-        if not form.supports(dim=dim, sampler=sampler):
+        compact = family.compact
+        if not form.supports(dim=dim, sampler=sampler, compactified=compact):
             raise ValueError(
                 f"kernel {form.name!r} does not support dim={dim} with "
-                f"sampler={sampler!r}")
+                f"sampler={sampler!r}"
+                + (" on a compactified family" if compact else ""))
         if fn_ids is None:
             fn_ids = jnp.uint32(fn_offset) + jnp.arange(n_fn,
                                                         dtype=jnp.uint32)
@@ -348,8 +429,8 @@ def make_family_impl(form, sampler: str):
 
         n_fn_pad = math.ceil(n_fn / F_BLK) * F_BLK
         pad = n_fn_pad - n_fn
-        packed = pad_rows(jnp.asarray(form.pack_params(family),
-                                      jnp.float32), pad)
+        body, packed = body_and_packed(form, family)
+        packed = pad_rows(packed, pad)
         lo = pad_rows(jnp.asarray(family.domains[..., 0], jnp.float32), pad)
         hi = pad_rows(jnp.asarray(family.domains[..., 1], jnp.float32), pad)
         fn_ids = pad_rows(jnp.asarray(fn_ids, jnp.uint32), pad)
@@ -364,7 +445,7 @@ def make_family_impl(form, sampler: str):
         record_launch()
         out = fused_mc_pallas(
             scalars, fn_ids, packed, lo, hi, dirvecs=dirvecs, dim=dim,
-            n_sample_blocks=n_sample_blocks, bodies=(form.body,),
+            n_sample_blocks=n_sample_blocks, bodies=(body,),
             sampler=sampler, interpret=interpret,
             name=form.name if sampler == "mc" else f"{form.name}@{sampler}")[0]
         return SumsState(s1=out[:n_fn, 0], s2=out[:n_fn, 1],

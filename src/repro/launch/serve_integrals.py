@@ -59,7 +59,10 @@ def demo_workload(n_requests: int, *, n_fn: int = 8,
     Cycles through the registered forms at dims 2-4 (so batching has
     buckets to fuse) and re-issues every ``duplicate_every``-th request
     verbatim, modeling distinct clients scanning overlapping grids — the
-    canonicalizer must dedupe those into shared cache entries.
+    canonicalizer must dedupe those into shared cache entries.  The mix
+    includes infinite-domain Gaussians (over R^d and the positive
+    orthant): compactified families ride the same fused buckets, cache
+    streams and persistence digests as finite ones.
     """
     reqs: list[IntegrationRequest] = []
     makers = [
@@ -69,6 +72,8 @@ def demo_workload(n_requests: int, *, n_fn: int = 8,
         lambda i: gaussian_family(n_fn, 2 + i % 3),
         lambda i: genz.oscillatory(n_fn, 2 + i % 3, seed=i % 5)[0],
         lambda i: genz.corner_peak(n_fn, 2 + i % 3, seed=i % 5)[0],
+        lambda i: gaussian_family(n_fn, 2 + i % 3, lo=-np.inf, hi=np.inf),
+        lambda i: gaussian_family(n_fn, 2 + i % 3, lo=0.0, hi=np.inf),
     ]
     for i in range(n_requests):
         if duplicate_every and i % duplicate_every == duplicate_every - 1:
@@ -163,7 +168,9 @@ def main():
     hits = sum(r.served_from_cache for r in results)
     print(f"served {len(results)} requests ({n_fn_total} integrands) "
           f"in {dt:.1f}s -> {len(results) / dt:.1f} req/s, "
-          f"{launches} kernel launches, {hits} pure cache hits")
+          f"{launches} kernel launches "
+          f"({engine.batcher.fallback_rounds} chunked fallback rounds), "
+          f"{hits} pure cache hits")
     print(f"engine: {engine.stats}")
     print(f"cache:  {engine.cache.stats()}")
     print(f"stragglers: {engine.watchdog.straggler_count}")

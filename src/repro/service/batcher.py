@@ -101,6 +101,10 @@ class RoundBatcher:
         self.sample_axes = tuple(sample_axes)
         self.chunk = int(chunk)
         self.plan_cache_size = int(plan_cache_size)
+        # rounds served by the chunked per-round path instead of a fused
+        # launch; benchmarks/service_bench.py gates this at 0 for
+        # registered-form workloads (compactified families included)
+        self.fallback_rounds = 0
         self._plans: collections.OrderedDict[tuple, object] = \
             collections.OrderedDict()
 
@@ -195,6 +199,7 @@ class RoundBatcher:
                     out.append((sp.entry, sp.start + r, fused[idx][r]))
                 continue
             # chunked fallback: one counter-addressed eval per round
+            self.fallback_rounds += count
             for r in range(count):
                 sample_offset = (sp.start + r) * n
                 if self.mesh is not None:

@@ -139,6 +139,11 @@ class IntegrationEngine:
                 self.cache.snapshot_to_store()
         self.max_pending = int(max_pending)
         self.max_rounds_per_wave = int(max_rounds_per_wave)
+        if max_items_per_wave is not None and int(max_items_per_wave) <= 0:
+            # 0 would silently mean "unbounded" in the planner's
+            # truthiness check — reject it loudly instead
+            raise ValueError("max_items_per_wave must be positive "
+                             "(or None for unbounded)")
         self.max_items_per_wave = (None if max_items_per_wave is None
                                    else int(max_items_per_wave))
         self.pipeline_waves = bool(pipeline_waves)

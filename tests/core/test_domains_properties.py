@@ -1,0 +1,191 @@
+"""Hypothesis properties of the compactification transform.
+
+The service's dedupe assumption (``canonical.py``) and the fused kernel
+path both lean on the same facts about ``repro.core.domains``:
+
+* finite boxes pass through ``compactify`` untouched, and
+  ``apply_transform`` with kind ``TRANSFORM_NONE`` is the exact
+  identity with unit Jacobian (the "Jacobian-weighted transform of a
+  finite box is the identity" round-trip);
+* compactification is **idempotent** — ``family.compactified()`` of an
+  already-compact family is the same object, so a raw infinite-domain
+  ask and its pre-compactified twin canonicalize (and hash) alike;
+* the static ``transform_params`` metadata is faithful: kinds match the
+  infinity pattern of the box, shifts anchor half-infinite edges, the
+  new box is finite with [0, 1] on transformed axes;
+* the traced transform matches its own calculus: ``jac`` is the
+  numerical derivative dx/du, and quadrature of a known integrand
+  through the transform recovers the analytic improper integral.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason=("property tests need hypothesis (pip install "
+            "hypothesis); the rest of the suite runs without it"))
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gaussian_family
+from repro.core.domains import (TRANSFORM_LOWER, TRANSFORM_NONE,
+                                TRANSFORM_TAN, TRANSFORM_UPPER,
+                                apply_transform, compactify, is_finite_box,
+                                transform_params)
+from repro.core.integrand import IntegrandFamily
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+finite_edge = st.floats(min_value=-100.0, max_value=100.0,
+                        allow_nan=False, width=32)
+unit = st.floats(min_value=1e-6, max_value=1.0 - 1e-6,
+                 allow_nan=False, width=32)
+
+
+@st.composite
+def boxes(draw, min_fn=1, max_fn=3, min_dim=1, max_dim=3,
+          allow_infinite=True):
+    """(n_fn, dim, 2) boxes with a random finite/infinite edge pattern."""
+    n_fn = draw(st.integers(min_fn, max_fn))
+    dim = draw(st.integers(min_dim, max_dim))
+    out = np.empty((n_fn, dim, 2), np.float64)
+    kinds = ["finite", "upper", "lower", "both"] if allow_infinite \
+        else ["finite"]
+    for i in range(n_fn):
+        for d in range(dim):
+            kind = draw(st.sampled_from(kinds))
+            a = draw(finite_edge)
+            b = a + abs(draw(finite_edge)) + 1e-3
+            out[i, d] = {
+                "finite": (a, b),
+                "upper": (a, np.inf),
+                "lower": (-np.inf, b),
+                "both": (-np.inf, np.inf),
+            }[kind]
+    return out
+
+
+# -- finite boxes: the transform is the identity ------------------------------
+
+@settings(**SETTINGS)
+@given(boxes(allow_infinite=False))
+def test_compactify_finite_box_is_identity(dom):
+    fn = lambda x, p: jnp.sum(x, -1)
+    out = compactify(fn, dom)
+    assert len(out) == 2                      # no aux: nothing to transform
+    fn2, new_dom = out
+    assert fn2 is fn
+    np.testing.assert_array_equal(np.asarray(new_dom),
+                                  dom.astype(np.float32))
+
+
+@settings(**SETTINGS)
+@given(st.lists(unit, min_size=1, max_size=8))
+def test_apply_transform_none_is_exact_identity(us):
+    u = jnp.asarray(us, jnp.float32)
+    x, jac = apply_transform(u, jnp.int32(TRANSFORM_NONE), jnp.float32(0))
+    assert np.asarray(x).tobytes() == np.asarray(u).tobytes()
+    np.testing.assert_array_equal(np.asarray(jac), np.ones(len(us)))
+
+
+# -- static metadata is faithful ----------------------------------------------
+
+@settings(**SETTINGS)
+@given(boxes())
+def test_transform_params_faithful(dom):
+    kind, shift, new_dom = transform_params(dom)
+    lo_inf = ~np.isfinite(dom[..., 0])
+    hi_inf = ~np.isfinite(dom[..., 1])
+    np.testing.assert_array_equal(kind == TRANSFORM_TAN, lo_inf & hi_inf)
+    np.testing.assert_array_equal(kind == TRANSFORM_UPPER,
+                                  ~lo_inf & hi_inf)
+    np.testing.assert_array_equal(kind == TRANSFORM_LOWER,
+                                  lo_inf & ~hi_inf)
+    assert np.all(np.isfinite(new_dom))
+    transformed = kind != TRANSFORM_NONE
+    np.testing.assert_array_equal(new_dom[..., 0][transformed], 0.0)
+    np.testing.assert_array_equal(new_dom[..., 1][transformed], 1.0)
+    np.testing.assert_array_equal(new_dom[..., 0][~transformed],
+                                  dom[..., 0][~transformed].astype(
+                                      np.float32))
+    # shifts anchor the finite edge of half-infinite axes
+    up = kind == TRANSFORM_UPPER
+    lw = kind == TRANSFORM_LOWER
+    np.testing.assert_array_equal(shift[up],
+                                  dom[..., 0][up].astype(np.float32))
+    np.testing.assert_array_equal(shift[lw],
+                                  dom[..., 1][lw].astype(np.float32))
+
+
+# -- the transform matches its own calculus -----------------------------------
+
+def _np_x(u, kind, shift):
+    """f64 numpy mirror of apply_transform's coordinate map."""
+    uc = np.clip(np.float64(u), 1e-7, 1.0 - 1e-7)
+    if kind == TRANSFORM_TAN:
+        return np.tan(np.pi * (uc - 0.5))
+    if kind == TRANSFORM_UPPER:
+        return np.float64(shift) + uc / (1.0 - uc)
+    return np.float64(shift) - uc / (1.0 - uc)
+
+
+@settings(**SETTINGS)
+@given(st.sampled_from([TRANSFORM_TAN, TRANSFORM_UPPER, TRANSFORM_LOWER]),
+       finite_edge,
+       st.floats(min_value=0.05, max_value=0.95, allow_nan=False, width=32))
+def test_jacobian_is_dx_du(kind, shift, u):
+    """The traced jac equals |dx/du| of the documented coordinate map
+    (central difference on an f64 reference)."""
+    _, jac = apply_transform(jnp.float32(u), jnp.int32(kind),
+                             jnp.float32(shift))
+    h = 1e-6
+    num = (_np_x(u + h, kind, shift) - _np_x(u - h, kind, shift)) / (2 * h)
+    np.testing.assert_allclose(abs(num), float(jac), rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(finite_edge, st.floats(min_value=0.2, max_value=3.0,
+                              allow_nan=False, width=32))
+def test_halfinfinite_quadrature_roundtrip(a, rate):
+    """Midpoint quadrature of exp(-rate (x - a)) through the [a, inf)
+    transform recovers 1/rate — the Jacobian-weighted round-trip."""
+    n = 20001
+    u = (np.arange(n, dtype=np.float64) + 0.5) / n
+    x, jac = apply_transform(jnp.asarray(u, jnp.float32),
+                             jnp.int32(TRANSFORM_UPPER), jnp.float32(a))
+    x64 = np.asarray(x, np.float64)
+    vals = np.exp(-rate * (x64 - np.float32(a))) * np.asarray(jac,
+                                                              np.float64)
+    np.testing.assert_allclose(vals.mean(), 1.0 / rate, rtol=5e-3)
+
+
+# -- idempotence: the canonicalizer's dedupe assumption -----------------------
+
+@settings(**SETTINGS)
+@given(boxes(min_dim=2, max_dim=2))
+def test_compactified_idempotent(dom):
+    fam = IntegrandFamily(
+        fn=lambda x, p: jnp.exp(-jnp.sum(jnp.square(x), -1)) * p["c"],
+        params={"c": jnp.ones(dom.shape[0])},
+        domains=jnp.asarray(dom.astype(np.float32)),
+    ).validate()
+    once = fam.compactified()
+    assert is_finite_box(once.domains)
+    assert once.compactified() is once
+    if is_finite_box(dom):
+        assert once is fam
+    else:
+        assert once.compact
+
+
+def test_compactified_keeps_kernel_and_hash_dedupes():
+    """The canonical form of an infinite-domain registered family keeps
+    its fused-kernel name, and raw vs pre-compactified asks hash alike."""
+    from repro.service.canonical import family_hash
+    raw = gaussian_family(3, 2, lo=-np.inf, hi=np.inf)
+    canon = raw.compactified()
+    assert canon.kernel == raw.kernel == "mc_eval_gaussian"
+    assert canon.compact
+    assert family_hash(raw) == family_hash(canon)
+    assert family_hash(canon) == family_hash(canon.compactified())

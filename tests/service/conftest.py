@@ -1,0 +1,69 @@
+"""Shared fixtures for the service test modules.
+
+Every module in this directory drives the same ``IntegrationEngine``
+surface with the same round quantum; the engine factory, bit-identity
+assertion and the mixed-dimension request maker live here once instead
+of being re-declared per module.  ``R`` is the shared round quantum —
+the factory's ``round_samples`` default — and modules that spell it in
+sample-budget arithmetic keep a local ``R = 4096`` alias for
+readability.
+"""
+
+import numpy as np
+import pytest
+
+from repro.service import IntegrationEngine, IntegrationRequest
+
+R = 4096
+
+
+@pytest.fixture
+def make_engine():
+    """Factory for engines with the suite's defaults (seed 0, rounds of
+    ``R`` samples).  Keyword overrides pass straight through — including
+    ``state_dir`` for durable-store tests.  Engines whose worker thread
+    is still running at teardown are stopped so a failing test cannot
+    leak a live worker into the next one.
+    """
+    made = []
+
+    def make(**kw):
+        kw.setdefault("seed", 0)
+        kw.setdefault("round_samples", R)
+        eng = IntegrationEngine(**kw)
+        made.append(eng)
+        return eng
+
+    yield make
+    for eng in made:
+        if eng.running:
+            eng.stop()
+
+
+@pytest.fixture
+def bit_identical():
+    """Assert two IntegrationResults carry byte-identical estimates."""
+
+    def check(a, b):
+        np.testing.assert_array_equal(a.means, b.means)
+        np.testing.assert_array_equal(a.stderrs, b.stderrs)
+        assert a.means.tobytes() == b.means.tobytes()
+
+    return check
+
+
+@pytest.fixture
+def mixed_requests():
+    """Factory for a mixed-form, mixed-dimension request stream (the
+    canonical batching workload: forms cycle, dims span 2-4)."""
+    from repro.core import abs_sum_family, gaussian_family, harmonic_family
+
+    def make(n=8, n_fn=4, budget=R):
+        makers = [lambda d: harmonic_family(n_fn, d),
+                  lambda d: gaussian_family(n_fn, d),
+                  lambda d: abs_sum_family(n_fn, d, np.ones(n_fn))]
+        return [IntegrationRequest.make([makers[i % 3](2 + i % 3)],
+                                        n_samples=budget)
+                for i in range(n)]
+
+    return make

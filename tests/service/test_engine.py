@@ -1,33 +1,23 @@
-"""Engine behavior: batching, dedupe, warm cache, backpressure, faults."""
+"""Engine behavior: batching, dedupe, warm cache, backpressure, faults.
+
+Engine construction and the mixed-dimension request stream come from the
+shared ``tests/service/conftest.py`` fixtures.
+"""
 
 import threading
 
 import numpy as np
 import pytest
 
-from repro.core import (abs_sum_family, gaussian_family, harmonic_analytic,
-                        harmonic_family)
+from repro.core import gaussian_family, harmonic_analytic, harmonic_family
 from repro.kernels import template
-from repro.service import (Backpressure, IntegrationClient, IntegrationEngine,
+from repro.service import (Backpressure, IntegrationClient,
                            IntegrationRequest)
 
-R = 4096
+R = 4096   # = conftest.R, the make_engine fixture's round quantum
 
 
-def make_engine(**kw):
-    kw.setdefault("round_samples", R)
-    return IntegrationEngine(seed=0, **kw)
-
-
-def mixed_requests(n=8, n_fn=4, budget=R):
-    makers = [lambda d: harmonic_family(n_fn, d),
-              lambda d: gaussian_family(n_fn, d),
-              lambda d: abs_sum_family(n_fn, d, np.ones(n_fn))]
-    return [IntegrationRequest.make([makers[i % 3](2 + i % 3)],
-                                    n_samples=budget) for i in range(n)]
-
-
-def test_batched_fewer_launches_than_sequential():
+def test_batched_fewer_launches_than_sequential(make_engine, mixed_requests):
     reqs = mixed_requests(8)
     engine = make_engine()
     template.reset_launch_count()
@@ -43,12 +33,13 @@ def test_batched_fewer_launches_than_sequential():
     # estimates are real: harmonic requests match the closed form
     for req, res in zip(reqs, results):
         if "harmonic" in res.names[0]:
-            exact = harmonic_analytic(req.families[0].n_fn, req.families[0].dim)
+            exact = harmonic_analytic(req.families[0].n_fn,
+                                      req.families[0].dim)
             assert np.all(np.abs(res.means - exact)
                           <= 6 * res.stderrs + 1e-6)
 
 
-def test_dedupe_across_clients():
+def test_dedupe_across_clients(make_engine):
     engine = make_engine()
     fams = lambda: [harmonic_family(4, 3)]
     t1 = engine.submit(IntegrationRequest.make(fams(), n_samples=2 * R))
@@ -61,7 +52,7 @@ def test_dedupe_across_clients():
     assert engine.cache.n_entries == 1
 
 
-def test_warm_cache_zero_launches():
+def test_warm_cache_zero_launches(make_engine):
     engine = make_engine()
     cli = IntegrationClient(engine)
     cli.integrate([harmonic_family(4, 3)], n_samples=R)
@@ -75,7 +66,7 @@ def test_warm_cache_zero_launches():
     assert template.launch_count() == 0 and res2.served_from_cache
 
 
-def test_topup_resumes_stream():
+def test_topup_resumes_stream(make_engine):
     engine = make_engine()
     cli = IntegrationClient(engine)
     cli.integrate([harmonic_family(4, 3)], n_samples=R)
@@ -89,7 +80,7 @@ def test_topup_resumes_stream():
     assert not res.served_from_cache
 
 
-def test_samplers_use_distinct_streams():
+def test_samplers_use_distinct_streams(make_engine):
     engine = make_engine()
     cli = IntegrationClient(engine)
     a = cli.integrate([harmonic_family(4, 3)], n_samples=R, sampler="mc")
@@ -98,7 +89,7 @@ def test_samplers_use_distinct_streams():
     assert not np.array_equal(a.means, b.means)
 
 
-def test_backpressure():
+def test_backpressure(make_engine):
     engine = make_engine(max_pending=1)
     engine.submit(IntegrationRequest.make([harmonic_family(4, 3)],
                                           n_samples=R))
@@ -110,7 +101,7 @@ def test_backpressure():
                                               n_samples=R), timeout=0.05)
 
 
-def test_async_worker_thread():
+def test_async_worker_thread(make_engine, mixed_requests):
     engine = make_engine()
     engine.start()
     try:
@@ -123,7 +114,7 @@ def test_async_worker_thread():
     assert not engine.running
 
 
-def test_wave_restart_on_transient_failure():
+def test_wave_restart_on_transient_failure(make_engine):
     """A crashed wave replays identically (counter-addressed work)."""
     engine = make_engine()
     fails = {"left": 1}
@@ -145,7 +136,7 @@ def test_wave_restart_on_transient_failure():
     np.testing.assert_array_equal(res.means, clean.means)
 
 
-def test_exhausted_restart_budget_raises():
+def test_exhausted_restart_budget_raises(make_engine):
     engine = make_engine(max_restarts=1)
 
     def always_fail(items):
@@ -158,7 +149,7 @@ def test_exhausted_restart_budget_raises():
         engine.step()
 
 
-def test_multifamily_request_order_preserved():
+def test_multifamily_request_order_preserved(make_engine):
     engine = make_engine()
     res = IntegrationClient(engine).integrate(
         [gaussian_family(3, 2), harmonic_family(5, 4)], n_samples=R)
@@ -168,7 +159,7 @@ def test_multifamily_request_order_preserved():
     assert np.all(np.abs(res.means[3:] - exact) <= 6 * res.stderrs[3:] + 1e-6)
 
 
-def test_concurrent_step_drivers():
+def test_concurrent_step_drivers(make_engine):
     """Two blocking clients driving step() themselves race their waves:
     duplicate rounds are skipped as exact replays, both get answers."""
     engine = make_engine()
@@ -190,7 +181,7 @@ def test_concurrent_step_drivers():
     np.testing.assert_array_equal(results[0].means, clean.means)
 
 
-def test_rejected_submit_allocates_nothing():
+def test_rejected_submit_allocates_nothing(make_engine):
     engine = make_engine(max_pending=1)
     engine.submit(IntegrationRequest.make([harmonic_family(4, 3)],
                                           n_samples=R))
@@ -202,9 +193,8 @@ def test_rejected_submit_allocates_nothing():
     assert engine.cache.n_entries == 1
 
 
-def test_result_retention_bounded():
+def test_result_retention_bounded(make_engine):
     engine = make_engine(max_retained_results=2)
-    cli = IntegrationClient(engine)
     tickets = []
     for n in (1, 2, 3):
         tickets.append(engine.submit(IntegrationRequest.make(
@@ -217,7 +207,7 @@ def test_result_retention_bounded():
     assert engine.poll(tickets[2]) is None
 
 
-def test_concurrent_submitters_against_worker():
+def test_concurrent_submitters_against_worker(make_engine):
     """Many client threads against the running worker: all served, shared
     entries deduped."""
     engine = make_engine()

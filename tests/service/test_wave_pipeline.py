@@ -8,6 +8,10 @@ launch count drops from R x B to B.  These tests assert that digest
 equality end to end (kernel, chunked and sharded paths, the pipelined
 worker, and crash replay through the group-committed WAL), plus the
 planner's round-robin fairness and the batcher's LRU plan cache.
+
+Engine construction and the bit-identity assertion come from the shared
+``tests/service/conftest.py`` fixtures (``make_engine`` defaults to
+rounds of ``R`` samples).
 """
 
 import threading
@@ -20,22 +24,9 @@ from repro.core import gaussian_family, harmonic_family
 from repro.core import rng as rng_lib
 from repro.kernels import template
 from repro.kernels.mc_eval import multi
-from repro.service import (IntegrationClient, IntegrationEngine,
-                           IntegrationRequest)
+from repro.service import (IntegrationClient, IntegrationRequest)
 
-R = 4096
-
-
-def make_engine(**kw):
-    kw.setdefault("seed", 0)
-    kw.setdefault("round_samples", R)
-    return IntegrationEngine(**kw)
-
-
-def assert_bit_identical(a, b):
-    np.testing.assert_array_equal(a.means, b.means)
-    np.testing.assert_array_equal(a.stderrs, b.stderrs)
-    assert a.means.tobytes() == b.means.tobytes()
+R = 4096   # = conftest.R, the make_engine fixture's round quantum
 
 
 # -- kernel layer: one launch == R launches, bit for bit ----------------------
@@ -97,7 +88,8 @@ def test_sharded_eval_plan_rounds_bit_identical():
 # -- engine layer: multi-round waves == single-round waves --------------------
 
 @pytest.mark.parametrize("use_kernel", [True, False])
-def test_multiround_wave_matches_per_round_waves(use_kernel):
+def test_multiround_wave_matches_per_round_waves(make_engine, bit_identical,
+                                                 use_kernel):
     """R rounds in one wave (one launch) == R single-round waves."""
     fams = [harmonic_family(4, 3), gaussian_family(3, 2)]
     fused_engine = make_engine(use_kernel=use_kernel, max_rounds_per_wave=8)
@@ -110,7 +102,7 @@ def test_multiround_wave_matches_per_round_waves(use_kernel):
     per = IntegrationClient(per_engine).integrate(fams, n_samples=4 * R)
     per_launches = template.launch_count()
 
-    assert_bit_identical(fused, per)
+    bit_identical(fused, per)
     if use_kernel:
         # 4 rounds x 2 dim buckets: 8 launches -> 2
         assert fused_launches == 2
@@ -119,7 +111,7 @@ def test_multiround_wave_matches_per_round_waves(use_kernel):
     assert per_engine.stats.waves == 4
 
 
-def test_multiround_wave_on_mesh_bit_identical():
+def test_multiround_wave_on_mesh_bit_identical(make_engine, bit_identical):
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     fams = [harmonic_family(4, 3)]
     fused = IntegrationClient(make_engine(mesh=mesh,
@@ -128,10 +120,11 @@ def test_multiround_wave_on_mesh_bit_identical():
     per = IntegrationClient(make_engine(mesh=mesh,
                                         max_rounds_per_wave=1)).integrate(
         fams, n_samples=3 * R)
-    assert_bit_identical(fused, per)
+    bit_identical(fused, per)
 
 
-def test_mixed_depth_streams_fuse_into_one_launch():
+def test_mixed_depth_streams_fuse_into_one_launch(make_engine,
+                                                  bit_identical):
     """A top-up and a cold stream with equal round counts share a launch."""
     engine = make_engine(max_rounds_per_wave=8)
     cli = IntegrationClient(engine)
@@ -152,11 +145,11 @@ def test_mixed_depth_streams_fuse_into_one_launch():
                                                n_samples=3 * R)
     ref_g = IntegrationClient(clean).integrate([gaussian_family(4, 3)],
                                                n_samples=2 * R)
-    assert_bit_identical(res_h, ref_h)
-    assert_bit_identical(res_g, ref_g)
+    bit_identical(res_h, ref_h)
+    bit_identical(res_g, ref_g)
 
 
-def test_pipelined_worker_bit_identical_to_sync():
+def test_pipelined_worker_bit_identical_to_sync(make_engine, bit_identical):
     """Double-buffered waves deposit exactly what serial waves deposit."""
     fams = [harmonic_family(4, 3), gaussian_family(3, 2)]
     piped = make_engine(max_rounds_per_wave=2, pipeline_waves=True)
@@ -170,10 +163,10 @@ def test_pipelined_worker_bit_identical_to_sync():
 
     sync = make_engine(max_rounds_per_wave=2)
     ref = IntegrationClient(sync).integrate(fams, n_samples=6 * R)
-    assert_bit_identical(res, ref)
+    bit_identical(res, ref)
 
 
-def test_pipelined_worker_many_clients():
+def test_pipelined_worker_many_clients(make_engine):
     """Concurrent submitters against the pipelined worker: all served,
     overlapping asks deduped onto shared streams, estimates sane."""
     from repro.core import harmonic_analytic
@@ -209,7 +202,7 @@ def test_pipelined_worker_many_clients():
 
 # -- group commit + crash replay ----------------------------------------------
 
-def test_group_commit_one_journal_write_per_wave(tmp_path):
+def test_group_commit_one_journal_write_per_wave(make_engine, tmp_path):
     """A 4-round wave journals its deposits in ONE write+fsync."""
     from repro.service.store import DurableStore
     writes = []
@@ -232,7 +225,8 @@ def test_group_commit_one_journal_write_per_wave(tmp_path):
         next(iter(engine.cache._entries))).rounds_done == 4
 
 
-def test_torn_group_commit_replays_prefix(tmp_path):
+def test_torn_group_commit_replays_prefix(make_engine, bit_identical,
+                                          tmp_path):
     """A crash tearing the wave's batch write loses only a round suffix;
     the restart tops up bit-identically."""
     from repro.service.store import _MAGIC, DurableStore
@@ -261,12 +255,14 @@ def test_torn_group_commit_replays_prefix(tmp_path):
                                           n_samples=3 * R)
     assert e2.stats.items_executed == 1      # only the torn round re-paid
     assert template.launch_count() == 1
-    clean = IntegrationClient(make_engine(max_rounds_per_wave=8)).integrate(
-        [harmonic_family(6, 3)], n_samples=3 * R)
-    assert_bit_identical(res, clean)
+    clean = IntegrationClient(
+        make_engine(max_rounds_per_wave=8)).integrate(
+            [harmonic_family(6, 3)], n_samples=3 * R)
+    bit_identical(res, clean)
 
 
-def test_transient_deposit_failure_replays_wave(tmp_path):
+def test_transient_deposit_failure_replays_wave(make_engine, bit_identical,
+                                                tmp_path):
     """A wave whose group commit dies mid-write is replayed identically
     (journaled prefix replays as exact no-ops on the retry)."""
     engine = make_engine(state_dir=str(tmp_path), max_rounds_per_wave=8)
@@ -286,9 +282,10 @@ def test_transient_deposit_failure_replays_wave(tmp_path):
     res = IntegrationClient(engine).integrate([harmonic_family(4, 3)],
                                               n_samples=3 * R)
     assert engine.stats.restarts == 1
-    clean = IntegrationClient(make_engine(max_rounds_per_wave=8)).integrate(
-        [harmonic_family(4, 3)], n_samples=3 * R)
-    assert_bit_identical(res, clean)
+    clean = IntegrationClient(
+        make_engine(max_rounds_per_wave=8)).integrate(
+            [harmonic_family(4, 3)], n_samples=3 * R)
+    bit_identical(res, clean)
 
 
 def test_deposit_wave_skips_ahead_of_frontier_rounds():
@@ -313,7 +310,7 @@ def test_deposit_wave_skips_ahead_of_frontier_rounds():
 
 # -- fairness -----------------------------------------------------------------
 
-def test_small_request_not_starved_by_heavy():
+def test_small_request_not_starved_by_heavy(make_engine):
     """Round-robin wave budget: the small ask completes in wave 1 even
     though a heavy ask arrived first and wants far more than the wave."""
     engine = make_engine(max_rounds_per_wave=4, max_items_per_wave=4)
@@ -329,7 +326,7 @@ def test_small_request_not_starved_by_heavy():
     assert engine.poll(heavy) is not None
 
 
-def test_greedy_allocation_would_starve_rr_does_not():
+def test_greedy_allocation_would_starve_rr_does_not(make_engine):
     """With many heavy streams saturating the budget, every stream still
     progresses every wave (one round each, round-robin)."""
     engine = make_engine(max_rounds_per_wave=8, max_items_per_wave=3)
@@ -347,7 +344,7 @@ def test_greedy_allocation_would_starve_rr_does_not():
 
 # -- plan cache ---------------------------------------------------------------
 
-def test_plan_cache_lru_eviction():
+def test_plan_cache_lru_eviction(make_engine):
     engine = make_engine()
     batcher = engine.batcher
     batcher.plan_cache_size = 2
@@ -366,7 +363,7 @@ def test_plan_cache_lru_eviction():
     assert keys[0] not in batcher._plans
 
 
-def test_plan_reused_across_waves():
+def test_plan_reused_across_waves(make_engine):
     """A topped-up stream re-uses its cached plan object (LRU hit)."""
     engine = make_engine(max_rounds_per_wave=1)
     cli = IntegrationClient(engine)
