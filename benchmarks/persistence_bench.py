@@ -26,8 +26,15 @@ fused-kernel path across process death: an integral over R^d served
 before the SIGKILL replays and tops up bit-identically, exactly like a
 finite-box one.
 
-``--json-out`` writes the measurements as ``BENCH_persistence.json`` so
-CI can archive the perf trajectory per commit.
+After each kill — before any restart can repair what it reads — the
+parent runs the Layer-3 determinism auditor (``repro.analysis.streams``)
+over the state dir and requires it clean: disjoint counter ranges,
+gap-free deposit rounds, a single round quantum, no orphans.  A torn
+tail record is expected post-SIGKILL and is reported, not flagged.
+
+``--json-out`` writes the measurements (including the audit summaries)
+as ``BENCH_persistence.json`` so CI can archive the perf trajectory per
+commit.
 
 Wall-clock numbers matter on real accelerators; on CPU the kernels run
 interpreted and only launch counts + digests are meaningful.
@@ -107,6 +114,31 @@ def child_main(args) -> int:
 
 # -- parent: orchestrate children, deliver SIGKILLs ---------------------------
 
+def _audit(state_dir: str, label: str) -> dict:
+    """Run the Layer-3 determinism auditor (read-only) over a state dir.
+
+    Called on the exact bytes a SIGKILL left behind — before any restart
+    touches them — so a violation here means the WAL protocol itself is
+    broken, not that recovery papered over it.  A torn tail record is
+    expected after a kill and is reported, not flagged.
+    """
+    if _SRC not in sys.path:
+        sys.path.insert(0, _SRC)
+    from repro.analysis.streams import audit_state_dir
+    from repro.analysis.violations import render
+
+    report = audit_state_dir(state_dir)
+    if report.violations:
+        print(render(report.violations))
+    assert report.ok, f"{label}: state dir failed the determinism audit"
+    print(f"audit {label}: {report.summary()}")
+    return {"ok": True, "streams": report.streams,
+            "journal_records": report.journal_records,
+            "deposits_folded": report.deposits_folded,
+            "deposits_replayed": report.deposits_replayed,
+            "truncated_tail_bytes": report.truncated_tail_bytes}
+
+
 def _run_child(state_dir: str, cfg, *, waves: int = -1, linger: bool = False,
                compact_on_start: bool = False) -> dict | None:
     """Run one engine process; SIGKILL it when it prints KILLME.
@@ -165,6 +197,8 @@ def run(cfg) -> int:
         cold = _run_child(state_a, cfg, linger=True)
         print(f"cold:         {cold['launches']} launches, "
               f"{cold['seconds']}s  (then SIGKILLed, journal-only state)")
+        audits = {"journal_only_post_sigkill":
+                  _audit(state_a, "journal-only post-SIGKILL")}
 
         # -- phase 2: restart against the journal -> zero launches
         warm = _run_child(state_a, cfg)
@@ -181,6 +215,8 @@ def run(cfg) -> int:
         # multi-round budget), restart, finish -> only delta rounds paid
         state_b = os.path.join(root, "midkill")
         _run_child(state_b, cfg, waves=1)
+        audits["midwave_post_sigkill"] = \
+            _audit(state_b, "mid-wave post-SIGKILL")
         resumed = _run_child(state_b, cfg)
         state_c = os.path.join(root, "reference")
         reference = _run_child(state_c, cfg)
@@ -192,9 +228,11 @@ def run(cfg) -> int:
         assert 0 < resumed["launches"] < reference["launches"], \
             (resumed["launches"], reference["launches"])
 
+        audits["midkill_post_resume"] = _audit(state_b, "post-resume")
         report["phases"] = {"cold": cold, "warm_restart": warm,
                             "midkill_resume": resumed,
                             "uninterrupted_reference": reference}
+        report["audits"] = audits
         saved = reference["launches"] - resumed["launches"]
         print(f"-> SIGKILL cost zero recomputation: warm replay 0 launches; "
               f"mid-stream kill saved {saved} of {reference['launches']} "

@@ -27,6 +27,15 @@ Engine knobs this example leaves at their defaults:
 requests so heavy asks can't starve small ones), and
 ``pipeline_waves`` (the background worker dispatches wave k+1 while
 wave k's results deposit — see ``engine.start()``).
+
+Every invariant named above is machine-checked: ``python -m
+repro.analysis`` lints the tree, traces every registered kernel form's
+contract, and (with ``--state-dir``) audits a durable state dir —
+``serve_integrals --audit-state`` wraps the same auditor.  If a rule
+genuinely doesn't apply to a line you're writing, silence that one
+rule with ``# analysis: ignore[RULE]`` *and a comment saying why* —
+a bare ignore hides exactly the class of bug the checker exists to
+catch, and review should treat an unexplained one as a defect.
 """
 
 import sys, os

@@ -1,0 +1,16 @@
+# Static analysis for the repo's kernel/service contracts.
+#
+#   violations - rule registry + the Violation record all layers emit
+#   boundary   - Layer 1: AST lint (import boundary, purity, f32-only)
+#   contracts  - Layer 2: jaxpr contract checker over registered forms
+#   streams    - Layer 3: determinism auditor over durable stream state
+#                + live debug assertion hooks
+#   __main__   - the CLI CI gates on: python -m repro.analysis
+#
+# This package root stays import-light (no jax): the Layer-3 auditor and
+# the live hooks run in processes that never touch a device.  Layer 2
+# (contracts) imports jax and is pulled lazily by the CLI.
+
+from repro.analysis.violations import RULES, Violation, render
+
+__all__ = ["RULES", "Violation", "render"]

@@ -1,0 +1,70 @@
+"""The one violation currency every analysis layer trades in.
+
+A :class:`Violation` is a rule ID plus a location plus a message.  Rule
+IDs are stable, greppable, and documented in :data:`RULES`; CI output,
+the pytest fixtures and the ROADMAP "Standing invariants" section all
+refer to them.  Formatting is uniform (``RULE path:line message``) so a
+failing CI job reads like a compiler error list.
+
+This module is dependency-free (no jax, no numpy): every layer —
+including the journal auditor that runs in processes that never import
+jax — can afford it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# Rule registry: ID -> one-line contract it enforces.  Layer 1 (AST
+# lint) rules are prefixed BND/PUR/F64, Layer 2 (jaxpr contracts) KCT,
+# Layer 3 (durable-state determinism) STR.
+RULES: dict[str, str] = {
+    "BND001": ("jax.experimental.* is importable only from "
+               "repro/kernels/pallas_compat.py and repro/compat.py"),
+    "BND002": ("jax.shard_map is referenced only from repro/compat.py "
+               "(and the pallas shim)"),
+    "PUR001": ("no wall-clock, stateful RNG or host I/O inside "
+               "repro/kernels/ or repro/core/ modules"),
+    "F64001": ("no float64 on kernel/core accumulator paths (TPU MC "
+               "reductions are f32-only)"),
+    "KCT001": ("kernel eval bodies must trace to a side-effect-free "
+               "jaxpr (no callbacks, debug prints, infeed/outfeed)"),
+    "KCT002": ("kernel eval bodies must accumulate in float32 — the "
+               "(s1, s2) deposit dtype the WAL replays bit-exactly"),
+    "KCT003": ("all bodies sharing a (dim, sampler) bucket must produce "
+               "identical output avals (the lax.switch precondition)"),
+    "KCT004": ("forms advertising supports_compactified=True must trace "
+               "through template.compactified_body"),
+    "STR001": ("cached streams own pairwise-disjoint counter-space "
+               "ranges"),
+    "STR002": ("per-stream deposit rounds are gap-free and monotone "
+               "(the in-order left-fold bit-identity precondition)"),
+    "STR003": ("deposit deltas are shape- and size-consistent with the "
+               "stream's allocation and round quantum"),
+    "STR004": ("the allocator high-water mark covers every allocated "
+               "counter range"),
+    "STR005": ("meta.json, snapshot and alloc records agree on the "
+               "round quantum"),
+    "STR006": ("every deposit references an allocated stream (a dep "
+               "without its alloc is dropped on replay)"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken invariant at one location."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.rule} {self.path}:{self.line} {self.message}"
+
+
+def render(violations) -> str:
+    """Stable, sorted, one-per-line rendering for CLI / CI output."""
+    return "\n".join(
+        str(v) for v in sorted(violations,
+                               key=lambda v: (v.path, v.line, v.rule)))

@@ -100,11 +100,24 @@ def register(name: str):
     return deco
 
 
-def register_form(form: KernelForm) -> KernelForm:
-    """Register a form and generate its per-sampler impls."""
+def register_form(form: KernelForm, *, validate: bool = True) -> KernelForm:
+    """Register a form and generate its per-sampler impls.
+
+    By default the form's kernel contracts are proven eagerly BEFORE the
+    registry mutates (``repro.analysis.contracts``): the eval body must
+    trace to a pure f32 jaxpr under every advertised capability combo,
+    and its output avals must match every already-registered form it
+    would share a ``lax.switch`` bucket with — so a contract-breaking
+    form raises a named ValueError here, at its definition site, instead
+    of failing deep inside the fused kernel at first launch.  Tests
+    exercising deliberately-broken forms pass ``validate=False``.
+    """
     if form.name in _FORMS:
         raise ValueError(f"kernel form {form.name!r} already registered")
     from repro.kernels.template import make_family_impl
+    if validate:
+        from repro.analysis.contracts import validate_form_registration
+        validate_form_registration(form, _FORMS.values())
     _FORMS[form.name] = form
     for sampler in form.samplers:
         key = form.name if sampler == "mc" else f"{form.name}@{sampler}"

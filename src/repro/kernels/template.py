@@ -403,6 +403,20 @@ def pack_scalars(key, sample_offset, n_samples, round_stride=None):
     return jnp.stack(parts)
 
 
+def probe_operands(dim: int, n_cols: int):
+    """Zero-filled abstract-trace operands for one eval body.
+
+    Returns ``(draws, packed)`` shaped exactly like what
+    :func:`_fused_kernel` hands a body — ``draws`` is f32[dim, S_ROWS,
+    S_LANES] (index ``draws[d]`` to get dimension ``d``'s sample tile)
+    and ``packed`` is the f32[F_BLK, n_cols] parameter block.  The
+    contract checker (:mod:`repro.analysis.contracts`) traces bodies on
+    these to prove purity/dtype/aval invariants without a device.
+    """
+    return (jnp.zeros((dim, S_ROWS, S_LANES), jnp.float32),
+            jnp.zeros((F_BLK, n_cols), jnp.float32))
+
+
 def make_family_impl(form, sampler: str):
     """Build a registry fast-path callable for one form + sampler.
 

@@ -1,0 +1,15 @@
+"""Invariant-checker launcher: ``python -m repro.launch.check_analysis``.
+
+A thin alias for ``python -m repro.analysis`` so the analysis gate sits
+next to the other launchers (``integrate``, ``serve_integrals``, ...).
+Same arguments, same exit codes; see :mod:`repro.analysis.__main__`.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.analysis.__main__ import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -119,7 +119,22 @@ def main():
     ap.add_argument("--compact-on-start", action="store_true",
                     help="fold the replayed journal into one npz snapshot "
                          "before serving")
+    ap.add_argument("--audit-state", action="store_true",
+                    help="audit --state-dir against the determinism "
+                         "invariants (repro.analysis Layer 3) and exit; "
+                         "serves nothing")
     args = ap.parse_args()
+
+    if args.audit_state:
+        if not args.state_dir:
+            ap.error("--audit-state requires --state-dir")
+        from repro.analysis import render
+        from repro.analysis.streams import audit_state_dir
+        report = audit_state_dir(args.state_dir)
+        if report.violations:
+            print(render(report.violations))
+        print(report.summary())
+        raise SystemExit(0 if report.ok else 1)
 
     from repro.kernels import template
     from repro.service import IntegrationEngine

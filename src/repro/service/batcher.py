@@ -51,6 +51,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.analysis import streams as _analysis
 from repro.core import direct_mc
 from repro.core.direct_mc import SumsState
 from repro.core.integrand import MultiFunctionSpec
@@ -140,6 +141,13 @@ class RoundBatcher:
         through :meth:`ResultCache.deposit_wave` — one WAL fsync for the
         whole wave.  Returns the wave's item count.
         """
+        if _analysis.asserts_enabled():
+            # STR002 live: no double-deposits or gaps within the wave
+            per_stream: dict[str, list[int]] = {}
+            for entry, round_index, _ in wave.results:
+                per_stream.setdefault(entry.chash[:16],
+                                      []).append(round_index)
+            _analysis.assert_wave_consistent(per_stream)
         deposits = [
             (entry, round_index,
              SumsState(s1=np.asarray(sums.s1, np.float32),

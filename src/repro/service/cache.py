@@ -53,6 +53,7 @@ import threading
 
 import numpy as np
 
+from repro.analysis import streams as _analysis
 from repro.core import direct_mc
 from repro.core.direct_mc import SumsState
 from repro.core.integrand import IntegrandFamily
@@ -206,6 +207,15 @@ class ResultCache:
             if self._next_id + n_fn > _ID_SPACE:
                 raise RuntimeError(
                     f"counter id space exhausted ({_ID_SPACE} function ids)")
+            if _analysis.asserts_enabled():
+                # STR001 live: live + dormant streams all own disjoint
+                # counter ranges the new allocation must clear
+                _analysis.assert_disjoint_allocation(
+                    [(c, e.fn_offset, e.n_fn)
+                     for c, e in self._entries.items()]
+                    + [(c, st.fn_offset, st.n_fn)
+                       for c, st in self._dormant.items()],
+                    chash, self._next_id, n_fn)
             entry = CacheEntry(chash=chash, family=family,
                                fn_offset=self._next_id)
             self._next_id += n_fn

@@ -56,6 +56,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.analysis import streams as _analysis
 from repro.core import rng as rng_lib
 from repro.distributed.fault_tolerance import StepWatchdog, run_with_restarts
 from repro.service.api import (Backpressure, IntegrationRequest,
@@ -380,6 +381,10 @@ class IntegrationEngine:
         Caller must hold the engine lock."""
         for it in items:
             left = self._inflight.get(it.chash, 0) - 1
+            if _analysis.asserts_enabled():
+                # a negative in-flight count means a wave was retired
+                # twice — the precursor of double-scheduling its rounds
+                _analysis.assert_inflight_consistent(it.chash[:16], left)
             if left > 0:
                 self._inflight[it.chash] = left
             else:

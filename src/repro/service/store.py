@@ -94,6 +94,63 @@ class RecoveredState:
     truncated_bytes: int = 0          # corrupt/partial tail removed
 
 
+def read_journal(path: str) -> tuple[list[dict], int]:
+    """Decode every complete record of a journal file, read-only.
+
+    Returns ``(records, bad_tail_bytes)``: the JSON payloads of all
+    well-framed records in append order, plus the number of trailing
+    bytes that do not form a complete valid record (torn write at a kill
+    instant, bit rot).  Never writes — this is the parsing half of
+    :meth:`DurableStore._replay_journal`, shared with the offline
+    determinism auditor (:mod:`repro.analysis.streams`).
+    """
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except FileNotFoundError:
+        return [], 0
+    records: list[dict] = []
+    offset = 0
+    while True:
+        header_end = offset + _HEADER_BYTES
+        if header_end > len(data):
+            break                               # partial header
+        if data[offset:offset + len(_MAGIC)] != _MAGIC:
+            break                               # corrupt framing
+        length, crc = _HEADER.unpack_from(data, offset + len(_MAGIC))
+        end = header_end + length
+        if end > len(data):
+            break                               # torn payload
+        payload = data[header_end:end]
+        if zlib.crc32(payload) != crc:
+            break                               # bit rot / torn write
+        try:
+            records.append(json.loads(payload))
+        except ValueError:
+            break
+        offset = end
+    return records, len(data) - offset
+
+
+def read_snapshot(path: str) -> tuple[dict, dict]:
+    """Decode a snapshot npz, read-only: ``(meta, arrays)``.
+
+    ``meta`` is the embedded JSON dict (version, next_id, round_samples,
+    entries); ``arrays`` maps ``s1_*``/``s2_*`` names to f32 arrays.
+    Raises on version mismatch — shared by :meth:`DurableStore.load` and
+    the offline auditor.
+    """
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(bytes(z["meta"]).decode("utf-8"))
+        if meta.get("version") != _SNAPSHOT_VERSION:
+            raise ValueError(
+                f"snapshot {path!r} has version {meta.get('version')!r}; "
+                f"expected {_SNAPSHOT_VERSION}")
+        arrays = {name: np.asarray(z[name], np.float32)
+                  for name in z.files if name != "meta"}
+    return meta, arrays
+
+
 class DurableStore:
     """Append-only journal + atomic npz snapshots under one directory."""
 
@@ -214,56 +271,28 @@ class DurableStore:
         return state
 
     def _load_snapshot(self, state: RecoveredState) -> None:
-        with np.load(self.snapshot_path, allow_pickle=False) as z:
-            meta = json.loads(bytes(z["meta"]).decode("utf-8"))
-            if meta.get("version") != _SNAPSHOT_VERSION:
-                raise ValueError(
-                    f"snapshot {self.snapshot_path!r} has version "
-                    f"{meta.get('version')!r}; expected {_SNAPSHOT_VERSION}")
-            state.next_id = int(meta["next_id"])
-            state.round_samples = int(meta["round_samples"])
-            for i, ent in enumerate(meta["entries"]):
-                st = EntryState(
-                    chash=ent["chash"], fn_offset=int(ent["fn_offset"]),
-                    n_fn=int(ent["n_fn"]),
-                    round_samples=int(ent["round_samples"]),
-                    s1=np.asarray(z[f"s1_{i:05d}"], np.float32),
-                    s2=np.asarray(z[f"s2_{i:05d}"], np.float32),
-                    n=int(ent["n"]), rounds_done=int(ent["rounds_done"]))
-                state.entries[st.chash] = st
+        meta, arrays = read_snapshot(self.snapshot_path)
+        state.next_id = int(meta["next_id"])
+        state.round_samples = int(meta["round_samples"])
+        for i, ent in enumerate(meta["entries"]):
+            st = EntryState(
+                chash=ent["chash"], fn_offset=int(ent["fn_offset"]),
+                n_fn=int(ent["n_fn"]),
+                round_samples=int(ent["round_samples"]),
+                s1=arrays[f"s1_{i:05d}"],
+                s2=arrays[f"s2_{i:05d}"],
+                n=int(ent["n"]), rounds_done=int(ent["rounds_done"]))
+            state.entries[st.chash] = st
 
     def _replay_journal(self, state: RecoveredState) -> None:
-        try:
-            with open(self.journal_path, "rb") as f:
-                data = f.read()
-        except FileNotFoundError:
-            return
-        offset = 0
-        good_end = 0
-        while True:
-            header_end = offset + _HEADER_BYTES
-            if header_end > len(data):
-                break                               # partial header
-            if data[offset:offset + len(_MAGIC)] != _MAGIC:
-                break                               # corrupt framing
-            length, crc = _HEADER.unpack_from(data, offset + len(_MAGIC))
-            end = header_end + length
-            if end > len(data):
-                break                               # torn payload
-            payload = data[header_end:end]
-            if zlib.crc32(payload) != crc:
-                break                               # bit rot / torn write
-            try:
-                record = json.loads(payload)
-            except ValueError:
-                break
+        records, bad_tail = read_journal(self.journal_path)
+        for record in records:
             self._apply(record, state)
             state.journal_records += 1
-            good_end = end
-            offset = end
-        if good_end < len(data):
+        if bad_tail:
             # drop the bad tail on disk too, so new appends framing-align
-            state.truncated_bytes = len(data) - good_end
+            state.truncated_bytes = bad_tail
+            good_end = self.journal_size() - bad_tail
             self.close()
             with open(self.journal_path, "r+b") as f:
                 f.truncate(good_end)

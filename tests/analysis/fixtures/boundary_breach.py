@@ -1,0 +1,14 @@
+"""Seeded violation: imports jax.experimental outside the compat shims.
+
+Linted by path only — never imported.  Expected findings:
+BND001 at the two import lines and the attribute reference.
+"""
+
+from jax.experimental import pallas as pl                   # BND001
+import jax.experimental.shard_map as jsm                    # BND001
+
+import jax
+
+
+def grid_of(x):
+    return jax.experimental.pallas.num_programs(0) + pl.program_id(0) + jsm  # BND001

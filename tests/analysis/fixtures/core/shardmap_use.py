@@ -1,0 +1,14 @@
+"""Seeded violation: touches jax.shard_map directly instead of going
+through repro.compat.  Linted by path only — never imported.  Expected
+findings: BND002 at the import and the attribute reference.  (This file
+sits under a ``core/`` segment, so it is also purity-scoped — it must
+stay free of I/O and wall-clock to keep the findings exactly BND002.)
+"""
+
+from jax import shard_map                                   # BND002
+
+import jax
+
+
+def shard(f, mesh, specs):
+    return jax.shard_map(f, mesh=mesh, in_specs=specs), shard_map  # BND002

@@ -1,0 +1,13 @@
+"""Seeded violation: float64 on an accumulator path inside a
+``kernels/`` path.  Linted by path only — never imported.  Expected
+findings: F64001 at the jnp.float64 reference, the astype call and the
+dtype kwarg.
+"""
+
+import jax.numpy as jnp
+
+
+def eval_body(draw, p, f, dim):
+    acc = jnp.zeros((16, 128), dtype="float64")             # F64001
+    val = draw(0).astype("float64")                         # F64001
+    return (acc + val).astype(jnp.float64)                  # F64001

@@ -1,0 +1,17 @@
+"""Seeded violation: wall-clock, stateful RNG and host I/O inside a
+``kernels/`` path.  Linted by path only — never imported.  Expected
+findings: PUR001 at the two imports, the np.random use and the open()
+call.
+"""
+
+import time                                                 # PUR001
+import random                                               # PUR001
+
+import numpy as np
+
+
+def eval_body(draw, p, f, dim):
+    jitter = np.random.uniform()                            # PUR001
+    with open("/tmp/eval.log", "a") as fh:                  # PUR001
+        fh.write(f"{time.time()} {random.random()}\n")
+    return draw(0) + jitter

@@ -1,0 +1,103 @@
+"""Layer-1 AST lint: every seeded fixture fires its rule with the right
+ID and location, the escape hatch silences, and the real tree is clean."""
+
+import os
+
+import pytest
+
+from repro.analysis import boundary
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+SRC_REPRO = os.path.join(os.path.dirname(__file__), "..", "..",
+                         "src", "repro")
+
+
+def _findings(relpath):
+    return boundary.check_file(os.path.join(FIXTURES, relpath))
+
+
+def _by_rule(violations):
+    out = {}
+    for v in violations:
+        out.setdefault(v.rule, []).append(v)
+    return out
+
+
+class TestSeededFixtures:
+    def test_boundary_breach_fires_bnd001(self):
+        found = _findings("boundary_breach.py")
+        rules = _by_rule(found)
+        assert set(rules) == {"BND001"}
+        lines = sorted(v.line for v in rules["BND001"])
+        assert lines == [7, 8, 14], found
+        assert all(v.path.endswith("boundary_breach.py") for v in found)
+
+    def test_shardmap_use_fires_bnd002(self):
+        found = _findings("core/shardmap_use.py")
+        rules = _by_rule(found)
+        assert set(rules) == {"BND002"}
+        assert sorted(v.line for v in rules["BND002"]) == [8, 14], found
+
+    def test_impure_eval_fires_pur001(self):
+        found = _findings("kernels/impure_eval.py")
+        rules = _by_rule(found)
+        assert set(rules) == {"PUR001"}
+        # imports of time and random, np.random use, open() call
+        assert sorted(v.line for v in rules["PUR001"]) == [7, 8, 14, 15], found
+
+    def test_f64_accum_fires_f64001(self):
+        found = _findings("kernels/f64_accum.py")
+        rules = _by_rule(found)
+        assert set(rules) == {"F64001"}
+        assert sorted(v.line for v in rules["F64001"]) == [11, 12, 13], found
+
+    def test_ignore_comment_silences(self):
+        assert _findings("ignored_ok.py") == []
+
+    def test_fixture_dir_scan_finds_all_rules(self):
+        found = boundary.check_paths([FIXTURES])
+        assert {v.rule for v in found} == {"BND001", "BND002", "PUR001",
+                                           "F64001"}
+
+
+class TestRuleScoping:
+    def test_purity_rules_only_fire_in_kernels_core(self):
+        source = "import time\nx = open('f')\n"
+        assert boundary.check_source(source, "repro/launch/driver.py") == []
+        found = boundary.check_source(source, "repro/kernels/thing.py")
+        assert [v.rule for v in found] == ["PUR001", "PUR001"]
+
+    def test_np_float64_is_not_flagged(self):
+        # host-side np.float64 (analytic references) is fine by design;
+        # the rule targets jnp.float64 on device accumulator paths
+        source = "import numpy as np\nx = np.float64(1.0)\n"
+        assert boundary.check_source(source, "repro/core/refs.py") == []
+
+    def test_shims_are_allowed_jax_experimental(self):
+        source = "from jax.experimental import pallas as pl\n"
+        assert boundary.check_source(
+            source, "src/repro/kernels/pallas_compat.py") == []
+        assert boundary.check_source(source, "src/repro/compat.py") == []
+        assert boundary.check_source(
+            source, "src/repro/service/engine.py") != []
+
+    def test_configs_are_lint_exempt(self):
+        # seed model-config data modules are excluded from tree scans
+        found = boundary.check_paths(
+            [os.path.join(SRC_REPRO, "configs")])
+        assert found == []
+
+    def test_ignore_comment_is_rule_specific(self):
+        source = ("from jax.experimental import pallas "
+                  "# analysis: ignore[BND002]\n")
+        found = boundary.check_source(source, "repro/service/x.py")
+        assert [v.rule for v in found] == ["BND001"]
+
+
+@pytest.mark.parametrize("subtree", [
+    "kernels", "core", "service", "launch", "analysis", "distributed"])
+def test_real_tree_is_clean(subtree):
+    path = os.path.join(SRC_REPRO, subtree)
+    if not os.path.isdir(path):
+        pytest.skip(f"no {subtree}/ in this tree")
+    assert boundary.check_paths([path]) == []

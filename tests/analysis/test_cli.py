@@ -1,0 +1,69 @@
+"""The CLI CI gates on: exit codes, rule-ID + file:line output format,
+and the clean-pass over the real tree."""
+
+import os
+
+import numpy as np
+
+from repro.analysis.__main__ import main
+from repro.analysis.violations import RULES
+from repro.service.store import DurableStore
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+SRC_REPRO = os.path.join(os.path.dirname(__file__), "..", "..",
+                         "src", "repro")
+
+
+def test_seeded_fixtures_exit_nonzero_with_rule_and_location(capsys):
+    assert main([FIXTURES]) == 1
+    out = capsys.readouterr().out
+    assert "BND001" in out and "boundary_breach.py:7" in out
+    assert "BND002" in out and "shardmap_use.py:8" in out
+    assert "PUR001" in out and "impure_eval.py:7" in out
+    assert "F64001" in out and "f64_accum.py:11" in out
+
+
+def test_each_fixture_alone_exits_nonzero():
+    for rel in ("boundary_breach.py", "core/shardmap_use.py",
+                "kernels/impure_eval.py", "kernels/f64_accum.py"):
+        assert main([os.path.join(FIXTURES, rel)]) == 1, rel
+
+
+def test_clean_file_exits_zero():
+    assert main([os.path.join(SRC_REPRO, "compat.py")]) == 0
+
+
+def test_real_tree_and_contracts_exit_zero():
+    # the acceptance gate: full default run (Layer 1 over the package
+    # tree + Layer 2 over every registered capability combo) is clean
+    assert main([]) == 0
+
+
+def test_state_dir_audit_exit_codes(tmp_path, capsys):
+    clean = str(tmp_path / "clean")
+    store = DurableStore(clean, fsync=False)
+    store.append_alloc("aaa", fn_offset=0, n_fn=4, round_samples=32)
+    store.append_deposits([store.deposit_record(
+        "aaa", 0, np.ones(4, np.float32), np.ones(4, np.float32), 32)])
+    store.close()
+    assert main([os.path.join(SRC_REPRO, "compat.py"),
+                 "--state-dir", clean]) == 0
+
+    gap = str(tmp_path / "gap")
+    store = DurableStore(gap, fsync=False)
+    store.append_alloc("aaa", fn_offset=0, n_fn=4, round_samples=32)
+    store.append_deposits([store.deposit_record(
+        "aaa", 5, np.ones(4, np.float32), np.ones(4, np.float32), 32)])
+    store.close()
+    capsys.readouterr()
+    assert main([os.path.join(SRC_REPRO, "compat.py"),
+                 "--state-dir", gap]) == 1
+    out = capsys.readouterr().out
+    assert "STR002" in out and "journal.bin:2" in out
+
+
+def test_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULES:
+        assert rule in out

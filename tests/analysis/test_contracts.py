@@ -1,0 +1,167 @@
+"""Layer-2 jaxpr contract checker: seeded-bad forms fire KCT rules with
+the right ID and location, registration validates eagerly, and every
+registered form passes under 100% of its advertised capability combos."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import contracts
+from repro.kernels import registry
+from repro.kernels.registry import KernelForm
+
+
+# -- seeded-bad eval bodies (never registered with validate=True) -------------
+
+def _good_body(draw, p, f, dim):
+    val = p[f, 0] * draw(0)
+    for d in range(1, dim):
+        val = val * draw(d)
+    return val
+
+
+def _good_body_2(draw, p, f, dim):
+    val = p[f, 0] + draw(0)
+    for d in range(1, dim):
+        val = val + draw(d)
+    return val
+
+
+def _int32_body(draw, p, f, dim):
+    # deliberate: int32 is robustly non-f32 even with x64 disabled
+    # (jnp.float64 would silently downgrade to float32 there)
+    return (draw(0) * 0).astype(jnp.int32)
+
+
+def _scalar_body(draw, p, f, dim):
+    return jnp.sum(draw(0))
+
+
+def _printing_body(draw, p, f, dim):
+    jax.debug.print("tile {}", p[f, 0])
+    return draw(0) * p[f, 0]
+
+
+def _finite_only_body(draw, p, f, dim):
+    # traces on finite packing but explodes under the compactified
+    # wrapper's widened parameter block
+    assert p.shape[1] == 1, "finite packing only"
+    return draw(0) * p[f, 0]
+
+
+def _form(body, name="fixture_form", **kw):
+    kw.setdefault("samplers", ("mc",))
+    kw.setdefault("supports_compactified", False)
+    return KernelForm(name=name, body=body,
+                      pack_params=lambda fam: None,
+                      n_cols=lambda dim: 1, **kw)
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+class TestCheckForm:
+    def test_good_body_is_clean(self):
+        assert contracts.check_form(_form(_good_body)) == []
+
+    def test_int32_accumulator_fires_kct002(self):
+        found = contracts.check_form(_form(_int32_body))
+        assert _rules(found) == {"KCT002"}
+        assert all(v.path.endswith("test_contracts.py") for v in found)
+        assert all(v.line > 0 for v in found)
+
+    def test_scalar_output_fires_shape_contract(self):
+        found = contracts.check_form(_form(_scalar_body))
+        assert "KCT002" in _rules(found)
+        assert any("shaped" in v.message for v in found)
+
+    def test_debug_callback_fires_kct001(self):
+        found = contracts.check_form(_form(_printing_body))
+        assert "KCT001" in _rules(found)
+
+    def test_broken_compactified_support_fires_kct004(self):
+        form = _form(_finite_only_body, supports_compactified=True)
+        found = contracts.check_form(form)
+        assert "KCT004" in _rules(found)
+        # the same body honestly advertised does not fire
+        honest = _form(_finite_only_body, supports_compactified=False)
+        assert contracts.check_form(honest) == []
+
+
+class TestBucketUniformity:
+    def test_mismatched_bucket_avals_fire_kct003(self):
+        forms = [_form(_good_body, "good_a"), _form(_good_body_2, "good_b"),
+                 _form(_int32_body, "bad_int32")]
+        found = contracts.check_bucket_uniformity(forms)
+        assert found and _rules(found) == {"KCT003"}
+        assert all("bad_int32" in v.message for v in found)
+        assert all("lax.switch" in v.message for v in found)
+
+    def test_uniform_bucket_is_clean(self):
+        forms = [_form(_good_body, "good_a"), _form(_good_body_2, "good_b")]
+        assert contracts.check_bucket_uniformity(forms) == []
+
+
+class TestEagerRegistration:
+    def test_contract_breaking_form_raises_at_registration(self):
+        bad = _form(_int32_body, "fixture_bad_int32")
+        with pytest.raises(ValueError,
+                           match="(?s)fixture_bad_int32.*KCT002"):
+            registry.register_form(bad)
+        # validation runs BEFORE the registry mutates
+        assert "fixture_bad_int32" not in registry.names()
+        assert registry.form("fixture_bad_int32") is None
+
+    def test_bucket_mismatch_raises_naming_form_and_bucket(self):
+        existing = [_form(_int32_body, "grandfathered_int32")]
+        good = _form(_good_body, "fixture_newcomer")
+        with pytest.raises(ValueError) as exc:
+            contracts.validate_form_registration(good, existing)
+        msg = str(exc.value)
+        assert "fixture_newcomer" in msg
+        assert "dim=" in msg and "sampler=" in msg
+        assert "KCT003" in msg
+
+    def test_validate_false_bypasses_the_gate(self):
+        bad = _form(_int32_body, "fixture_unvalidated")
+        try:
+            registry.register_form(bad, validate=False)
+            assert "fixture_unvalidated" in registry.names()
+        finally:
+            registry._FORMS.pop("fixture_unvalidated", None)
+            registry._REGISTRY.pop("fixture_unvalidated", None)
+
+    def test_good_form_registers_cleanly_against_builtins(self):
+        form = _form(_good_body, "fixture_good_form",
+                     samplers=("mc", "sobol"), supports_compactified=True)
+        try:
+            registry.register_form(form)
+            assert "fixture_good_form" in registry.names()
+        finally:
+            registry._FORMS.pop("fixture_good_form", None)
+            registry._REGISTRY.pop("fixture_good_form", None)
+            registry._REGISTRY.pop("fixture_good_form@sobol", None)
+
+
+class TestRegisteredForms:
+    def test_real_registry_is_clean(self):
+        assert contracts.check_registered_forms() == []
+
+    def test_every_advertised_combo_is_covered(self):
+        # 100% coverage: every (sampler, compactified, probe-dim) combo a
+        # form claims to support is traced by check_form
+        for form in registry.forms():
+            combos = set(contracts._combos(form))
+            assert combos, f"{form.name} advertises no workable combo"
+            for sampler in form.samplers:
+                for compact in (False, True):
+                    if compact and not form.supports_compactified:
+                        continue
+                    for dim in contracts.PROBE_DIMS:
+                        if form.supports(dim=dim, sampler=sampler,
+                                         compactified=compact):
+                            assert (sampler, compact, dim) in combos
+
+    def test_builtin_forms_share_uniform_buckets(self):
+        assert contracts.check_bucket_uniformity(registry.forms()) == []

@@ -1,0 +1,224 @@
+"""Layer-3 determinism analyzer: seeded-bad state dirs fire STR rules at
+the right journal record, real engine state audits clean, and the live
+debug hooks share the same predicates without false positives."""
+
+import numpy as np
+import pytest
+
+from repro.analysis import streams
+from repro.service.store import DurableStore, EntryState
+
+RS = 64   # round quantum used by all fixture state dirs
+
+
+@pytest.fixture
+def state_dir(tmp_path):
+    return str(tmp_path / "state")
+
+
+def _store(state_dir):
+    return DurableStore(state_dir, fsync=False)
+
+
+def _dep(store, chash, round_index, n_fn, n=RS):
+    return store.deposit_record(chash, round_index,
+                                np.ones(n_fn, np.float32),
+                                np.ones(n_fn, np.float32), n)
+
+
+def _rules(report):
+    return [v.rule for v in report.violations]
+
+
+class TestAuditSeededViolations:
+    def test_overlapping_counter_ranges_fire_str001(self, state_dir):
+        store = _store(state_dir)
+        store.append_alloc("aaa", fn_offset=0, n_fn=8, round_samples=RS)
+        store.append_alloc("bbb", fn_offset=4, n_fn=8, round_samples=RS)
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR001"]
+        v = report.violations[0]
+        assert v.path.endswith("journal.bin") and v.line == 2
+
+    def test_deposit_gap_fires_str002(self, state_dir):
+        store = _store(state_dir)
+        store.append_alloc("aaa", fn_offset=0, n_fn=8, round_samples=RS)
+        store.append_deposits([_dep(store, "aaa", 1, 8)])   # skips round 0
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR002"]
+        assert report.violations[0].line == 2
+
+    def test_shape_mismatch_fires_str003(self, state_dir):
+        store = _store(state_dir)
+        store.append_alloc("aaa", fn_offset=0, n_fn=8, round_samples=RS)
+        store.append_deposits([_dep(store, "aaa", 0, n_fn=3)])
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR003"]
+
+    def test_quantum_mismatch_fires_str003(self, state_dir):
+        store = _store(state_dir)
+        store.append_alloc("aaa", fn_offset=0, n_fn=8, round_samples=RS)
+        store.append_deposits([_dep(store, "aaa", 0, 8, n=RS + 1)])
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR003"]
+
+    def test_allocator_regression_fires_str004(self, state_dir):
+        store = _store(state_dir)
+        store.snapshot([], next_id=100, round_samples=RS)
+        store.append_alloc("aaa", fn_offset=10, n_fn=8, round_samples=RS)
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR004"]
+
+    def test_round_quantum_disagreement_fires_str005(self, state_dir):
+        store = _store(state_dir)
+        store.ensure_meta({"seed": 0, "round_samples": RS})
+        store.append_alloc("aaa", fn_offset=0, n_fn=8,
+                           round_samples=RS * 2)
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR005"]
+
+    def test_orphan_deposit_fires_str006(self, state_dir):
+        store = _store(state_dir)
+        store.append_deposits([_dep(store, "ghost", 0, 8)])
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR006"]
+
+    def test_snapshot_range_beyond_hwm_fires_str004(self, state_dir):
+        store = _store(state_dir)
+        store.snapshot([EntryState(
+            chash="aaa", fn_offset=0, n_fn=16, round_samples=RS,
+            s1=np.zeros(16, np.float32), s2=np.zeros(16, np.float32))],
+            next_id=8, round_samples=RS)
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR004"]
+
+
+class TestAuditCleanState:
+    def test_clean_journal_audits_clean(self, state_dir):
+        store = _store(state_dir)
+        store.ensure_meta({"seed": 0, "round_samples": RS})
+        store.append_alloc("aaa", fn_offset=0, n_fn=8, round_samples=RS)
+        store.append_alloc("bbb", fn_offset=8, n_fn=4, round_samples=RS)
+        store.append_deposits([_dep(store, "aaa", 0, 8),
+                               _dep(store, "bbb", 0, 4),
+                               _dep(store, "aaa", 1, 8)])
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert report.ok, report.summary()
+        assert report.streams == 2
+        assert report.deposits_folded == 3
+
+    def test_replayed_round_is_benign(self, state_dir):
+        store = _store(state_dir)
+        store.append_alloc("aaa", fn_offset=0, n_fn=8, round_samples=RS)
+        store.append_deposits([_dep(store, "aaa", 0, 8),
+                               _dep(store, "aaa", 0, 8),    # exact replay
+                               _dep(store, "aaa", 1, 8)])
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert report.ok, report.summary()
+        assert report.deposits_folded == 2
+        assert report.deposits_replayed == 1
+
+    def test_torn_tail_is_reported_not_flagged(self, state_dir):
+        store = _store(state_dir)
+        store.append_alloc("aaa", fn_offset=0, n_fn=8, round_samples=RS)
+        store.close()
+        with open(store.journal_path, "ab") as f:
+            f.write(b"ZMJ1\x99\x99torn-at-sigkill")
+        report = streams.audit_state_dir(state_dir)
+        assert report.ok, report.summary()
+        assert report.truncated_tail_bytes > 0
+        # auditing is read-only: the torn tail is still on disk
+        report2 = streams.audit_state_dir(state_dir)
+        assert report2.truncated_tail_bytes == report.truncated_tail_bytes
+
+    def test_snapshot_plus_journal_chain(self, state_dir):
+        store = _store(state_dir)
+        store.snapshot([EntryState(
+            chash="aaa", fn_offset=0, n_fn=8, round_samples=RS,
+            s1=np.ones(8, np.float32), s2=np.ones(8, np.float32),
+            n=2 * RS, rounds_done=2)], next_id=8, round_samples=RS)
+        # post-snapshot deposits resume at the snapshot frontier
+        store.append_deposits([_dep(store, "aaa", 2, 8)])
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert report.ok, report.summary()
+        assert report.deposits_folded == 1
+
+
+class TestLiveEngineAudit:
+    def test_engine_state_audits_clean_with_asserts_on(self, state_dir):
+        from repro.core import harmonic_family
+        from repro.service import IntegrationEngine
+        from repro.service.api import IntegrationRequest
+
+        streams.enable_asserts(True)
+        try:
+            with IntegrationEngine(round_samples=256, use_kernel=False,
+                                   state_dir=state_dir) as engine:
+                tickets = [
+                    engine.submit(IntegrationRequest.make(
+                        (harmonic_family(2, 2 + i % 2),), n_samples=512))
+                    for i in range(4)]
+                while any(engine.poll(t) is None for t in tickets):
+                    engine.step()
+        finally:
+            streams.enable_asserts(None)
+        report = streams.audit_state_dir(state_dir)
+        assert report.ok, report.summary()
+        assert report.streams > 0
+
+
+class TestLiveHooks:
+    def test_disjoint_allocation_passes(self):
+        streams.assert_disjoint_allocation(
+            [("a", 0, 8), ("b", 8, 4)], "c", 12, 8)
+
+    def test_overlapping_allocation_raises_str001(self):
+        with pytest.raises(AssertionError, match="STR001"):
+            streams.assert_disjoint_allocation(
+                [("a", 0, 8)], "b", 4, 8)
+
+    def test_wave_consistency(self):
+        streams.assert_wave_consistent({"a": [3, 4, 5], "b": [0]})
+        with pytest.raises(AssertionError, match="STR002"):
+            streams.assert_wave_consistent({"a": [0, 0, 1]})   # double
+        with pytest.raises(AssertionError, match="STR002"):
+            streams.assert_wave_consistent({"a": [0, 2]})      # gap
+
+    def test_inflight_consistency(self):
+        streams.assert_inflight_consistent("a", 0)
+        with pytest.raises(AssertionError, match="retired twice"):
+            streams.assert_inflight_consistent("a", -1)
+
+    def test_find_overlaps(self):
+        assert streams.find_overlaps(
+            [("a", 0, 8), ("b", 8, 4), ("c", 20, 0)]) == []
+        assert streams.find_overlaps(
+            [("a", 0, 8), ("b", 4, 8)]) == [("a", "b")]
+
+    def test_classify_round(self):
+        assert streams.classify_round(3, 2) == "replay"
+        assert streams.classify_round(3, 3) == "fold"
+        assert streams.classify_round(3, 4) == "gap"
+
+    def test_asserts_env_switch(self, monkeypatch):
+        streams.enable_asserts(None)
+        monkeypatch.delenv("REPRO_ANALYSIS_ASSERTS", raising=False)
+        assert not streams.asserts_enabled()
+        monkeypatch.setenv("REPRO_ANALYSIS_ASSERTS", "1")
+        assert streams.asserts_enabled()
+        streams.enable_asserts(False)
+        try:
+            assert not streams.asserts_enabled()
+        finally:
+            streams.enable_asserts(None)
