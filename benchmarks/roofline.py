@@ -177,6 +177,69 @@ def analytic_terms(arch: str, shape_name: str, n_chips: int,
     }
 
 
+# ---- MC integration kernels (the service's fused multi-round buckets) -----
+#
+# One fused launch of a (dim, sampler) bucket evaluates ``rounds`` rounds
+# x ``round_samples`` samples x ``n_fn`` functions in a single
+# ``pallas_call``.  Per (sample, function):
+#
+#   draws   = dim counter-based uniforms  (threefry2x32: ~36 flop/draw,
+#             the standard estimate for 20 rounds of add/xor/rotate)
+#   eval    = ~8 flop/dim for a registered-form body (poly/trig/exp mix)
+#   accum   = 4 flop (s1 += v, s2 += v*v)
+#
+# and the only HBM traffic is the operand read + (s1, s2) f32 deposit
+# per (round, fn) — samples never round-trip (drawn in registers/VMEM),
+# which is why the fused path is compute-bound at any realistic shape.
+
+MC_RNG_FLOPS_PER_DRAW = 36.0
+MC_EVAL_FLOPS_PER_DIM = 8.0
+MC_ACCUM_FLOPS = 4.0
+
+
+def mc_kernel_terms(*, dim: int, n_fn: int, rounds: int,
+                    round_samples: int, n_chips: int = 1,
+                    param_bytes: float = 0.0) -> dict:
+    """Analytic roofline terms (seconds) for one fused MC bucket launch."""
+    evals = float(rounds) * round_samples * n_fn
+    draws = float(rounds) * round_samples * dim  # draws shared across fns
+    flops = (draws * MC_RNG_FLOPS_PER_DRAW
+             + evals * (MC_EVAL_FLOPS_PER_DIM * dim + MC_ACCUM_FLOPS))
+    # operands in, (s1, s2) per (round, fn) out, all f32
+    hbm = param_bytes + 2.0 * 4.0 * rounds * n_fn
+    compute = flops / (n_chips * PEAK_FLOPS)
+    memory = hbm / (n_chips * HBM_BW)
+    return {
+        "dim": dim, "n_fn": n_fn, "rounds": rounds,
+        "round_samples": round_samples,
+        "flops": flops, "hbm_bytes": hbm,
+        "compute_s": compute, "memory_s": memory,
+        "dominant": "compute" if compute >= memory else "memory",
+        "intensity": flops / max(hbm, 1.0),   # flop/byte
+    }
+
+
+def mc_bucket_table(buckets: list[dict]) -> list[dict]:
+    """Analytic terms for each measured (dim, sampler) bucket.
+
+    ``buckets`` rows need dim / n_fn / rounds / round_samples (e.g. from
+    the ``zmc_fused_bucket_rounds_total`` metric labels plus the bench
+    shape); each comes back with the analytic columns merged in, for
+    embedding alongside measured per-stage timings in bench JSON.
+    """
+    out = []
+    for b in buckets:
+        terms = mc_kernel_terms(
+            dim=int(b["dim"]), n_fn=int(b["n_fn"]),
+            rounds=int(b["rounds"]), round_samples=int(b["round_samples"]),
+            n_chips=int(b.get("n_chips", 1)),
+            param_bytes=float(b.get("param_bytes", 0.0)))
+        row = dict(b)
+        row.update(terms)
+        out.append(row)
+    return out
+
+
 def _cache_row_bytes(cfg) -> float:
     """Decode-cache bytes per token per sequence (all layers)."""
     if cfg.attn_type == "mla":

@@ -26,7 +26,23 @@ doubles as the CI regression gate via ``--smoke``):
   buckets and ZERO chunked fallback rounds
   (``RoundBatcher.fallback_rounds``), with the R^d / half-infinite
   Gaussian estimates hitting their analytic values and a warm replay
-  costing zero launches.
+  costing zero launches;
+
+* **telemetry / host-per-wave cost** (``BENCH_7.json``) — the same
+  workload served with full telemetry (:mod:`repro.obs`: tracing +
+  metrics + convergence accounting) must (a) stay within 5% (+0.25 s
+  noise epsilon) of the telemetry-off wall clock, best-of-N each; (b)
+  produce a Perfetto-loadable trace covering all six pipeline stages,
+  from which the phase isolates *host* time (plan / launch dispatch /
+  transfer / deposit / wal_commit) from *device* time (device_execute)
+  per wave — the microbenchmark the ROADMAP's device-resident
+  refinement item needs; (c) export metrics that agree *exactly* with
+  the engine's own observables (``template.launch_count``,
+  ``RoundBatcher.fallback_rounds``, wave/request counts); and (d)
+  record a stderr-vs-rounds trajectory for every stream served.  The
+  per-(dim, sampler)-bucket analytic roofline terms
+  (:func:`benchmarks.roofline.mc_kernel_terms`) are emitted alongside
+  the measured stage timings.
 
 Wall-clock numbers are reported but only meaningful on a real
 accelerator; on CPU the Pallas kernels run interpreted.  Launch counts
@@ -36,6 +52,7 @@ and estimate agreement are platform-independent.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -199,9 +216,163 @@ def _infinite_phase(*, n_fn: int, round_samples: int, rounds: int,
     return payload
 
 
+def _telemetry_phase(*, n_requests: int, n_fn: int, n_samples: int,
+                     round_samples: int, rounds: int, seed: int,
+                     reps: int = 2, json_out: str | None = None,
+                     trace_out: str | None = None,
+                     metrics_out: str | None = None):
+    """Telemetry-overhead gate + host-per-wave cost split (BENCH_7)."""
+    import json
+    import shutil
+    import tempfile
+
+    from repro.obs import STAGES, Observability, load_trace, span_totals
+    from repro.obs.export import write_snapshot
+    try:
+        from benchmarks.roofline import mc_bucket_table
+    except ImportError:          # run as a script: benchmarks/ is sys.path[0]
+        from roofline import mc_bucket_table
+
+    work = tempfile.mkdtemp(prefix="zmc_bench7_")
+
+    def one_run(tag: str, obs):
+        # fresh engine + fresh state dir per rep: every run is a cold
+        # cache paying identical WAL/fsync costs — only telemetry varies
+        engine = IntegrationEngine(
+            seed=seed, round_samples=round_samples,
+            max_rounds_per_wave=rounds,
+            state_dir=os.path.join(work, tag), obs=obs)
+        reqs = demo_workload(n_requests, n_fn=n_fn, n_samples=n_samples)
+        template.reset_launch_count()
+        t0 = time.time()
+        tickets = [engine.submit(r) for r in reqs]
+        while engine.step():
+            pass
+        dt = time.time() - t0
+        results = [engine.poll(t) for t in tickets]
+        assert all(r is not None for r in results), "unserved requests"
+        launches = template.launch_count()
+        engine.close()
+        return engine, results, launches, dt
+
+    off_times = [one_run(f"off{k}", None)[3] for k in range(reps)]
+
+    on_times = []
+    last = None
+    for k in range(reps):
+        trace_path = os.path.join(work, f"trace{k}.json")
+        obs = Observability.enabled(trace_path=trace_path)
+        engine, results, launches, dt = one_run(f"on{k}", obs)
+        obs.close()
+        on_times.append(dt)
+        last = (engine, results, launches, obs, trace_path)
+    engine, results, launches, obs, trace_path = last
+
+    # (b) the trace is loadable and covers every pipeline stage
+    totals = span_totals(load_trace(trace_path))
+    missing = [s for s in STAGES if s not in totals]
+    assert not missing, f"trace missing pipeline stages: {missing}"
+    waves = max(engine.stats.waves, 1)
+    host_stages = ("plan", "launch", "transfer", "deposit", "wal_commit")
+    host_s = sum(totals[s] for s in host_stages)
+    device_s = totals["device_execute"]
+
+    # (c) metrics agree exactly with the engine's own observables
+    snap = obs.metrics.snapshot()
+    agreement = {
+        "zmc_kernel_launches_total": (launches, "template.launch_count"),
+        "zmc_fallback_rounds_total": (engine.batcher.fallback_rounds,
+                                      "RoundBatcher.fallback_rounds"),
+        "zmc_waves_total": (engine.stats.waves, "EngineStats.waves"),
+        "zmc_requests_served_total": (engine.stats.served,
+                                      "EngineStats.served"),
+        "zmc_requests_submitted_total": (engine.stats.submitted,
+                                         "EngineStats.submitted"),
+    }
+    for name, (observable, source) in agreement.items():
+        metric = snap[name]["value"]
+        assert metric == observable, (
+            f"{name}={metric} disagrees with {source}={observable}")
+
+    # (d) a stderr trajectory exists for every stream served
+    for res in results:
+        assert res.stream_ids, "result carries no stream ids"
+        for sid in res.stream_ids:
+            assert obs.convergence.trajectory(sid), \
+                f"no stderr trajectory for stream {sid[:16]}"
+
+    # (a) the overhead gate: 5% relative + a small absolute epsilon
+    # (interpret-mode CPU waves jitter by tens of ms run to run)
+    off_best, on_best = min(off_times), min(on_times)
+    budget = off_best * 1.05 + 0.25
+    assert on_best <= budget, (
+        f"telemetry overhead gate: on={on_best:.3f}s > "
+        f"off*1.05+0.25={budget:.3f}s (off best {off_best:.3f}s)")
+
+    # analytic roofline terms per measured (dim, sampler) bucket
+    bucket_rounds = snap["zmc_bucket_rounds_total"]["value"]
+    buckets = []
+    for key, total in sorted(bucket_rounds.items()):
+        dim_s, sampler = key.split(",")
+        buckets.append({"dim": int(dim_s), "sampler": sampler,
+                        "n_fn": n_fn, "rounds": int(total),
+                        "round_samples": round_samples})
+    roofline_rows = mc_bucket_table(buckets)
+
+    print(f"telemetry: host {host_s / waves * 1e3:.1f} ms/wave "
+          f"(plan+dispatch+transfer+deposit+wal) vs device "
+          f"{device_s / waves * 1e3:.1f} ms/wave over {waves} wave(s)")
+    for s in STAGES:
+        print(f"  {s:<15} {totals[s]:8.3f}s total  "
+              f"{totals[s] / waves * 1e3:9.1f} ms/wave")
+    print(f"telemetry overhead: off {off_best:.2f}s vs on {on_best:.2f}s "
+          f"best-of-{reps} ({on_best / max(off_best, 1e-9):.3f}x; "
+          f"gate <= 1.05x + 0.25s)")
+    print("roofline (analytic, per measured bucket):")
+    for row in roofline_rows:
+        print(f"  dim={row['dim']} {row['sampler']}: {row['rounds']} rounds"
+              f" -> {row['flops']:.2e} flop, compute {row['compute_s']:.2e}s"
+              f" / memory {row['memory_s']:.2e}s ({row['dominant']}-bound,"
+              f" {row['intensity']:.0f} flop/B)")
+
+    payload = {
+        "bench": "service_telemetry",
+        "requests": n_requests, "n_fn": n_fn, "n_samples": n_samples,
+        "round_samples": round_samples, "waves": int(engine.stats.waves),
+        "stage_seconds": {s: round(totals[s], 6) for s in STAGES},
+        "host_seconds_per_wave": round(host_s / waves, 6),
+        "device_seconds_per_wave": round(device_s / waves, 6),
+        "overhead": {"off_best_s": round(off_best, 3),
+                     "on_best_s": round(on_best, 3), "reps": reps,
+                     "ratio": round(on_best / max(off_best, 1e-9), 4),
+                     "gate": "on_best <= off_best * 1.05 + 0.25"},
+        "counter_agreement": {
+            name: {"value": snap[name]["value"], "observable": source}
+            for name, (_, source) in agreement.items()},
+        "roofline": roofline_rows,
+        "convergence_streams": len(obs.convergence.streams()),
+    }
+    if json_out:
+        with open(json_out, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    if trace_out:
+        shutil.copyfile(trace_path, trace_out)
+        print(f"wrote {trace_out}")
+    if metrics_out:
+        write_snapshot(metrics_out, obs.metrics,
+                       convergence=obs.convergence)
+        print(f"wrote {metrics_out}")
+    shutil.rmtree(work, ignore_errors=True)
+    return payload
+
+
 def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
         seed: int = 0, json_out: str | None = None,
-        refine_rounds: int = 4, infinite_json_out: str | None = None) -> int:
+        refine_rounds: int = 4, infinite_json_out: str | None = None,
+        telemetry_json_out: str | None = None,
+        trace_out: str | None = None,
+        metrics_out: str | None = None) -> int:
     reqs = demo_workload(n_requests, n_fn=n_fn, n_samples=n_samples)
     n_fams = sum(len(r.families) for r in reqs)
     dims = sorted({f.dim for r in reqs for f in r.families})
@@ -244,6 +415,14 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
                                rounds=refine_rounds, seed=seed,
                                json_out=infinite_json_out)
 
+    # telemetry on vs off + host-per-wave cost split (BENCH_7 gate);
+    # a quarter of the request stream keeps the 4 cold reps affordable
+    telemetry = _telemetry_phase(
+        n_requests=max(16, n_requests // 4), n_fn=n_fn,
+        n_samples=n_samples, round_samples=round_samples,
+        rounds=refine_rounds, seed=seed, json_out=telemetry_json_out,
+        trace_out=trace_out, metrics_out=metrics_out)
+
     rows = []
     print("path,requests,launches,seconds,req_per_s")
     for name, res, launches, dt in [
@@ -268,6 +447,7 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
                        "round_samples": round_samples, "rows": rows,
                        "refinement_wave": refinement,
                        "infinite_domains": infinite,
+                       "telemetry": telemetry,
                        "items_deduped": engine.stats.items_deduped,
                        "cache": engine.cache.stats()},
                       f, indent=2, sort_keys=True)
@@ -292,16 +472,28 @@ def main() -> int:
     ap.add_argument("--infinite-json-out", default=None,
                     help="write the mixed finite/infinite-domain phase "
                          "as its own JSON artifact (BENCH_5.json)")
+    ap.add_argument("--telemetry-json-out", default=None,
+                    help="write the telemetry-overhead / host-per-wave "
+                         "phase as its own JSON artifact (BENCH_7.json)")
+    ap.add_argument("--trace-out", default=None,
+                    help="keep the telemetry phase's Perfetto trace here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the telemetry phase's metrics+convergence "
+                         "snapshot here")
     args = ap.parse_args()
     if args.smoke:
         return run(max(64, args.requests), n_fn=4, n_samples=8192,
                    round_samples=4096, json_out=args.json_out,
                    refine_rounds=args.refine_rounds,
-                   infinite_json_out=args.infinite_json_out)
+                   infinite_json_out=args.infinite_json_out,
+                   telemetry_json_out=args.telemetry_json_out,
+                   trace_out=args.trace_out, metrics_out=args.metrics_out)
     return run(args.requests, n_fn=args.n_fn, n_samples=args.samples,
                round_samples=args.round_samples, json_out=args.json_out,
                refine_rounds=args.refine_rounds,
-               infinite_json_out=args.infinite_json_out)
+               infinite_json_out=args.infinite_json_out,
+               telemetry_json_out=args.telemetry_json_out,
+               trace_out=args.trace_out, metrics_out=args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,12 @@ in prose:
   contract (TPU has no fast f64, and the WAL journals exact f32 bits).
   Host-side ``np.float64`` (analytic references, static metadata) is
   fine and not flagged.
+* **OBS001** — modules under ``repro/service/`` and ``repro/obs/``
+  read the wall clock only through the ``repro/obs/clock.py`` shim (no
+  direct ``time`` import or ``time.*`` call): trace timestamps, metric
+  latencies and fake-clock tests must all observe the same clock.
+  Kernels/core stay wholly clock-free under the stricter PUR001;
+  standalone launchers and ``distributed/`` are out of scope.
 
 Escape hatch: append ``# analysis: ignore[RULE]`` (comma-separate for
 several rules) to the offending line.  Use it to *document* a deliberate
@@ -55,6 +61,12 @@ PURE_SCOPE_SEGMENTS = ("kernels", "core")
 # Modules whose import into a pure scope is a PUR001 violation.
 _IMPURE_MODULES = ("time", "random", "datetime")
 
+# Path fragments marking clock-shim-scoped modules (OBS001), and the
+# one file allowed to touch ``time`` inside them.  Segment match, like
+# PURE_SCOPE_SEGMENTS, so ``fixtures/service/`` fixtures scope too.
+OBS_SCOPE_SEGMENTS = ("service", "obs")
+CLOCK_SHIM_SUFFIX = "obs/clock.py"
+
 # Builtin calls that do host I/O.
 _IO_CALLS = ("open", "input")
 
@@ -78,6 +90,13 @@ def _is_boundary_shim(path: str) -> bool:
 def _in_pure_scope(path: str) -> bool:
     parts = path.split("/")
     return any(seg in parts[:-1] for seg in PURE_SCOPE_SEGMENTS)
+
+
+def _in_obs_scope(path: str) -> bool:
+    if path.endswith(CLOCK_SHIM_SUFFIX):
+        return False     # the shim itself wraps ``time``
+    parts = path.split("/")
+    return any(seg in parts[:-1] for seg in OBS_SCOPE_SEGMENTS)
 
 
 def _dotted(node: ast.AST) -> str | None:
@@ -106,6 +125,7 @@ class _Checker(ast.NodeVisitor):
         self.path = path
         self.shim = _is_boundary_shim(path)
         self.pure = _in_pure_scope(path)
+        self.obs_scope = _in_obs_scope(path)
         self.found: list[Violation] = []
 
     def _flag(self, rule: str, node: ast.AST, message: str) -> None:
@@ -142,6 +162,12 @@ class _Checker(ast.NodeVisitor):
                        f"import of {mod!r} in a purity-scoped module "
                        "(eval outputs must be a pure function of "
                        "key/counters/params)")
+        if self.obs_scope and (mod == "time" or mod.startswith("time.")):
+            self._flag("OBS001", node,
+                       f"import of {mod!r} in a service/obs module: go "
+                       "through repro.obs.clock (the single wall-clock "
+                       "shim) so trace timestamps and fake-clock tests "
+                       "stay consistent")
 
     # -- attribute chains -----------------------------------------------------
     def visit_Attribute(self, node: ast.Attribute) -> None:
@@ -168,6 +194,10 @@ class _Checker(ast.NodeVisitor):
                                "float64 on an accumulator path "
                                "(deposits are exact f32; TPU has no "
                                "fast f64)")
+            if self.obs_scope and chain.startswith("time."):
+                self._flag("OBS001", node,
+                           f"wall-clock read {chain!r} in a service/obs "
+                           "module: use repro.obs.clock")
             # a complete chain is all Names/Attributes: recursing would
             # re-flag its sub-chains (jax.experimental.pallas AND
             # jax.experimental) on the same line

@@ -27,6 +27,9 @@ RULES: dict[str, str] = {
                "repro/kernels/ or repro/core/ modules"),
     "F64001": ("no float64 on kernel/core accumulator paths (TPU MC "
                "reductions are f32-only)"),
+    "OBS001": ("service/obs layers read the wall clock only through "
+               "repro/obs/clock.py (one shim: fake-clock tests and "
+               "trace timestamps stay consistent)"),
     "KCT001": ("kernel eval bodies must trace to a side-effect-free "
                "jaxpr (no callbacks, debug prints, infeed/outfeed)"),
     "KCT002": ("kernel eval bodies must accumulate in float32 — the "

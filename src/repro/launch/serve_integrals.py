@@ -36,14 +36,28 @@ journal into one npz snapshot before serving:
     # ... kill -9 it, then:
     python -m repro.launch.serve_integrals --requests 64 --state-dir /tmp/zmc \\
         --compact-on-start      # -> 64 pure cache hits, 0 launches
+
+**Telemetry** (:mod:`repro.obs`): ``--trace-out trace.json`` records a
+span per wave-pipeline stage (plan / launch / device_execute / transfer
+/ deposit / wal_commit) in Chrome-trace format — open the file directly
+in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.
+``--jax-trace`` additionally wraps spans in ``jax.profiler``
+annotations so they land in XLA profiler timelines.  ``--metrics-port
+P`` serves Prometheus text at ``http://127.0.0.1:P/metrics`` (plus
+``/metrics.json`` and ``/convergence``) while the workload runs;
+``--metrics-json PATH`` writes a final metrics + convergence snapshot
+on exit.  Any telemetry flag also turns on per-stream convergence
+accounting: the run reports each stream's stderr-vs-rounds trajectory,
+queryable afterwards via ``engine.stderr_trajectory(stream_id)``.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
+
+from repro.obs import clock as _clock
 
 from repro.core import abs_sum_family, gaussian_family, harmonic_family
 from repro.core import genz
@@ -123,6 +137,19 @@ def main():
                     help="audit --state-dir against the determinism "
                          "invariants (repro.analysis Layer 3) and exit; "
                          "serves nothing")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto span timeline of "
+                         "every wave-pipeline stage here")
+    ap.add_argument("--jax-trace", action="store_true",
+                    help="wrap pipeline spans in jax.profiler annotations "
+                         "(visible in XLA profiler timelines)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus metrics on this port while the "
+                         "workload runs (/metrics, /metrics.json, "
+                         "/convergence); 0 picks a free port")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write a final metrics + convergence snapshot "
+                         "here on exit")
     args = ap.parse_args()
 
     if args.audit_state:
@@ -147,13 +174,30 @@ def main():
         mp = 2 if n % 2 == 0 and n > 1 else 1
         mesh = make_mesh_for(model_parallel=mp)
 
+    telemetry = (args.trace_out is not None or args.jax_trace
+                 or args.metrics_port is not None
+                 or args.metrics_json is not None)
+    obs = None
+    metrics_server = None
+    if telemetry:
+        from repro.obs import Observability
+        obs = Observability.enabled(trace_path=args.trace_out,
+                                    jax_annotations=args.jax_trace)
+        if args.metrics_port is not None:
+            from repro.obs.export import MetricsServer
+            metrics_server = MetricsServer(obs.metrics,
+                                           port=args.metrics_port,
+                                           convergence=obs.convergence)
+            print(f"metrics: http://127.0.0.1:{metrics_server.port}/metrics")
+
     engine = IntegrationEngine(
         seed=args.seed, round_samples=args.round_samples,
         use_kernel=not args.no_kernel, mesh=mesh,
         max_rounds_per_wave=args.max_rounds_per_wave,
         max_items_per_wave=args.max_items_per_wave,
         pipeline_waves=not args.no_pipeline,
-        state_dir=args.state_dir, compact_on_start=args.compact_on_start)
+        state_dir=args.state_dir, compact_on_start=args.compact_on_start,
+        obs=obs)
     if engine.cache.recovered is not None:
         rec = engine.cache.recovered
         print(f"warm start: {len(rec.entries)} persisted streams "
@@ -165,7 +209,7 @@ def main():
         target_stderr=args.target_stderr)
 
     template.reset_launch_count()
-    t0 = time.time()
+    t0 = _clock.monotonic()
     if args.thread:
         engine.start()
         tickets = [engine.submit(r) for r in reqs]
@@ -176,7 +220,7 @@ def main():
         while engine.step():
             pass
         results = [engine.poll(t) for t in tickets]
-    dt = time.time() - t0
+    dt = _clock.monotonic() - t0
     launches = template.launch_count()
 
     n_fn_total = sum(r.n_fn_total for r in results)
@@ -195,6 +239,28 @@ def main():
     if args.state_dir:
         print(f"state snapshotted to {args.state_dir} "
               f"(journal compacted to {engine.store.journal_size()} bytes)")
+
+    if obs is not None:
+        streams = obs.convergence.streams()
+        if streams:
+            print(f"convergence: {len(streams)} streams tracked; "
+                  "final stderr per stream:")
+            for sid in streams:
+                traj = obs.convergence.trajectory(sid)
+                last = traj[-1]
+                print(f"  {sid[:16]}  rounds={last.rounds_done:4d} "
+                      f"n={last.n:9d}  stderr_max={last.stderr_max:.3e}")
+        if args.metrics_json:
+            from repro.obs.export import write_snapshot
+            write_snapshot(args.metrics_json, obs.metrics,
+                           convergence=obs.convergence)
+            print(f"metrics snapshot written to {args.metrics_json}")
+        if metrics_server is not None:
+            metrics_server.close()
+        obs.close()
+        if args.trace_out:
+            print(f"trace written to {args.trace_out} "
+                  "(open in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

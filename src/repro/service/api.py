@@ -75,6 +75,9 @@ class IntegrationResult:
     names: tuple[str, ...]
     served_from_cache: bool      # True -> zero new launches were needed
     ticket: int
+    # cache stream ids backing each family, in request order; keys for
+    # engine.stderr_trajectory() / the /convergence exposition
+    stream_ids: tuple[str, ...] = ()
 
     @property
     def n_fn_total(self) -> int:

@@ -93,7 +93,11 @@ class RoundBatcher:
     def __init__(self, cache: ResultCache, key, *, use_kernel: bool = True,
                  mesh=None, fn_axis: str = "model",
                  sample_axes: Sequence[str] = ("data",), chunk: int = 8192,
-                 plan_cache_size: int = 256):
+                 plan_cache_size: int = 256, obs=None):
+        if obs is None:
+            from repro.obs import Observability
+            obs = Observability.disabled()
+        self.obs = obs
         self.cache = cache
         self.key = key
         self.use_kernel = bool(use_kernel)
@@ -122,15 +126,20 @@ class RoundBatcher:
         contiguous spans, and spans sharing a round count are evaluated
         by one fused multi-round launch per dimension bucket.
         """
+        obs = self.obs
         unique = sorted(set(items),
                         key=lambda it: (it.sampler, it.chash, it.round_index))
         groups: dict[tuple[str, int], list[_Span]] = {}
         for span in self._spans_of(unique):
             groups.setdefault((span.sampler, span.count), []).append(span)
 
+        from repro.kernels import template
+        launches_before = template.launch_count()
         results: list[tuple[CacheEntry, int, SumsState]] = []
-        for group_key in sorted(groups):
-            results.extend(self._launch_group(groups[group_key]))
+        with obs.span("launch", items=len(unique), groups=len(groups)):
+            for group_key in sorted(groups):
+                results.extend(self._launch_group(groups[group_key]))
+        obs.m["launches"].inc(template.launch_count() - launches_before)
         return InFlightWave(results=results, n_items=len(unique))
 
     def deposit(self, wave: InFlightWave) -> int:
@@ -141,6 +150,7 @@ class RoundBatcher:
         through :meth:`ResultCache.deposit_wave` — one WAL fsync for the
         whole wave.  Returns the wave's item count.
         """
+        obs = self.obs
         if _analysis.asserts_enabled():
             # STR002 live: no double-deposits or gaps within the wave
             per_stream: dict[str, list[int]] = {}
@@ -148,13 +158,22 @@ class RoundBatcher:
                 per_stream.setdefault(entry.chash[:16],
                                       []).append(round_index)
             _analysis.assert_wave_consistent(per_stream)
-        deposits = [
-            (entry, round_index,
-             SumsState(s1=np.asarray(sums.s1, np.float32),
-                       s2=np.asarray(sums.s2, np.float32),
-                       n=np.float32(np.asarray(sums.n))))
-            for entry, round_index, sums in wave.results]
-        self.cache.deposit_wave(deposits)
+        if wave.results:
+            with obs.span("device_execute", items=wave.n_items):
+                # block on the device futures *before* converting, so
+                # the trace splits device wait from host-side transfer
+                import jax
+                jax.block_until_ready([sums.s1 for _, _, sums
+                                       in wave.results])
+        with obs.span("transfer", items=wave.n_items):
+            deposits = [
+                (entry, round_index,
+                 SumsState(s1=np.asarray(sums.s1, np.float32),
+                           s2=np.asarray(sums.s2, np.float32),
+                           n=np.float32(np.asarray(sums.n))))
+                for entry, round_index, sums in wave.results]
+        with obs.span("deposit", items=wave.n_items):
+            self.cache.deposit_wave(deposits)
         return wave.n_items
 
     # -- wave shaping ---------------------------------------------------------
@@ -182,6 +201,10 @@ class RoundBatcher:
         n = self.cache.round_samples
         count = spans[0].count
         sampler = spans[0].sampler
+        self.obs.m["wave_rounds"].observe(count, sampler=sampler)
+        for sp in spans:
+            self.obs.m["bucket_rounds"].inc(
+                count, dim=sp.entry.family.dim, sampler=sampler)
         entries = [sp.entry for sp in spans]
         fn_offsets = [e.fn_offset for e in entries]
         spec = MultiFunctionSpec(families=tuple(e.family for e in entries))
@@ -208,6 +231,7 @@ class RoundBatcher:
                 continue
             # chunked fallback: one counter-addressed eval per round
             self.fallback_rounds += count
+            self.obs.m["fallback_rounds"].inc(count)
             for r in range(count):
                 sample_offset = (sp.start + r) * n
                 if self.mesh is not None:

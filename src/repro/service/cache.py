@@ -134,9 +134,13 @@ class ResultCache:
     """In-memory cache of canonical-family accumulators (thread-safe)."""
 
     def __init__(self, round_samples: int = 65536,
-                 store: DurableStore | None = None):
+                 store: DurableStore | None = None, obs=None):
         if round_samples <= 0:
             raise ValueError("round_samples must be positive")
+        if obs is None:
+            from repro.obs import Observability
+            obs = Observability.disabled()
+        self.obs = obs
         self.round_samples = int(round_samples)
         self._entries: dict[str, CacheEntry] = {}
         self._next_id = 0
@@ -325,19 +329,18 @@ class ResultCache:
         if self.store is None:
             with self._lock:
                 accepted = self._admit_locked(recs, on_ahead)
-                return sum(
-                    self._fold_locked(entry, ri, s1, s2, n)
+                folded, states = self._fold_batch_locked(accepted)
+        else:
+            with self.store.mutex:
+                with self._lock:
+                    accepted = self._admit_locked(recs, on_ahead)
+                self.store.append_deposits(
+                    self.store.deposit_record(entry.chash, ri, s1, s2, n)
                     for entry, ri, s1, s2, n in accepted)
-        with self.store.mutex:
-            with self._lock:
-                accepted = self._admit_locked(recs, on_ahead)
-            self.store.append_deposits(
-                self.store.deposit_record(entry.chash, ri, s1, s2, n)
-                for entry, ri, s1, s2, n in accepted)
-            with self._lock:
-                return sum(
-                    self._fold_locked(entry, ri, s1, s2, n)
-                    for entry, ri, s1, s2, n in accepted)
+                with self._lock:
+                    folded, states = self._fold_batch_locked(accepted)
+        self._observe_deposits(folded, states)
+        return folded
 
     def _admit_locked(self, recs, on_ahead: str):
         """Filter a deposit batch against a local frontier image.
@@ -363,6 +366,36 @@ class ResultCache:
             accepted.append((entry, ri, s1, s2, n))
             frontier[id(entry)] = done + 1
         return accepted
+
+    def _fold_batch_locked(self, accepted):
+        """Fold an admitted batch; returns (rounds folded, post-fold
+        (entry, state) snapshots for telemetry).  Caller holds the cache
+        lock (and, on the durable path, the store mutex)."""
+        folded = 0
+        states = []
+        for entry, ri, s1, s2, n in accepted:
+            if self._fold_locked(entry, ri, s1, s2, n):
+                folded += 1
+                states.append((entry, entry._state))
+        return folded, states
+
+    def _observe_deposits(self, folded: int, states) -> None:
+        """Telemetry for a committed wave, outside every lock: the
+        deposit-round counter and (when enabled) one convergence
+        trajectory point per folded round — the stderr-vs-rounds data
+        the adaptive planner consumes (:mod:`repro.obs.convergence`).
+        States are immutable snapshots, so reading them lock-free is
+        exact."""
+        obs = self.obs
+        if folded:
+            obs.m["deposit_rounds"].inc(folded)
+        if obs.record_convergence:
+            for entry, state in states:
+                err = entry._stderr_of(state)
+                obs.convergence.record(
+                    entry.chash, rounds_done=state[3], n=state[2],
+                    stderr_max=float(err.max()),
+                    stderr_mean=float(err.mean()))
 
     def _fold_locked(self, entry: CacheEntry, round_index: int,
                      s1_delta, s2_delta, n_delta: int) -> bool:

@@ -59,12 +59,24 @@ import numpy as np
 from repro.analysis import streams as _analysis
 from repro.core import rng as rng_lib
 from repro.distributed.fault_tolerance import StepWatchdog, run_with_restarts
+from repro.obs import Observability
+from repro.obs import clock as _clock
 from repro.service.api import (Backpressure, IntegrationRequest,
                                IntegrationResult)
 from repro.service.batcher import InFlightWave, RoundBatcher, WorkItem
 from repro.service.cache import CacheEntry, ResultCache
 from repro.service.canonical import canonical_family, family_hash
 from repro.service.store import DurableStore
+
+
+def _wave_streams(items: Sequence[WorkItem]) -> list[str]:
+    """Stable, deduplicated stream-id prefixes for event payloads."""
+    seen: list[str] = []
+    for it in items:
+        sid = it.chash[:16]
+        if sid not in seen:
+            seen.append(sid)
+    return seen
 
 
 @dataclasses.dataclass
@@ -106,14 +118,18 @@ class IntegrationEngine:
                  watchdog: StepWatchdog | None = None,
                  state_dir: str | None = None,
                  compact_on_start: bool = False,
-                 store_fsync: bool = True):
+                 store_fsync: bool = True,
+                 obs: Observability | None = None):
+        # telemetry first: every layer below receives the same bundle
+        self.obs = obs if obs is not None else Observability.disabled()
         self.seed = int(seed)
         self.key = rng_lib.fold_key(self.seed, 0)
         self.store = None
         if state_dir is not None:
-            self.store = DurableStore(state_dir, fsync=store_fsync)
+            self.store = DurableStore(state_dir, fsync=store_fsync,
+                                      obs=self.obs)
         self.cache = ResultCache(round_samples=round_samples,
-                                 store=self.store)
+                                 store=self.store, obs=self.obs)
         if sample_axes is None and mesh is not None:
             sample_axes = tuple(a for a in mesh.axis_names if a != fn_axis)
         if mesh is not None:
@@ -128,7 +144,7 @@ class IntegrationEngine:
         self.batcher = RoundBatcher(
             self.cache, self.key, use_kernel=use_kernel, mesh=mesh,
             fn_axis=fn_axis, sample_axes=sample_axes or ("data",),
-            chunk=chunk)
+            chunk=chunk, obs=self.obs)
         if self.store is not None:
             # only after every constructor check passed: a rejected
             # configuration must not pin meta into a fresh state dir.
@@ -164,6 +180,7 @@ class IntegrationEngine:
         # step() drivers) instead of re-planning them
         self._inflight: dict[str, int] = {}
         self._rr_cursor = 0
+        self._wave_seq = 0
         self._lock = threading.RLock()
         self._work_cv = threading.Condition(self._lock)
         self._space_cv = threading.Condition(self._lock)
@@ -208,6 +225,7 @@ class IntegrationEngine:
                                     entries=list(peek),
                                     event=threading.Event())
                     self.stats.cache_hits += 1
+                    self.obs.m["cache_requests"].inc(outcome="hit")
                     self._finish(pend, served_from_cache=True)
                 return ticket
 
@@ -226,9 +244,12 @@ class IntegrationEngine:
                             event=threading.Event())
             if self._meets(pend):     # became satisfiable while we waited
                 self.stats.cache_hits += 1
+                self.obs.m["cache_requests"].inc(outcome="hit")
                 self._finish(pend, served_from_cache=True)
                 return ticket
+            self.obs.m["cache_requests"].inc(outcome="miss")
             self._pending[ticket] = pend
+            self.obs.m["pending"].set(len(self._pending))
             self._work_cv.notify_all()
         return ticket
 
@@ -236,6 +257,7 @@ class IntegrationEngine:
         ticket = self._next_ticket
         self._next_ticket += 1
         self.stats.submitted += 1
+        self.obs.m["submitted"].inc()
         return ticket
 
     def poll(self, ticket: int) -> IntegrationResult | None:
@@ -276,7 +298,8 @@ class IntegrationEngine:
         (empty or already satisfiable).
         """
         with self._lock:
-            items = self._plan_wave()
+            with self.obs.span("plan", pending=len(self._pending)):
+                items = self._plan_wave()
             if not items:
                 self._complete_ready()
                 if self._awaiting_other_driver_locked():
@@ -285,6 +308,8 @@ class IntegrationEngine:
                     self._deposit_cv.wait(timeout=1.0)
                     return True
                 return False
+            seq = self._wave_seq
+            self._wave_seq += 1
 
         def wave(attempt: int) -> int:
             if attempt:
@@ -293,18 +318,56 @@ class IntegrationEngine:
             with self.watchdog:
                 return self.batcher.execute(items)
 
+        t0 = _clock.monotonic()
+        stragglers_before = self.watchdog.straggler_count
         try:
-            executed = run_with_restarts(wave, max_restarts=self.max_restarts)
+            executed = run_with_restarts(
+                wave, max_restarts=self.max_restarts,
+                on_restart=self._restart_hook("wave_restart", seq, items))
         except Exception:
             with self._lock:
                 self._retire_items(items)
             raise
+        self._note_stragglers(stragglers_before, seq, items)
+        self.obs.m["waves"].inc()
+        self.obs.m["wave_seconds"].observe(_clock.monotonic() - t0)
         with self._lock:
             self._retire_items(items)
             self.stats.waves += 1
             self.stats.items_executed += executed
             self._complete_ready()
         return True
+
+    # -- telemetry hooks ------------------------------------------------------
+    def _restart_hook(self, kind: str, seq: int,
+                      items: Sequence[WorkItem]):
+        """on_restart callback emitting a structured event carrying the
+        wave sequence number and the affected stream identities."""
+        def on_restart(attempt: int, exc: Exception) -> None:
+            self.obs.m["restarts"].inc()
+            self.obs.event(kind, wave=seq, attempt=attempt,
+                           error=type(exc).__name__,
+                           streams=_wave_streams(items))
+        return on_restart
+
+    def _note_stragglers(self, before: int, seq: int,
+                         items: Sequence[WorkItem]) -> None:
+        """Emit one instant event per watchdog straggler the wave added."""
+        new = self.watchdog.straggler_count - before
+        if new <= 0:
+            return
+        self.obs.m["stragglers"].inc(new)
+        for ev in self.watchdog.events[-new:]:
+            self.obs.event("straggler", wave=seq, step=ev.step,
+                           duration=ev.duration, median=ev.median,
+                           streams=_wave_streams(items))
+
+    def stderr_trajectory(self, chash: str):
+        """Per-stream convergence record: the stderr-vs-rounds trajectory
+        observed at deposit time (requires convergence recording, i.e. an
+        engine built with ``Observability.enabled()``).  ``chash`` is a
+        stream id as reported by ``IntegrationResult.stream_ids``."""
+        return self.obs.convergence.trajectory(chash)
 
     def _awaiting_other_driver_locked(self) -> bool:
         return any(self._inflight.get(e.chash) for p in self._pending.values()
@@ -374,6 +437,7 @@ class IntegrationEngine:
                 for r in range(frontier, frontier + alloc[chash]))
             self._inflight[chash] = (self._inflight.get(chash, 0)
                                      + alloc[chash])
+        self.obs.m["inflight"].set(sum(self._inflight.values()))
         return items
 
     def _retire_items(self, items: Sequence[WorkItem]) -> None:
@@ -389,6 +453,7 @@ class IntegrationEngine:
                 self._inflight[it.chash] = left
             else:
                 self._inflight.pop(it.chash, None)
+        self.obs.m["inflight"].set(sum(self._inflight.values()))
         self._deposit_cv.notify_all()
 
     def _meets(self, pend: _Pending) -> bool:
@@ -405,6 +470,7 @@ class IntegrationEngine:
             self._finish(pend,
                          served_from_cache=not pend.new_rounds_scheduled)
         if done:
+            self.obs.m["pending"].set(len(self._pending))
             self._space_cv.notify_all()
 
     def _finish(self, pend: _Pending, *, served_from_cache: bool) -> None:
@@ -417,11 +483,15 @@ class IntegrationEngine:
             means=np.concatenate(means), stderrs=np.concatenate(errs),
             n_per_family=tuple(e.n for e in pend.entries),
             names=tuple(f.name for f in pend.request.families),
-            served_from_cache=served_from_cache, ticket=pend.ticket)
+            served_from_cache=served_from_cache, ticket=pend.ticket,
+            stream_ids=tuple(e.chash for e in pend.entries))
         self._results[pend.ticket] = pend.result
         while len(self._results) > self.max_retained_results:
             self._results.popitem(last=False)
         self.stats.served += 1
+        self.obs.m["served"].inc()
+        if served_from_cache:
+            self.obs.m["warm_zero_launch"].inc()
         pend.event.set()
 
     # -- background worker ----------------------------------------------------
@@ -513,7 +583,8 @@ class IntegrationEngine:
         the serial loop.  On ``stop()`` the tail wave is deposited
         before the worker exits.
         """
-        inflight: tuple[InFlightWave, list[WorkItem]] | None = None
+        inflight: tuple[InFlightWave, list[WorkItem], float, int] | None = \
+            None
         while True:
             with self._lock:
                 while (not self._pending and inflight is None
@@ -521,7 +592,11 @@ class IntegrationEngine:
                     self._work_cv.wait(timeout=0.5)
                 if self._stop and inflight is None:
                     return
-                items = [] if self._stop else self._plan_wave()
+                if self._stop:
+                    items = []
+                else:
+                    with self.obs.span("plan", pending=len(self._pending)):
+                        items = self._plan_wave()
                 if not items and inflight is None:
                     self._complete_ready()
                     if self._pending:
@@ -529,8 +604,12 @@ class IntegrationEngine:
                         # driver's wave: wait for its deposit
                         self._deposit_cv.wait(timeout=0.5)
                     continue
+                seq = self._wave_seq
+                if items:
+                    self._wave_seq += 1
 
             handle = None
+            t0 = _clock.monotonic()
             if items:
                 def launch(attempt: int, _items=items) -> InFlightWave:
                     if attempt:
@@ -539,9 +618,12 @@ class IntegrationEngine:
                     with self.watchdog:
                         return self.batcher.launch(_items)
 
+                stragglers_before = self.watchdog.straggler_count
                 try:
                     handle = run_with_restarts(
-                        launch, max_restarts=self.max_restarts)
+                        launch, max_restarts=self.max_restarts,
+                        on_restart=self._restart_hook(
+                            "wave_restart", seq, items))
                 except Exception:
                     # the worker is about to die: salvage the sibling
                     # wave first (its rounds are real), and make sure no
@@ -556,6 +638,7 @@ class IntegrationEngine:
                         except Exception:
                             pass   # _deposit_wave retired its items
                     raise
+                self._note_stragglers(stragglers_before, seq, items)
 
             if inflight is not None:
                 try:
@@ -565,10 +648,11 @@ class IntegrationEngine:
                         with self._lock:
                             self._retire_items(items)
                     raise
-            inflight = (handle, items) if handle is not None else None
+            inflight = ((handle, items, t0, seq) if handle is not None
+                        else None)
 
-    def _deposit_wave(self, wave: InFlightWave,
-                      items: list[WorkItem]) -> None:
+    def _deposit_wave(self, wave: InFlightWave, items: list[WorkItem],
+                      t_launch: float | None = None, seq: int = 0) -> None:
         """Host side of one pipelined wave: transfer, group-commit, and
         complete ready requests.  A transient failure relaunches the
         wave (counter addressing makes the recomputation bit-identical;
@@ -583,13 +667,20 @@ class IntegrationEngine:
             with self.watchdog:
                 return self.batcher.deposit(state["wave"])
 
+        stragglers_before = self.watchdog.straggler_count
         try:
-            executed = run_with_restarts(attempt,
-                                         max_restarts=self.max_restarts)
+            executed = run_with_restarts(
+                attempt, max_restarts=self.max_restarts,
+                on_restart=self._restart_hook("deposit_retry", seq, items))
         except Exception:
             with self._lock:
                 self._retire_items(items)
             raise
+        self._note_stragglers(stragglers_before, seq, items)
+        self.obs.m["waves"].inc()
+        if t_launch is not None:
+            self.obs.m["wave_seconds"].observe(
+                _clock.monotonic() - t_launch)
         with self._lock:
             self._retire_items(items)
             self.stats.waves += 1

@@ -53,6 +53,8 @@ import zlib
 
 import numpy as np
 
+from repro.obs import clock as _clock
+
 _MAGIC = b"ZMJ1"
 _HEADER = struct.Struct("<II")          # payload length, crc32(payload)
 _HEADER_BYTES = len(_MAGIC) + _HEADER.size
@@ -158,7 +160,11 @@ class DurableStore:
     SNAPSHOT = "snapshot.npz"
     META = "meta.json"
 
-    def __init__(self, state_dir: str, *, fsync: bool = True):
+    def __init__(self, state_dir: str, *, fsync: bool = True, obs=None):
+        if obs is None:
+            from repro.obs import Observability
+            obs = Observability.disabled()
+        self.obs = obs
         self.state_dir = str(state_dir)
         self.fsync = bool(fsync)
         os.makedirs(self.state_dir, exist_ok=True)
@@ -237,12 +243,18 @@ class DurableStore:
         self._write(self._frame(payload))
 
     def _write(self, record: bytes) -> None:
+        obs = self.obs
         with self.mutex:
-            f = self._journal()
-            f.write(record)
-            f.flush()
-            if self.fsync:
-                os.fsync(f.fileno())
+            t0 = _clock.monotonic()
+            with obs.span("wal_commit", bytes=len(record)):
+                f = self._journal()
+                f.write(record)
+                f.flush()
+                if self.fsync:
+                    os.fsync(f.fileno())
+            obs.m["wal_fsync_seconds"].observe(_clock.monotonic() - t0)
+            obs.m["wal_bytes"].inc(len(record))
+            obs.m["wal_commits"].inc()
 
     def _journal(self):
         if self._journal_f is None or self._journal_f.closed:

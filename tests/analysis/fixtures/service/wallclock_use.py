@@ -1,0 +1,15 @@
+"""Seeded violation: direct wall-clock access inside a ``service/``
+path.  Linted by path only — never imported.  Expected findings:
+OBS001 at the ``time`` import and both ``time.*`` reads (the shimmed
+``clock.monotonic`` call is clean).
+"""
+
+import time                                                 # OBS001
+
+from repro.obs import clock
+
+
+def wave_timer():
+    t0 = time.monotonic()                                   # OBS001
+    ok = clock.monotonic()                                  # clean: the shim
+    return time.perf_counter() - t0, ok                     # OBS001

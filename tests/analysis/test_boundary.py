@@ -51,13 +51,21 @@ class TestSeededFixtures:
         assert set(rules) == {"F64001"}
         assert sorted(v.line for v in rules["F64001"]) == [11, 12, 13], found
 
+    def test_wallclock_use_fires_obs001(self):
+        found = _findings("service/wallclock_use.py")
+        rules = _by_rule(found)
+        assert set(rules) == {"OBS001"}
+        # the time import and both time.* reads; the clock.monotonic()
+        # call on line 14 must NOT fire
+        assert sorted(v.line for v in rules["OBS001"]) == [7, 13, 15], found
+
     def test_ignore_comment_silences(self):
         assert _findings("ignored_ok.py") == []
 
     def test_fixture_dir_scan_finds_all_rules(self):
         found = boundary.check_paths([FIXTURES])
         assert {v.rule for v in found} == {"BND001", "BND002", "PUR001",
-                                           "F64001"}
+                                           "F64001", "OBS001"}
 
 
 class TestRuleScoping:
@@ -93,9 +101,30 @@ class TestRuleScoping:
         found = boundary.check_source(source, "repro/service/x.py")
         assert [v.rule for v in found] == ["BND001"]
 
+    def test_obs001_only_fires_in_service_obs(self):
+        source = "import time\nt = time.monotonic()\n"
+        # standalone launchers and distributed/ are out of scope
+        assert boundary.check_source(source, "repro/launch/driver.py") == []
+        assert boundary.check_source(
+            source, "repro/distributed/ft.py") == []
+        found = boundary.check_source(source, "repro/service/engine.py")
+        assert [v.rule for v in found] == ["OBS001", "OBS001"]
+        found = boundary.check_source(source, "repro/obs/trace.py")
+        assert [v.rule for v in found] == ["OBS001", "OBS001"]
+        # kernels/core: the stricter PUR001 owns the import (OBS001
+        # would be redundant there — they are not in its scope)
+        found = boundary.check_source(source, "repro/kernels/body.py")
+        assert [v.rule for v in found] == ["PUR001"]
+
+    def test_clock_shim_is_allowed_time(self):
+        source = "import time\nt = time.monotonic()\n"
+        assert boundary.check_source(
+            source, "src/repro/obs/clock.py") == []
+
 
 @pytest.mark.parametrize("subtree", [
-    "kernels", "core", "service", "launch", "analysis", "distributed"])
+    "kernels", "core", "service", "obs", "launch", "analysis",
+    "distributed"])
 def test_real_tree_is_clean(subtree):
     path = os.path.join(SRC_REPRO, subtree)
     if not os.path.isdir(path):

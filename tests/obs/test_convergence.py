@@ -1,0 +1,91 @@
+"""Convergence log: bounded stderr-vs-rounds trajectories per stream."""
+
+import pytest
+
+from repro.obs.convergence import ConvergenceLog, TrajectoryPoint
+
+
+def _record_n(log, chash, n, *, start=1):
+    for r in range(start, start + n):
+        log.record(chash, rounds_done=r, n=r * 4096,
+                   stderr_max=1.0 / r ** 0.5, stderr_mean=0.5 / r ** 0.5)
+
+
+class TestBasics:
+    def test_records_every_round_at_stride_one(self):
+        log = ConvergenceLog()
+        _record_n(log, "s", 5)
+        traj = log.trajectory("s")
+        assert [p.rounds_done for p in traj] == [1, 2, 3, 4, 5]
+        assert traj[0] == TrajectoryPoint(1, 4096, 1.0, 0.5)
+
+    def test_unknown_stream_is_empty(self):
+        assert ConvergenceLog().trajectory("nope") == []
+
+    def test_streams_listing(self):
+        log = ConvergenceLog()
+        _record_n(log, "a", 2)
+        _record_n(log, "b", 1)
+        assert sorted(log.streams()) == ["a", "b"]
+
+    def test_min_max_points_enforced(self):
+        with pytest.raises(ValueError):
+            ConvergenceLog(max_points=2)
+
+
+class TestDecimation:
+    def test_overflow_halves_and_doubles_stride(self):
+        log = ConvergenceLog(max_points=8)
+        _record_n(log, "s", 9)
+        assert log.stride("s") == 2
+        pts = log.trajectory("s")
+        # thinned skeleton keeps every other retained point
+        assert [p.rounds_done for p in pts] == [1, 3, 5, 7, 9]
+
+    def test_memory_stays_bounded(self):
+        log = ConvergenceLog(max_points=16)
+        _record_n(log, "s", 10_000)
+        pts = log.trajectory("s")
+        assert len(pts) <= 17          # retained skeleton + frontier
+        assert log.stride("s") >= 512
+
+    def test_frontier_is_always_reported(self):
+        # off-stride latest record must still end the trajectory
+        log = ConvergenceLog(max_points=8)
+        _record_n(log, "s", 10)        # stride now 2; round 10 off-stride
+        pts = log.trajectory("s")
+        assert pts[-1].rounds_done == 10
+        _record_n(log, "s", 1, start=11)
+        assert log.trajectory("s")[-1].rounds_done == 11
+
+    def test_rounds_strictly_increase_after_any_decimation(self):
+        log = ConvergenceLog(max_points=8)
+        _record_n(log, "s", 1000)
+        rounds = [p.rounds_done for p in log.trajectory("s")]
+        assert rounds == sorted(set(rounds))
+        assert rounds[-1] == 1000
+
+    def test_streams_decimate_independently(self):
+        log = ConvergenceLog(max_points=8)
+        _record_n(log, "big", 100)
+        _record_n(log, "small", 3)
+        assert log.stride("big") > 1
+        assert log.stride("small") == 1
+        assert len(log.trajectory("small")) == 3
+
+
+class TestSnapshot:
+    def test_snapshot_shape(self):
+        log = ConvergenceLog()
+        _record_n(log, "s", 2)
+        snap = log.snapshot()
+        assert snap["s"]["stride"] == 1
+        assert snap["s"]["points"] == [[1, 4096, 1.0, 0.5],
+                                       [2, 8192, pytest.approx(1 / 2 ** .5),
+                                        pytest.approx(0.5 / 2 ** .5)]]
+
+    def test_snapshot_is_json_able(self):
+        import json
+        log = ConvergenceLog(max_points=4)
+        _record_n(log, "s", 50)
+        json.dumps(log.snapshot())

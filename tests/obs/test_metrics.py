@@ -1,0 +1,188 @@
+"""Metrics registry: counters/gauges/histograms and both expositions.
+
+The exposition formats are load-bearing (a real Prometheus scrapes
+``/metrics``; ``BENCH_7.json`` embeds ``snapshot()``), so the text
+rendering is asserted verbatim, not just structurally.
+"""
+
+import threading
+
+import pytest
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               service_metrics)
+
+
+class TestCounter:
+    def test_inc_and_value(self):
+        c = Counter("x_total", "help")
+        c.inc()
+        c.inc(2.5)
+        assert c.value() == 3.5
+
+    def test_counters_only_go_up(self):
+        c = Counter("x_total", "")
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_labelled_counter(self):
+        c = Counter("x_total", "", labelnames=("outcome",))
+        c.inc(outcome="hit")
+        c.inc(outcome="hit")
+        c.inc(outcome="miss")
+        assert c.value(outcome="hit") == 2
+        assert c.value(outcome="miss") == 1
+
+    def test_missing_or_extra_labels_raise(self):
+        c = Counter("x_total", "", labelnames=("outcome",))
+        with pytest.raises(ValueError):
+            c.inc()
+        with pytest.raises(ValueError):
+            c.inc(outcome="hit", extra="nope")
+
+    def test_concurrent_increments_are_exact(self):
+        # the CI gate compares counters *exactly* against engine
+        # observables, so lost increments are a real failure mode
+        c = Counter("x_total", "")
+        n, per = 8, 1000
+
+        def work():
+            for _ in range(per):
+                c.inc()
+
+        threads = [threading.Thread(target=work) for _ in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.value() == n * per
+
+
+class TestGauge:
+    def test_set_inc_dec(self):
+        g = Gauge("depth", "")
+        g.set(5)
+        g.inc(2)
+        g.dec(4)
+        assert g.value() == 3
+
+    def test_gauge_goes_negative(self):
+        g = Gauge("depth", "")
+        g.dec(2)
+        assert g.value() == -2
+
+
+class TestHistogram:
+    def test_observe_count_sum(self):
+        h = Histogram("lat", "", buckets=(0.1, 1.0))
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(5.0)
+        assert h.count() == 3
+        assert h.sum() == pytest.approx(5.55)
+
+    def test_cumulative_bucket_semantics(self):
+        h = Histogram("lat", "", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 5.0):
+            h.observe(v)
+        samples = {(name, labels.get("le")): value
+                   for name, labels, value in h._samples()
+                   if name == "lat_bucket"}
+        assert samples[("lat_bucket", "0.1")] == 1
+        assert samples[("lat_bucket", "1")] == 2       # cumulative
+        assert samples[("lat_bucket", "+Inf")] == 3
+
+    def test_labelled_histogram(self):
+        h = Histogram("lat", "", labelnames=("stage",), buckets=(1.0,))
+        h.observe(0.5, stage="plan")
+        h.observe(2.0, stage="deposit")
+        assert h.count(stage="plan") == 1
+        assert h.count(stage="deposit") == 1
+        assert h.count(stage="launch") == 0
+
+
+class TestRegistry:
+    def test_getters_are_idempotent(self):
+        reg = MetricsRegistry()
+        a = reg.counter("x_total", "h")
+        b = reg.counter("x_total", "h")
+        assert a is b
+
+    def test_kind_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x_total")
+        with pytest.raises(TypeError):
+            reg.gauge("x_total")
+        with pytest.raises(TypeError):
+            reg.histogram("x_total")
+
+    def test_label_conflict_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x_total", labelnames=("a",))
+        with pytest.raises(ValueError):
+            reg.counter("x_total", labelnames=("b",))
+
+    def test_prometheus_text_exposition_verbatim(self):
+        reg = MetricsRegistry()
+        c = reg.counter("zmc_x_total", "things", labelnames=("kind",))
+        c.inc(3, kind="a")
+        g = reg.gauge("zmc_depth", "how deep")
+        g.set(2)
+        text = reg.render_prometheus()
+        assert text == (
+            "# HELP zmc_depth how deep\n"
+            "# TYPE zmc_depth gauge\n"
+            "zmc_depth 2\n"
+            "# HELP zmc_x_total things\n"
+            "# TYPE zmc_x_total counter\n"
+            'zmc_x_total{kind="a"} 3\n')
+
+    def test_prometheus_histogram_exposition(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("zmc_lat", "", buckets=(0.5, 1.0))
+        h.observe(0.25)
+        h.observe(0.75)
+        lines = reg.render_prometheus().splitlines()
+        assert 'zmc_lat_bucket{le="0.5"} 1' in lines
+        assert 'zmc_lat_bucket{le="1"} 2' in lines
+        assert 'zmc_lat_bucket{le="+Inf"} 2' in lines
+        assert "zmc_lat_sum 1" in lines
+        assert "zmc_lat_count 2" in lines
+
+    def test_snapshot_shapes(self):
+        reg = MetricsRegistry()
+        reg.counter("plain_total").inc(2)
+        reg.counter("split_total", labelnames=("k",)).inc(1, k="x")
+        reg.histogram("lat", buckets=(1.0,)).observe(0.5)
+        snap = reg.snapshot()
+        assert snap["plain_total"] == {"type": "counter", "value": 2.0}
+        assert snap["split_total"]["value"] == {"x": 1.0}
+        assert snap["lat"]["value"]["count"] == 1
+
+
+class TestServiceMetrics:
+    def test_canonical_names_all_declared(self):
+        reg = MetricsRegistry()
+        handles = service_metrics(reg)
+        names = {m.name for m in handles.values()}
+        for expected in ("zmc_kernel_launches_total",
+                         "zmc_fallback_rounds_total",
+                         "zmc_cache_requests_total",
+                         "zmc_warm_zero_launch_total",
+                         "zmc_requests_submitted_total",
+                         "zmc_requests_served_total",
+                         "zmc_waves_total", "zmc_wave_restarts_total",
+                         "zmc_straggler_events_total",
+                         "zmc_deposit_rounds_total",
+                         "zmc_inflight_rounds", "zmc_pending_requests",
+                         "zmc_wave_seconds", "zmc_stage_seconds",
+                         "zmc_wave_rounds", "zmc_bucket_rounds_total",
+                         "zmc_wal_bytes_total", "zmc_wal_fsync_seconds",
+                         "zmc_wal_commits_total"):
+            assert expected in names, expected
+
+    def test_redeclaration_returns_same_handles(self):
+        reg = MetricsRegistry()
+        a = service_metrics(reg)
+        b = service_metrics(reg)
+        assert all(a[k] is b[k] for k in a)

@@ -1,0 +1,192 @@
+"""Telemetry through the engine: traces cover the pipeline, metrics agree
+with engine observables, failure paths emit attributable events, and
+every completed request exposes a stderr-vs-rounds trajectory.
+
+These are the service-level counterparts of ``tests/obs``: the obs tests
+exercise the primitives in isolation; here the assertion is that the
+*wiring* through plan/launch/deposit is complete and honest.
+"""
+
+import pytest
+
+from repro.core import gaussian_family, harmonic_family
+from repro.distributed.fault_tolerance import StepWatchdog
+from repro.kernels import template
+from repro.obs import Observability
+from repro.obs.trace import STAGES
+from repro.service import IntegrationClient
+
+R = 4096
+
+
+@pytest.fixture
+def events():
+    return []
+
+
+@pytest.fixture
+def obs(events):
+    """A live Observability bundle whose trace feeds a plain list."""
+    o = Observability.enabled(sinks=(events.append,))
+    yield o
+    o.close()
+
+
+def _instants(events, name):
+    return [e for e in events if e.get("ph") == "i" and e["name"] == name]
+
+
+class TestTraceCoverage:
+    def test_sync_wave_covers_all_six_stages(self, make_engine, obs, events,
+                                             tmp_path):
+        engine = make_engine(state_dir=str(tmp_path), obs=obs)
+        IntegrationClient(engine).integrate(
+            [harmonic_family(3, 2), gaussian_family(2, 2)], n_samples=2 * R)
+        spans = {e["name"] for e in events if e.get("ph") == "X"}
+        assert spans.issuperset(STAGES)
+
+    def test_wal_commit_absent_without_durable_store(self, make_engine, obs,
+                                                     events):
+        engine = make_engine(obs=obs)
+        IntegrationClient(engine).integrate([harmonic_family(3, 2)],
+                                            n_samples=R)
+        spans = {e["name"] for e in events if e.get("ph") == "X"}
+        assert "wal_commit" not in spans
+        assert spans.issuperset(set(STAGES) - {"wal_commit"})
+
+
+class TestMetricAgreement:
+    def test_counters_match_engine_observables(self, make_engine, obs):
+        template.reset_launch_count()
+        engine = make_engine(obs=obs)
+        client = IntegrationClient(engine)
+        client.integrate([harmonic_family(3, 2)], n_samples=3 * R)
+        client.integrate([gaussian_family(2, 2), harmonic_family(2, 2)],
+                         n_samples=2 * R)
+        m = obs.m
+        assert m["launches"].value() == template.launch_count()
+        assert m["fallback_rounds"].value() == engine.batcher.fallback_rounds
+        assert m["waves"].value() == engine.stats.waves
+        assert m["served"].value() == engine.stats.served == 2
+        assert m["submitted"].value() == engine.stats.submitted == 2
+
+    def test_warm_replay_counts_cache_hit_and_zero_launch(self, make_engine,
+                                                          obs):
+        engine = make_engine(obs=obs)
+        client = IntegrationClient(engine)
+        fam = [harmonic_family(3, 2)]
+        client.integrate(fam, n_samples=2 * R)
+        waves_before = engine.stats.waves
+        client.integrate(fam, n_samples=2 * R)       # identical → cache
+        assert engine.stats.waves == waves_before
+        assert obs.m["cache_requests"].value(outcome="hit") >= 1
+        assert obs.m["warm_zero_launch"].value() == 1
+        assert obs.m["served"].value() == 2
+
+    def test_gauges_drain_to_zero_at_quiescence(self, make_engine, obs):
+        engine = make_engine(obs=obs)
+        IntegrationClient(engine).integrate([harmonic_family(3, 2)],
+                                            n_samples=2 * R)
+        assert obs.m["pending"].value() == 0
+        assert obs.m["inflight"].value() == 0
+
+
+class TestConvergenceAccounting:
+    def test_every_result_stream_has_a_trajectory(self, make_engine, obs):
+        engine = make_engine(obs=obs)
+        res = IntegrationClient(engine).integrate(
+            [harmonic_family(3, 2), gaussian_family(2, 2)], n_samples=4 * R)
+        assert len(res.stream_ids) == 2
+        for sid in res.stream_ids:
+            traj = engine.stderr_trajectory(sid)
+            assert traj, sid
+            rounds = [p.rounds_done for p in traj]
+            assert rounds == sorted(rounds)
+            assert traj[-1].rounds_done == 4        # full budget deposited
+            assert traj[-1].stderr_max > 0
+
+    def test_stderr_decreases_with_rounds(self, make_engine, obs):
+        engine = make_engine(obs=obs)
+        res = IntegrationClient(engine).integrate([harmonic_family(3, 2)],
+                                                  n_samples=8 * R)
+        (sid,) = res.stream_ids
+        traj = engine.stderr_trajectory(sid)
+        assert len(traj) >= 2
+        assert traj[-1].stderr_max < traj[0].stderr_max
+
+    def test_disabled_obs_keeps_api_shape(self, make_engine):
+        engine = make_engine()                       # Observability.disabled()
+        res = IntegrationClient(engine).integrate([harmonic_family(3, 2)],
+                                                  n_samples=R)
+        assert len(res.stream_ids) == 1
+        assert engine.stderr_trajectory(res.stream_ids[0]) == []
+
+
+class TestFailurePathEvents:
+    def test_torn_deposit_emits_restart_event_with_identity(
+            self, make_engine, obs, events, tmp_path):
+        engine = make_engine(state_dir=str(tmp_path), max_rounds_per_wave=8,
+                             obs=obs)
+        store = engine.store
+        orig = store.append_deposits
+        fails = {"left": 1}
+
+        def flaky(payloads):
+            payloads = list(payloads)
+            if fails["left"]:
+                fails["left"] -= 1
+                orig(payloads[:1])
+                raise OSError("injected torn group commit")
+            return orig(payloads)
+
+        store.append_deposits = flaky
+        res = IntegrationClient(engine).integrate([harmonic_family(4, 3)],
+                                                  n_samples=3 * R)
+        assert engine.stats.restarts == 1
+        (ev,) = _instants(events, "wave_restart")
+        assert ev["args"]["error"] == "OSError"
+        assert ev["args"]["attempt"] == 0
+        # the event names the streams the replayed wave was computing
+        assert res.stream_ids[0][:16] in ev["args"]["streams"]
+        assert obs.m["restarts"].value() == 1
+
+    def test_pipelined_deposit_retry_event(self, make_engine, obs, events,
+                                           tmp_path):
+        engine = make_engine(state_dir=str(tmp_path), max_rounds_per_wave=8,
+                             obs=obs)
+        store = engine.store
+        orig = store.append_deposits
+        fails = {"left": 1}
+
+        def flaky(payloads):
+            if fails["left"]:
+                fails["left"] -= 1
+                raise OSError("injected commit failure")
+            return orig(payloads)
+
+        store.append_deposits = flaky
+        engine.start()
+        res = IntegrationClient(engine).integrate([harmonic_family(4, 3)],
+                                                  n_samples=3 * R)
+        engine.stop()
+        retries = _instants(events, "deposit_retry")
+        assert retries, [e["name"] for e in events if e.get("ph") == "i"]
+        assert retries[0]["args"]["error"] == "OSError"
+        assert res.stream_ids[0][:16] in retries[0]["args"]["streams"]
+        assert obs.m["restarts"].value() >= 1
+
+    def test_straggler_event_carries_wave_and_stream(self, make_engine, obs,
+                                                     events):
+        # a watchdog pre-seeded with an instant history makes the very
+        # first (real, nonzero-duration) wave a straggler
+        dog = StepWatchdog(threshold=0.0, warmup=1)
+        dog.durations.append(0.0)
+        engine = make_engine(obs=obs, watchdog=dog)
+        res = IntegrationClient(engine).integrate([harmonic_family(3, 2)],
+                                                  n_samples=R)
+        assert dog.straggler_count >= 1
+        evs = _instants(events, "straggler")
+        assert len(evs) == dog.straggler_count
+        assert evs[0]["args"]["duration"] > 0
+        assert res.stream_ids[0][:16] in evs[0]["args"]["streams"]
+        assert obs.m["stragglers"].value() == dog.straggler_count
