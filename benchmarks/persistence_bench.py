@@ -24,7 +24,11 @@ The workload (``demo_workload``) includes infinite-domain Gaussian
 requests, so the digest-equality assertions also pin the compactified
 fused-kernel path across process death: an integral over R^d served
 before the SIGKILL replays and tops up bit-identically, exactly like a
-finite-box one.
+finite-box one.  It also includes parameter-sweep requests (two
+overlapping 2-D grids): sweep cache streams are keyed per canonical
+grid slice, so the same warm-replay / mid-kill-resume assertions prove
+that a SIGKILLed sweep restarts from its persisted slice streams with
+zero recomputation and bit-identical per-point results.
 
 After each kill — before any restart can repair what it reads — the
 parent runs the Layer-3 determinism auditor (``repro.analysis.streams``)
@@ -69,7 +73,7 @@ def child_main(args) -> int:
         max_rounds_per_wave=args.max_rounds_per_wave,
         state_dir=args.state_dir, compact_on_start=args.compact_on_start)
     reqs = demo_workload(args.requests, n_fn=args.n_fn,
-                         n_samples=args.samples)
+                         n_samples=args.samples, sweeps=args.sweeps)
 
     template.reset_launch_count()
     t0 = time.time()
@@ -155,7 +159,8 @@ def _run_child(state_dir: str, cfg, *, waves: int = -1, linger: bool = False,
            "--samples", str(cfg.samples),
            "--round-samples", str(cfg.round_samples),
            "--max-rounds-per-wave", str(cfg.max_rounds_per_wave),
-           "--seed", str(cfg.seed), "--waves", str(waves)]
+           "--seed", str(cfg.seed), "--waves", str(waves),
+           "--sweeps", str(cfg.sweeps)]
     if linger:
         cmd.append("--linger")
     if compact_on_start:
@@ -258,6 +263,10 @@ def main() -> int:
                     help="1 -> one round per stream per wave, so a kill "
                          "after wave k leaves streams k rounds deep")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sweeps", type=int, default=2,
+                    help="append N overlapping parameter-sweep requests "
+                         "to the workload (sweep slice streams must "
+                         "survive SIGKILL like any other)")
     ap.add_argument("--waves", type=int, default=-1,
                     help="child: serve N waves then await SIGKILL (-1: all)")
     ap.add_argument("--linger", action="store_true",

@@ -42,7 +42,14 @@ doubles as the CI regression gate via ``--smoke``):
   record a stderr-vs-rounds trajectory for every stream served.  The
   per-(dim, sampler)-bucket analytic roofline terms
   (:func:`benchmarks.roofline.mc_kernel_terms`) are emitted alongside
-  the measured stage timings.
+  the measured stage timings;
+
+* **parameter sweeps** (``BENCH_8.json``) — a 64-point parameter-grid
+  sweep must run as one *swept* family (launches per wave <= the single
+  (dim, sampler) bucket, not 64 per-point launches) with per-point
+  means bit-identical to 64 separate requests, a warm resubmit costing
+  zero launches, and an overlapping sweep deduping at the sub-grid
+  slice level (only new canonical slices are computed).
 
 Wall-clock numbers are reported but only meaningful on a real
 accelerator; on CPU the Pallas kernels run interpreted.  Launch counts
@@ -367,12 +374,149 @@ def _telemetry_phase(*, n_requests: int, n_fn: int, n_samples: int,
     return payload
 
 
+def _sweep_phase(*, round_samples: int, rounds: int, seed: int,
+                 json_out: str | None):
+    """Parameter-grid sweep vs per-point requests (the BENCH_8 gate).
+
+    A 64-point harmonic ``a x b`` sweep in dim 3 must be served as ONE
+    swept family: launches bounded by (dim, sampler) buckets per wave —
+    one here — not by grid points, with per-point means *bit-identical*
+    to 64 separate single-function requests (same global function ids
+    on a fresh engine, and counters address by function id, so identity
+    is structural).  A warm resubmit costs zero launches, and a second
+    sweep that extends the slowest axis dedupes at the sub-grid level:
+    it pays only for the new canonical slices and returns bit-identical
+    means on the shared prefix.
+    """
+    import json
+
+    from repro.core import harmonic_family
+    from repro.obs import Observability
+    from repro.service import SweepRequest
+    from repro.service.api import IntegrationRequest
+
+    dim = 3
+    budget = rounds * round_samples
+    a = np.linspace(0.5, 2.0, 8).astype(np.float32)
+    b = np.linspace(-1.0, 1.0, 8).astype(np.float32)
+    n_points = a.size * b.size          # 64 = one canonical slice
+
+    obs = Observability.enabled()
+    engine = IntegrationEngine(seed=seed, round_samples=round_samples,
+                               max_rounds_per_wave=rounds, obs=obs)
+    template.reset_launch_count()
+    t0 = time.time()
+    ticket = engine.submit(SweepRequest.make(
+        harmonic_family(1, dim), {"a": a, "b": b}, n_samples=budget))
+    while engine.step():
+        pass
+    sweep_res = engine.poll(ticket)
+    sweep_dt = time.time() - t0
+    sweep_launches = template.launch_count()
+    sweep_waves = max(engine.stats.waves, 1)
+    assert sweep_res is not None and sweep_res.complete
+    assert sweep_res.n_points == n_points and not np.isnan(
+        sweep_res.means).any()
+    assert sweep_launches <= sweep_waves, (
+        f"a {n_points}-point sweep of one (dim, sampler) bucket took "
+        f"{sweep_launches} launches over {sweep_waves} wave(s) "
+        f"(gate: <= 1 per bucket per wave)")
+    assert sweep_launches < n_points, (sweep_launches, n_points)
+
+    # the per-point path: 64 sequential single-function requests on a
+    # fresh engine with the same seed draw the same global function ids
+    # 0..63 -> the estimates must agree bit for bit, not statistically
+    per_engine = IntegrationEngine(seed=seed, round_samples=round_samples,
+                                   max_rounds_per_wave=rounds)
+    template.reset_launch_count()
+    t0 = time.time()
+    per_means = []
+    for ai in a:                        # sorted axes: "a" slowest
+        for bi in b:
+            fam = harmonic_family(1, dim,
+                                  a=np.asarray([ai], np.float32),
+                                  b=np.asarray([bi], np.float32))
+            tk = per_engine.submit(
+                IntegrationRequest.make([fam], n_samples=budget))
+            while per_engine.step():
+                pass
+            per_means.append(per_engine.poll(tk).means[0])
+    per_dt = time.time() - t0
+    per_launches = template.launch_count()
+    assert per_launches >= n_points, (per_launches, n_points)
+    np.testing.assert_array_equal(
+        np.asarray(per_means, dtype=sweep_res.means.dtype), sweep_res.means,
+        err_msg="fused sweep is not bit-identical to the per-point path")
+
+    # warm resubmit of the identical sweep: pure cache hit, zero launches
+    template.reset_launch_count()
+    warm_ticket = engine.submit(SweepRequest.make(
+        harmonic_family(1, dim), {"a": a, "b": b}, n_samples=budget))
+    while engine.step():
+        pass
+    warm_res = engine.poll(warm_ticket)
+    warm_launches = template.launch_count()
+    assert warm_launches == 0 and warm_res.served_from_cache
+    np.testing.assert_array_equal(warm_res.means, sweep_res.means)
+
+    # overlapping sweep: extend the slowest axis -> the first 64 points
+    # reproduce sweep A's canonical slice exactly, so only the new
+    # slice(s) are computed and the shared prefix stays bit-identical
+    a2 = np.concatenate([a, np.linspace(2.5, 4.0, 8, dtype=np.float32)])
+    template.reset_launch_count()
+    big_ticket = engine.submit(SweepRequest.make(
+        harmonic_family(1, dim), {"a": a2, "b": b}, n_samples=budget))
+    while engine.step():
+        pass
+    big_res = engine.poll(big_ticket)
+    big_launches = template.launch_count()
+    big_waves = max(engine.stats.waves - sweep_waves, 1)
+    assert big_res.n_points == 2 * n_points
+    assert big_launches <= big_waves, (
+        f"overlap sweep recomputed shared slices: {big_launches} launches "
+        f"over {big_waves} wave(s) for one new slice")
+    np.testing.assert_array_equal(
+        big_res.means[:n_points], sweep_res.means,
+        err_msg="overlapping sweep broke bit-identity on the shared slice")
+
+    slices = obs.metrics.snapshot()["zmc_sweep_slices_total"]["value"]
+    shared = int(slices.get("shared", 0))
+    assert shared >= 1, f"sub-grid dedupe never hit: {slices}"
+
+    print(f"sweep: {n_points} points -> {sweep_launches} launches in "
+          f"{sweep_waves} wave(s) vs {per_launches} per-point "
+          f"({per_launches / max(sweep_launches, 1):.0f}x fewer, "
+          f"bit-identical); warm {warm_launches} launches; overlap "
+          f"{2 * n_points} points -> {big_launches} launches "
+          f"(slices: {slices})")
+    payload = {
+        "bench": "service_sweep", "dim": dim, "grid": [len(a2), len(b)],
+        "points": n_points, "rounds": rounds,
+        "round_samples": round_samples,
+        "sweep": {"launches": int(sweep_launches), "waves": int(sweep_waves),
+                  "seconds": round(sweep_dt, 3)},
+        "per_point": {"launches": int(per_launches),
+                      "seconds": round(per_dt, 3)},
+        "warm_launches": int(warm_launches),
+        "overlap": {"points": int(big_res.n_points),
+                    "launches": int(big_launches),
+                    "slices": {k: int(v) for k, v in slices.items()}},
+        "bit_identical": True,
+    }
+    if json_out:
+        with open(json_out, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    return payload
+
+
 def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
         seed: int = 0, json_out: str | None = None,
         refine_rounds: int = 4, infinite_json_out: str | None = None,
         telemetry_json_out: str | None = None,
         trace_out: str | None = None,
-        metrics_out: str | None = None) -> int:
+        metrics_out: str | None = None,
+        sweep_json_out: str | None = None) -> int:
     reqs = demo_workload(n_requests, n_fn=n_fn, n_samples=n_samples)
     n_fams = sum(len(r.families) for r in reqs)
     dims = sorted({f.dim for r in reqs for f in r.families})
@@ -423,6 +567,10 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
         rounds=refine_rounds, seed=seed, json_out=telemetry_json_out,
         trace_out=trace_out, metrics_out=metrics_out)
 
+    # parameter-grid sweeps: fused vs per-point, dedupe (BENCH_8 gate)
+    sweep = _sweep_phase(round_samples=round_samples, rounds=refine_rounds,
+                         seed=seed, json_out=sweep_json_out)
+
     rows = []
     print("path,requests,launches,seconds,req_per_s")
     for name, res, launches, dt in [
@@ -448,6 +596,7 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
                        "refinement_wave": refinement,
                        "infinite_domains": infinite,
                        "telemetry": telemetry,
+                       "sweep": sweep,
                        "items_deduped": engine.stats.items_deduped,
                        "cache": engine.cache.stats()},
                       f, indent=2, sort_keys=True)
@@ -480,6 +629,9 @@ def main() -> int:
     ap.add_argument("--metrics-out", default=None,
                     help="write the telemetry phase's metrics+convergence "
                          "snapshot here")
+    ap.add_argument("--sweep-json-out", default=None,
+                    help="write the parameter-grid sweep phase as its own "
+                         "JSON artifact (BENCH_8.json)")
     args = ap.parse_args()
     if args.smoke:
         return run(max(64, args.requests), n_fn=4, n_samples=8192,
@@ -487,13 +639,15 @@ def main() -> int:
                    refine_rounds=args.refine_rounds,
                    infinite_json_out=args.infinite_json_out,
                    telemetry_json_out=args.telemetry_json_out,
-                   trace_out=args.trace_out, metrics_out=args.metrics_out)
+                   trace_out=args.trace_out, metrics_out=args.metrics_out,
+                   sweep_json_out=args.sweep_json_out)
     return run(args.requests, n_fn=args.n_fn, n_samples=args.samples,
                round_samples=args.round_samples, json_out=args.json_out,
                refine_rounds=args.refine_rounds,
                infinite_json_out=args.infinite_json_out,
                telemetry_json_out=args.telemetry_json_out,
-               trace_out=args.trace_out, metrics_out=args.metrics_out)
+               trace_out=args.trace_out, metrics_out=args.metrics_out,
+               sweep_json_out=args.sweep_json_out)
 
 
 if __name__ == "__main__":

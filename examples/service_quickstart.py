@@ -7,7 +7,7 @@ drives the request-serving layer (``repro.service``): clients submit
 *requests* — families plus a precision ask — and the engine batches
 pending work across clients into fused kernel launches, dedupes
 equivalent integrals via content hashing, and serves repeats straight
-from its stderr-aware cache.  Five things to notice below:
+from its stderr-aware cache.  Six things to notice below:
 
 1. two clients asking for the same integral share one evaluation;
 2. re-asking to the *same or looser* precision costs zero launches;
@@ -26,7 +26,13 @@ from its stderr-aware cache.  Five things to notice below:
    to a Perfetto-loadable file, ``zmc_*`` metrics count what the
    engine did, and each stream records its stderr-vs-rounds
    trajectory.  ``serve_integrals --trace-out/--metrics-port`` exposes
-   the same thing on the CLI.
+   the same thing on the CLI;
+6. a parameter *sweep* is one request, not one request per point: the
+   engine canonicalizes the grid into fixed-size slices of swept
+   families, runs the whole scan fused (launches scale with waves and
+   (dim, sampler) buckets, not grid points), and keys cache streams
+   per grid-slice — so overlapping sweeps dedupe below the request
+   level and a re-ask at a bigger budget tops the slices up.
 
 Engine knobs this example leaves at their defaults:
 ``max_rounds_per_wave`` (the R of each fused multi-round launch),
@@ -160,3 +166,37 @@ with tempfile.TemporaryDirectory(prefix="zmc-obs-") as tmp:
     print("per-stage wall time: " +
           ", ".join(f"{k} {v * 1e3:.1f}ms" for k, v in totals.items()))
 
+
+# -- parameter sweeps: scan a template over a grid in one request ----------
+# A Boltzmann-style scan: one integrand family, evaluated over a 2-D
+# (amplitude, offset) parameter grid.  client.sweep() submits ONE
+# request; the engine slices the grid into swept families (64 points
+# each by default) and serves them on the fused kernel path — the
+# per-point parameters substitute *inside* the kernel, so a 64-point
+# grid costs one launch per (dim, sampler) bucket per wave, not 64.
+eng = IntegrationEngine(seed=3, round_samples=8192)
+sweeper = IntegrationClient(eng)
+a_axis = np.linspace(0.5, 2.0, 8)      # amplitude scan
+b_axis = np.linspace(-1.0, 1.0, 8)     # offset scan
+template.reset_launch_count()
+sweep = sweeper.sweep(harmonic_family(1, 3), {"a": a_axis, "b": b_axis},
+                      n_samples=16384)
+surface = sweep.means.reshape(sweep.grid_shape)  # indexed by (a_i, b_j)
+print(f"sweep: {sweep.n_points} grid points over axes {sweep.axis_names} "
+      f"in {template.launch_count()} fused launch(es); "
+      f"surface shape {surface.shape}")
+
+# warm-restart top-up: the same grid at a bigger budget resumes every
+# slice's counter stream (only the delta rounds run), and a verbatim
+# re-ask is a pure cache hit — same STR semantics as any other stream.
+template.reset_launch_count()
+finer = sweeper.sweep(harmonic_family(1, 3), {"a": a_axis, "b": b_axis},
+                      n_samples=65536)
+delta_launches = template.launch_count()
+again = sweeper.sweep(harmonic_family(1, 3), {"a": a_axis, "b": b_axis},
+                      n_samples=65536)
+assert again.served_from_cache
+np.testing.assert_array_equal(again.means, finer.means)
+print(f"sweep top-up: {delta_launches} launch(es) for the extra rounds, "
+      f"re-ask free; max stderr {sweep.stderrs.max():.2e} -> "
+      f"{finer.stderrs.max():.2e}")

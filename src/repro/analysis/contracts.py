@@ -16,15 +16,19 @@ launch time:
 * a form advertising ``supports_compactified=True`` really does compose
   with ``template.compactified_body`` — otherwise infinite-domain
   families fall back (or worse, miscompute the Jacobian) at launch time
-  (KCT004).
+  (KCT004);
+* a form declaring ``sweep_cols`` really does compose with
+  ``template.swept_body`` — the declared column map must substitute
+  cleanly into the packed row (and through the compactified wrapper),
+  or parameter sweeps would fail at first launch (KCT005).
 
-This module proves all four **abstractly**: each registered
+This module proves all five **abstractly**: each registered
 :class:`~repro.kernels.registry.KernelForm` body is traced with
 ``jax.make_jaxpr`` on zero-filled probe operands
 (:func:`repro.kernels.template.probe_operands`) for every capability
-combination it advertises (sampler × finite/compactified, over a probe
-dim sweep).  No kernel is launched and no device is needed — this runs
-in CI on CPU in milliseconds.
+combination it advertises (sampler × finite/compactified ×
+plain/swept, over a probe dim sweep).  No kernel is launched and no
+device is needed — this runs in CI on CPU in milliseconds.
 
 :func:`validate_form_registration` packages the same predicates for
 eager use at registration time (``registry.register_form``), so a
@@ -114,49 +118,71 @@ def _probe_dims(form, sampler: str) -> list[int]:
     return dims
 
 
+def _full_sweep(form, dim: int) -> tuple[str, ...]:
+    """The widest sweep the form advertises at ``dim`` — every name in
+    its ``sweep_cols`` map, sorted (the order ``swept_over`` produces).
+    Probing the full set subsumes every subset: subsets substitute fewer
+    columns through the identical wrapper machinery."""
+    if form.sweep_cols is None:
+        return ()
+    return tuple(sorted(form.sweep_cols(dim)))
+
+
 def _combos(form):
     """Every advertised capability combination: (sampler, compactified,
-    dim) triples the form claims to support."""
+    swept, dim) tuples the form claims to support.  ``swept`` probes the
+    form's full ``sweep_cols`` name set (or stays ``()``)."""
     out = []
     for sampler in form.samplers:
         for compact in (False, True):
             if compact and not form.supports_compactified:
                 continue
             for dim in _probe_dims(form, sampler):
-                if form.supports(dim=dim, sampler=sampler,
-                                 compactified=compact):
-                    out.append((sampler, compact, dim))
-    return out
+                for swept in ({(), _full_sweep(form, dim)} if
+                              form.supports_swept else {()}):
+                    if form.supports(dim=dim, sampler=sampler,
+                                     compactified=compact, sweep=swept):
+                        out.append((sampler, compact, swept, dim))
+    return sorted(out)
 
 
-def _body_for(form, compact: bool, dim: int):
+def _body_for(form, compact: bool, dim: int, swept: tuple[str, ...] = ()):
     """(body, n_cols) the launch path would use for this combo — the
-    compactified wrapper grows 2*dim transform columns after the form's
-    own packed width (mirrors ``template.body_and_packed``)."""
-    base_cols = form.n_cols(dim)
-    if not compact:
-        return form.body, base_cols
-    return (template.compactified_body(form.body, base_cols),
-            base_cols + 2 * dim)
+    sweep wrapper grows one table column per swept parameter column and
+    the compactified wrapper 2*dim transform columns after that, exactly
+    mirroring ``template.body_and_packed``'s composition and layout."""
+    body, n_cols = form.body, form.n_cols(dim)
+    if swept:
+        cols = form.sweep_cols(dim)
+        col_map = tuple(int(c) for name in swept for c in cols[name])
+        body = template.swept_body(body, n_cols, col_map)
+        n_cols += len(col_map)
+    if compact:
+        body = template.compactified_body(body, n_cols)
+        n_cols += 2 * dim
+    return body, n_cols
 
 
 def check_form(form) -> list[Violation]:
-    """KCT001/KCT002/KCT004 for one form, over every advertised combo."""
+    """KCT001/KCT002/KCT004/KCT005 for one form, over every advertised
+    combo."""
     found: list[Violation] = []
     path, line = _body_location(form.body)
     seen: set[tuple] = set()
-    for sampler, compact, dim in _combos(form):
-        combo_key = (compact, dim)   # bodies are sampler-independent
+    for sampler, compact, swept, dim in _combos(form):
+        combo_key = (compact, swept, dim)  # bodies are sampler-independent
         if combo_key in seen:
             continue
         seen.add(combo_key)
-        body, n_cols = _body_for(form, compact, dim)
-        label = f"{form.name}[dim={dim}" + \
-                (", compactified]" if compact else "]")
+        body, n_cols = _body_for(form, compact, dim, swept)
+        label = (f"{form.name}[dim={dim}"
+                 + (", compactified" if compact else "")
+                 + (f", swept={','.join(swept)}" if swept else "") + "]")
         try:
             out_avals, closed = _trace_body(body, dim, n_cols)
         except Exception as exc:  # noqa: BLE001 - any trace failure is the finding
-            rule = "KCT004" if compact else "KCT001"
+            rule = ("KCT005" if swept else
+                    "KCT004" if compact else "KCT001")
             found.append(Violation(
                 rule=rule, path=path, line=line,
                 message=f"{label} fails to trace: {exc}"))
@@ -185,7 +211,8 @@ def check_form(form) -> list[Violation]:
         shapes = [getattr(a, "shape", None) for a in out_avals]
         if shapes != [(template.S_ROWS, template.S_LANES)]:
             found.append(Violation(
-                rule="KCT002" if not compact else "KCT004",
+                rule=("KCT005" if swept else
+                      "KCT004" if compact else "KCT002"),
                 path=path, line=line,
                 message=f"{label} returns avals shaped {shapes}, expected "
                         f"one ({template.S_ROWS}, {template.S_LANES}) tile"))

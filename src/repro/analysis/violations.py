@@ -38,6 +38,8 @@ RULES: dict[str, str] = {
                "identical output avals (the lax.switch precondition)"),
     "KCT004": ("forms advertising supports_compactified=True must trace "
                "through template.compactified_body"),
+    "KCT005": ("forms advertising sweep capability (sweep_cols) must "
+               "trace through template.swept_body"),
     "STR001": ("cached streams own pairwise-disjoint counter-space "
                "ranges"),
     "STR002": ("per-stream deposit rounds are gap-free and monotone "

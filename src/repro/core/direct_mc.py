@@ -267,7 +267,8 @@ def _sums_with_ids(family, n_samples, key, fn_ids, sample_offset, chunk,
         from repro.kernels import registry
         impl = registry.lookup(family.kernel, dim=family.dim,
                                sampler=sampler,
-                               compactified=family.compact)
+                               compactified=family.compact,
+                               sweep=family.swept)
         if impl is not None:
             return impl(family, n_samples, key, fn_ids=fn_ids,
                         sample_offset=sample_offset)

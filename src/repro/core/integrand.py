@@ -53,6 +53,13 @@ class IntegrandFamily:
         ``{"inner": user params, "aux": {"kind", "shift"}}`` wrapper
         around an infinite-domain integrand, and kernel dispatch must
         apply the transform stage (``repro.kernels.template``).
+      swept: set by :meth:`swept_over` — the sorted parameter names a
+        sweep table overrides.  ``params`` (or ``params["inner"]`` once
+        compactified) is the ``{"base": template params, "table": {name:
+        per-point values}}`` wrapper; each function row is one grid
+        point, and kernel dispatch substitutes the table columns into
+        the packed template row in-kernel
+        (``repro.kernels.template.swept_body``).
     """
 
     fn: Callable[[Array, Any], Array]
@@ -61,18 +68,19 @@ class IntegrandFamily:
     name: str = "family"
     kernel: str | None = None
     compact: bool = False
+    swept: tuple[str, ...] = ()
 
-    # -- pytree plumbing (fn/name/kernel/compact are static) -----------------
+    # -- pytree plumbing (fn/name/kernel/compact/swept are static) -----------
     def tree_flatten(self):
         return ((self.params, self.domains),
-                (self.fn, self.name, self.kernel, self.compact))
+                (self.fn, self.name, self.kernel, self.compact, self.swept))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        fn, name, kernel, compact = aux
+        fn, name, kernel, compact, swept = aux
         params, domains = children
         return cls(fn=fn, params=params, domains=domains, name=name,
-                   kernel=kernel, compact=compact)
+                   kernel=kernel, compact=compact, swept=swept)
 
     # -- derived sizes --------------------------------------------------------
     @property
@@ -120,6 +128,7 @@ class IntegrandFamily:
             name=self.name + ":compactified",
             kernel=self.kernel,
             compact=True,
+            swept=self.swept,
         )
 
     def inner(self) -> "IntegrandFamily":
@@ -133,6 +142,96 @@ class IntegrandFamily:
         if not self.compact:
             return self
         return IntegrandFamily(fn=self.fn, params=self.params["inner"],
+                               domains=self.domains, name=self.name,
+                               kernel=self.kernel, swept=self.swept)
+
+    def swept_over(self, table: dict) -> "IntegrandFamily":
+        """Sweep this single-function template over a parameter table.
+
+        Args:
+          table: mapping from parameter name (a top-level key of
+            :attr:`params`) to its per-point values — shape
+            ``(n_points,) + base_leaf.shape[1:]`` (the leading axis
+            replaces the template's function axis).
+        Returns:
+          A family with ``n_fn == n_points``: function row ``j`` is the
+          template with the named parameters overridden by
+          ``table[name][j]``.  The swept family evaluates on the chunked
+          path by merging the table into the base params, and on the
+          fused Pallas path by substituting table columns into the
+          packed template row in-kernel — bit-identically, since the
+          sample counters depend only on (global fn id, sample id).
+
+        Sweep before :meth:`compactified`: the canonicalizer composes
+        the two stages as ``compactify(sweep(template))``.
+        """
+        if self.compact:
+            raise ValueError("sweep the template before compactifying "
+                             "(canonicalization composes the stages)")
+        if self.n_fn != 1:
+            raise ValueError(
+                f"sweep template must be a single function (n_fn == 1); "
+                f"got n_fn={self.n_fn}")
+        if not isinstance(self.params, dict):
+            raise ValueError("sweep templates need dict params (the table "
+                             "overrides parameters by name)")
+        if not table:
+            raise ValueError("sweep table must name at least one parameter")
+        names = tuple(sorted(table))
+        missing = [n for n in names if n not in self.params]
+        if missing:
+            raise ValueError(
+                f"sweep table names {missing} not in template params "
+                f"{sorted(self.params)}")
+        cols = {n: jnp.asarray(np.asarray(table[n], np.float32))
+                for n in names}
+        n_points = {int(v.shape[0]) for v in cols.values()}
+        if len(n_points) != 1:
+            raise ValueError(
+                f"sweep table axes disagree on n_points: { {n: int(v.shape[0]) for n, v in cols.items()} }")
+        (n_pts,) = n_points
+        for n in names:
+            base_leaf = np.asarray(self.params[n])
+            if cols[n].shape[1:] != base_leaf.shape[1:]:
+                raise ValueError(
+                    f"sweep axis {n!r} has per-point shape "
+                    f"{cols[n].shape[1:]}, template expects "
+                    f"{base_leaf.shape[1:]}")
+        base = jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(
+                jnp.asarray(leaf), (n_pts,) + np.shape(leaf)[1:]),
+            self.params)
+        domains = jnp.broadcast_to(jnp.asarray(self.domains),
+                                   (n_pts,) + self.domains.shape[1:])
+
+        base_fn = self.fn
+
+        def fn(x, p):
+            return base_fn(x, {**p["base"], **p["table"]})
+
+        return IntegrandFamily(
+            fn=fn,
+            params={"base": base, "table": cols},
+            domains=domains,
+            name=f"{self.name}:sweep[{n_pts}]",
+            kernel=self.kernel,
+            swept=names,
+        ).validate()
+
+    def sweep_base(self) -> "IntegrandFamily":
+        """The template-parameter view of a swept family.
+
+        Kernel param packers consume this: ``params`` is the broadcast
+        base pytree (every row the template point), without the
+        ``{"base", "table"}`` wrapper.  Call on the :meth:`inner` view
+        of a compactified swept family.  Identity for non-swept ones.
+        """
+        if not self.swept:
+            return self
+        if self.compact:
+            raise ValueError("call sweep_base() on the inner() view of a "
+                             "compactified swept family")
+        return IntegrandFamily(fn=self.fn, params=self.params["base"],
                                domains=self.domains, name=self.name,
                                kernel=self.kernel)
 

@@ -114,7 +114,8 @@ def plan_spec(spec, *, sampler: str = "mc",
     for idx, fam in enumerate(families):
         form = registry.form(fam.kernel) if fam.kernel else None
         if form is None or not form.supports(
-                dim=fam.dim, sampler=sampler, compactified=fam.compact):
+                dim=fam.dim, sampler=sampler, compactified=fam.compact,
+                sweep=fam.swept):
             unfused.append(idx)
             continue
         by_dim.setdefault(fam.dim, []).append(idx)

@@ -95,11 +95,17 @@ def pack_gaussian(family):
     return jnp.asarray(prm["sigma"], jnp.float32).reshape(family.n_fn, 1)
 
 
+# sweep_cols maps each sweepable template parameter to the base packed
+# columns it occupies (see ``template.sweep_col_map``); genz_osc's "u" is
+# deliberately absent — its packer keeps only u[:, :1] of a dim-wide
+# leaf, so a per-point table could not round-trip through the columns.
 HARMONIC = registry.register_form(KernelForm(
     name="mc_eval_harmonic",
     body=harmonic_body,
     pack_params=pack_harmonic,
     n_cols=lambda dim: 2 + dim,
+    sweep_cols=lambda dim: {"a": (0,), "b": (1,),
+                            "k": tuple(range(2, 2 + dim))},
 ))
 
 ABS_SUM = registry.register_form(KernelForm(
@@ -107,6 +113,7 @@ ABS_SUM = registry.register_form(KernelForm(
     body=abs_sum_body,
     pack_params=pack_abs_sum,
     n_cols=lambda dim: 1 + dim,
+    sweep_cols=lambda dim: {"c": (0,), "s": tuple(range(1, 1 + dim))},
 ))
 
 GAUSSIAN = registry.register_form(KernelForm(
@@ -114,6 +121,7 @@ GAUSSIAN = registry.register_form(KernelForm(
     body=gaussian_body,
     pack_params=pack_gaussian,
     n_cols=lambda dim: 1,
+    sweep_cols=lambda dim: {"sigma": (0,)},
 ))
 
 GENZ_OSC = registry.register_form(KernelForm(
@@ -121,6 +129,7 @@ GENZ_OSC = registry.register_form(KernelForm(
     body=genz_osc_body,
     pack_params=pack_genz_osc,
     n_cols=lambda dim: 1 + dim,
+    sweep_cols=lambda dim: {"a": tuple(range(1, 1 + dim))},
 ))
 
 GENZ_CORNER = registry.register_form(KernelForm(
@@ -128,6 +137,7 @@ GENZ_CORNER = registry.register_form(KernelForm(
     body=genz_corner_body,
     pack_params=pack_genz_corner,
     n_cols=lambda dim: dim,
+    sweep_cols=lambda dim: {"a": tuple(range(dim))},
 ))
 
 # Directly-importable fast paths (historical public names).

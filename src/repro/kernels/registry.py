@@ -65,6 +65,14 @@ class KernelForm:
         through ``draw`` compose automatically (the wrapper hands them
         pre-transformed draws and folds the Jacobian into the value);
         set False for bodies that read domain geometry directly.
+      sweep_cols: ``dim -> {param name: base packed column indices}`` —
+        which template parameters the parameter-sweep stage
+        (``repro.kernels.template.swept_body``) can override per grid
+        point, and which of this form's packed columns each occupies.
+        ``None`` (the default) means the form doesn't serve swept
+        families.  Declared combos are contract-checked eagerly at
+        registration (rule KCT005), so an inconsistent map fails at the
+        definition site.
     """
 
     name: str
@@ -75,15 +83,28 @@ class KernelForm:
     samplers: tuple[str, ...] = ("mc", "sobol")
     backends: tuple[str, ...] = ("tpu", "interpret")
     supports_compactified: bool = True
+    sweep_cols: Callable[[int], dict[str, tuple[int, ...]]] | None = None
+
+    @property
+    def supports_swept(self) -> bool:
+        """Whether this form serves swept families at all."""
+        return self.sweep_cols is not None
 
     def supports(self, *, dim: int, sampler: str = "mc",
-                 compactified: bool = False) -> bool:
+                 compactified: bool = False,
+                 sweep: tuple[str, ...] = ()) -> bool:
         if sampler not in self.samplers:
             return False
         if dim > self.max_dim:
             return False
         if compactified and not self.supports_compactified:
             return False
+        if sweep:
+            if self.sweep_cols is None:
+                return False
+            sweepable = self.sweep_cols(dim)
+            if any(name not in sweepable for name in sweep):
+                return False
         if sampler == "sobol":
             from repro.core.sobol import MAX_DIM
             return dim <= MAX_DIM
@@ -134,7 +155,13 @@ def _load_builtin():
 
 def impl(name: str) -> Callable:
     """Plain dict lookup (no import side effect; registration-time use)."""
-    return _REGISTRY[name]
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no kernel impl registered under {name!r}; have "
+            f"{sorted(_REGISTRY)} (sampler variants are named "
+            f"'<form>@<sampler>')") from None
 
 
 def get(name: str) -> Callable:
@@ -150,29 +177,95 @@ def form(name: str) -> KernelForm | None:
     return _FORMS.get(name.split("@", 1)[0])
 
 
-def lookup(name: str, *, dim: int, sampler: str = "mc",
-           compactified: bool = False) -> Callable | None:
-    """Capability-checked dispatch: impl for (name, dim, sampler) or None.
+def _explain_miss(f: "KernelForm | None", name: str, *, dim: int,
+                  sampler: str, compactified: bool,
+                  sweep: tuple[str, ...]) -> str:
+    """Human-readable reason a capability lookup missed, with the nearest
+    combo the registry *does* serve."""
+    asked = (f"dim={dim}, sampler={sampler!r}"
+             + (", compactified" if compactified else "")
+             + (f", sweep={sweep}" if sweep else ""))
+    if f is None:
+        hint = (f"no KernelForm named {name!r}; registered forms: "
+                f"{sorted(_FORMS)}")
+        if not compactified and not sweep:
+            hint += (" (legacy bare callables serve finite non-swept "
+                     "families only)")
+        return f"kernel lookup missed for {name!r} ({asked}): {hint}"
+    reasons = []
+    if sampler not in f.samplers:
+        reasons.append(f"sampler {sampler!r} not in {f.samplers}")
+    if dim > f.max_dim:
+        reasons.append(f"dim {dim} > max_dim {f.max_dim}")
+    if sampler == "sobol":
+        from repro.core.sobol import MAX_DIM
+        if dim > MAX_DIM:
+            reasons.append(f"dim {dim} > sobol direction-vector "
+                           f"MAX_DIM {MAX_DIM}")
+    if compactified and not f.supports_compactified:
+        reasons.append("form does not compose with the compactification "
+                       "stage (supports_compactified=False)")
+    if sweep:
+        if f.sweep_cols is None:
+            reasons.append("form declares no sweep_cols (not sweepable)")
+        else:
+            bad = [n for n in sweep if n not in f.sweep_cols(dim)]
+            if bad:
+                reasons.append(
+                    f"parameters {bad} not sweepable; form sweeps "
+                    f"{sorted(f.sweep_cols(dim))} at dim={dim}")
+    nearest = (f"nearest supported: dim<={f.max_dim}, "
+               f"samplers={f.samplers}"
+               + (", compactified ok" if f.supports_compactified else "")
+               + (f", sweepable={sorted(f.sweep_cols(dim if dim <= f.max_dim else f.max_dim))}"
+                  if f.sweep_cols is not None else ""))
+    return (f"kernel form {f.name!r} cannot serve ({asked}): "
+            + "; ".join(reasons) + f".  {nearest}")
 
-    Unknown names and unsupported (dim, sampler) combinations return None
-    — callers fall back to the chunked pure-JAX path.  ``compactified``
-    marks families carrying the infinite-domain transform stage: forms
-    opt in via ``supports_compactified`` (legacy bare callables cannot
-    pack the transform columns, so they always miss).
+
+def lookup(name: str, *, dim: int, sampler: str = "mc",
+           compactified: bool = False, sweep: tuple[str, ...] = (),
+           required: bool = False) -> Callable | None:
+    """Capability-checked dispatch: impl for the requested combo or None.
+
+    Unknown names and unsupported (dim, sampler, compactified, sweep)
+    combinations return None — callers fall back to the chunked pure-JAX
+    path.  ``compactified`` marks families carrying the infinite-domain
+    transform stage; ``sweep`` names the parameters a swept family's
+    table overrides (forms opt in per parameter via ``sweep_cols``).
+    Legacy bare callables can pack neither transform nor table columns,
+    so they always miss those.
+
+    ``required=True`` turns the silent None into a ``ValueError`` naming
+    the form, the requested capabilities, and the nearest registered
+    combo — for callers with no fallback path (the sweep engine).
     """
     _load_builtin()
     f = _FORMS.get(name)
     if f is not None:
         if not f.supports(dim=dim, sampler=sampler,
-                          compactified=compactified):
+                          compactified=compactified, sweep=sweep):
+            if required:
+                raise ValueError(_explain_miss(
+                    f, name, dim=dim, sampler=sampler,
+                    compactified=compactified, sweep=sweep))
             return None
         key = name if sampler == "mc" else f"{name}@{sampler}"
         return _REGISTRY.get(key)
-    if compactified:
+    if compactified or sweep:
+        if required:
+            raise ValueError(_explain_miss(
+                None, name, dim=dim, sampler=sampler,
+                compactified=compactified, sweep=sweep))
         return None
     # legacy bare callables: only the default sampler naming convention
     key = name if sampler == "mc" else f"{name}@{sampler}"
-    return _REGISTRY.get(key)
+    found = _REGISTRY.get(key)
+    if found is None and required:
+        raise ValueError(_explain_miss(
+            None, name, dim=dim, sampler=sampler,
+            compactified=compactified, sweep=sweep))
+    return found
 
 
 def names() -> list[str]:

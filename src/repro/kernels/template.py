@@ -39,6 +39,20 @@ Jacobian product into the value tile.  The wrapped body participates in
 ``lax.switch`` selection like any other, so finite and infinite-domain
 families fuse into the same (dim, sampler) bucket launches.
 
+Parameter sweeps: a swept family (``IntegrandFamily.swept``, built by
+``swept_over``) runs a single-function template over a grid of parameter
+points through a second **wrapper stage** (:func:`swept_body`), mirroring
+the compactified one: the per-point table values ride as extra packed
+columns after the form's base columns, and the wrapper substitutes them
+into the template's packed row (static column indexing — no gather)
+before the form's body reads it.  Every grid point is an ordinary
+function row with its own global fn id and counter stream, so a whole
+sweep chunk runs in ONE ``pallas_call`` per (dim, sampler) bucket while
+staying bit-identical to evaluating each point as its own family.  The
+stages compose — a compactified sweep packs
+``[base cols][sweep cols][transform cols]`` and wraps
+``compactified_body(swept_body(body))``.
+
 Multi-round evaluation: the grid carries an optional **round axis**
 (``n_rounds``) so one launch evaluates R consecutive counter-addressed
 sample windows, emitting per-round ``(sum f, sum f^2)`` partials in an
@@ -196,30 +210,133 @@ def transform_cols(family):
         jnp.asarray(aux["shift"], jnp.float32)], axis=1)
 
 
+@functools.lru_cache(maxsize=None)
+def swept_body(body, base_cols: int, col_map: tuple):
+    """Wrap an eval body with the parameter-sweep substitution stage.
+
+    A swept family's packed parameters carry, after its form's
+    ``base_cols`` columns, one table column per swept parameter column;
+    ``col_map[j]`` names the base column that table column ``j``
+    overrides (:func:`sweep_col_map` derives it from
+    ``KernelForm.sweep_cols``).  The wrapper redirects the body's
+    parameter reads through a column-substitution view: ``p[f, c]``
+    resolves to the table column when ``c`` is overridden and to the
+    base column otherwise.  Substitution happens at the *read site*
+    (static Python index arithmetic, no gather, no rebuilt block), so
+    the traced kernel issues exactly the per-point program's scalar
+    reads at shifted column constants — XLA sees a structurally
+    identical computation and bit-identity to the per-point path is
+    preserved through fusion/contraction choices, not just in exact
+    arithmetic.  Counters depend only on (global fn id, sample id), so
+    the values agree too.
+
+    lru_cached for the same reason as :func:`compactified_body`: bucket
+    body dedupe and the jit compile cache key on body identity.
+    """
+    subst = {col_map[j]: base_cols + j for j in range(len(col_map))}
+
+    class _SubstView:
+        """Redirects ``[f, c]`` parameter reads through the sweep map."""
+        __slots__ = ("p",)
+
+        def __init__(self, p):
+            self.p = p
+
+        def __getitem__(self, idx):
+            f, c = idx
+            return self.p[f, subst.get(c, c)]
+
+    def wrapped(draw, p, f, dim: int):
+        return body(draw, _SubstView(p), f, dim)
+
+    wrapped.__name__ = f"swept_{getattr(body, '__name__', 'body')}"
+    return wrapped
+
+
+def sweep_col_map(form, family) -> tuple:
+    """Base-column substitution map of a swept ``family`` under ``form``.
+
+    Entry ``j`` is the base packed column that sweep table column ``j``
+    overrides; table columns are laid out name-major in ``family.swept``
+    order (sorted names), each name contributing its
+    ``form.sweep_cols(dim)`` columns in declared order.  Takes the
+    non-compact (:meth:`IntegrandFamily.inner`) swept view.  Raises if
+    the form doesn't advertise the swept names or a table leaf's width
+    disagrees with the form's column map.
+    """
+    if form.sweep_cols is None:
+        raise ValueError(
+            f"kernel form {form.name!r} does not support swept families")
+    cols = form.sweep_cols(family.dim)
+    table = family.params["table"]
+    out = []
+    for name in family.swept:
+        if name not in cols:
+            raise ValueError(
+                f"kernel form {form.name!r} cannot sweep parameter "
+                f"{name!r} at dim={family.dim}; sweepable: {sorted(cols)}")
+        width = 1
+        for s in jnp.shape(table[name])[1:]:
+            width *= int(s)
+        if width != len(cols[name]):
+            raise ValueError(
+                f"sweep axis {name!r} packs {width} column(s) per point "
+                f"but form {form.name!r} maps it to {len(cols[name])} "
+                f"base column(s) at dim={family.dim}")
+        out.extend(int(c) for c in cols[name])
+    return tuple(out)
+
+
+def sweep_table_cols(family):
+    """f32[n_fn, n_sweep_cols] packed per-point table columns of a swept
+    family (non-compact view), appended after its form's base columns in
+    :func:`sweep_col_map` order."""
+    table = family.params["table"]
+    return jnp.concatenate(
+        [jnp.asarray(table[name], jnp.float32).reshape(family.n_fn, -1)
+         for name in family.swept], axis=1)
+
+
 def packed_cols(form, family) -> int:
     """Total packed width of ``family`` under ``form`` — the width
-    :func:`body_and_packed` produces, transform columns included.  The
-    fused planner sizes its buckets with this so the column layout lives
-    in one module."""
+    :func:`body_and_packed` produces, sweep and transform columns
+    included.  The fused planner sizes its buckets with this so the
+    column layout lives in one module."""
     extra = 2 * family.dim if family.compact else 0
-    return form.n_cols(family.dim) + extra
+    sweep = len(sweep_col_map(form, family.inner())) if family.swept else 0
+    return form.n_cols(family.dim) + sweep + extra
 
 
 def body_and_packed(form, family):
     """The (eval body, f32[n_fn, cols]) pair of one family under ``form``.
 
-    The single place compactified families grow their wrapped body and
-    transform columns; finite families pass through untouched.  Callers
-    (the single-family impl and the fused planner) must have capability-
-    checked ``form.supports(..., compactified=family.compact)`` first.
+    The single place swept families grow their substitution wrapper and
+    table columns, and compactified families their transform wrapper and
+    transform columns — composed, for a compactified sweep, as
+    ``compactified_body(swept_body(body))`` over a
+    ``[base][sweep][transform]`` column layout.  Finite non-swept
+    families pass through untouched.  Callers (the single-family impl
+    and the fused planner) must have capability-checked
+    ``form.supports(..., compactified=family.compact,
+    sweep=family.swept)`` first.
     """
-    if not family.compact:
-        return form.body, jnp.asarray(form.pack_params(family), jnp.float32)
     base_cols = form.n_cols(family.dim)
-    packed = jnp.concatenate([
-        jnp.asarray(form.pack_params(family.inner()), jnp.float32),
-        transform_cols(family)], axis=1)
-    return compactified_body(form.body, base_cols), packed
+    inner = family.inner()
+    if family.swept:
+        col_map = sweep_col_map(form, inner)
+        body = swept_body(form.body, base_cols, col_map)
+        packed = jnp.concatenate([
+            jnp.asarray(form.pack_params(inner.sweep_base()), jnp.float32),
+            sweep_table_cols(inner)], axis=1)
+        core_cols = base_cols + len(col_map)
+    else:
+        body = form.body
+        packed = jnp.asarray(form.pack_params(inner), jnp.float32)
+        core_cols = base_cols
+    if not family.compact:
+        return body, packed
+    packed = jnp.concatenate([packed, transform_cols(family)], axis=1)
+    return compactified_body(body, core_cols), packed
 
 
 def _fused_kernel(*refs, dim: int, bodies: tuple, sampler: str,
@@ -431,11 +548,13 @@ def make_family_impl(form, sampler: str):
              interpret: bool | None = None) -> SumsState:
         n_fn, dim = family.n_fn, family.dim
         compact = family.compact
-        if not form.supports(dim=dim, sampler=sampler, compactified=compact):
+        if not form.supports(dim=dim, sampler=sampler, compactified=compact,
+                             sweep=family.swept):
             raise ValueError(
                 f"kernel {form.name!r} does not support dim={dim} with "
                 f"sampler={sampler!r}"
-                + (" on a compactified family" if compact else ""))
+                + (" on a compactified family" if compact else "")
+                + (f" swept over {family.swept}" if family.swept else ""))
         if fn_ids is None:
             fn_ids = jnp.uint32(fn_offset) + jnp.arange(n_fn,
                                                         dtype=jnp.uint32)

@@ -61,13 +61,14 @@ from repro.obs import clock as _clock
 
 from repro.core import abs_sum_family, gaussian_family, harmonic_family
 from repro.core import genz
-from repro.service.api import IntegrationRequest
+from repro.service.api import IntegrationRequest, SweepRequest
 
 
 def demo_workload(n_requests: int, *, n_fn: int = 8,
                   n_samples: int | None = 16384,
                   target_stderr: float | None = None,
-                  duplicate_every: int = 4) -> list[IntegrationRequest]:
+                  duplicate_every: int = 4,
+                  sweeps: int = 0) -> list:
     """A mixed-dimension request stream with deliberate overlap.
 
     Cycles through the registered forms at dims 2-4 (so batching has
@@ -77,8 +78,16 @@ def demo_workload(n_requests: int, *, n_fn: int = 8,
     includes infinite-domain Gaussians (over R^d and the positive
     orthant): compactified families ride the same fused buckets, cache
     streams and persistence digests as finite ones.
+
+    With ``sweeps=k``, appends ``k`` sweep requests
+    (:class:`SweepRequest`) — each a
+    harmonic template scanned over a deterministic 2-D (a, b) grid, the
+    grids overlapping pairwise along the slowest axis — so persistence
+    and restart drills cover sweep cache streams too (``SweepResult``
+    exposes the same ``means``/``served_from_cache`` surface the drills
+    digest).
     """
-    reqs: list[IntegrationRequest] = []
+    reqs: list = []
     makers = [
         lambda i: harmonic_family(n_fn, 2 + i % 3),
         lambda i: abs_sum_family(n_fn, 2 + i % 3,
@@ -98,6 +107,14 @@ def demo_workload(n_requests: int, *, n_fn: int = 8,
             fams = (makers[i % len(makers)](i),)
         reqs.append(IntegrationRequest.make(
             fams, n_samples=n_samples, target_stderr=target_stderr))
+    for j in range(sweeps):
+        # consecutive sweeps extend the slowest-varying axis, so their
+        # canonical slice prefixes align and dedupe at the cache
+        grid = {"a": np.linspace(0.5, 2.0, 4 + 2 * j),
+                "b": np.linspace(-1.0, 1.0, 8)}
+        reqs.append(SweepRequest.make(
+            harmonic_family(1, 2 + j % 3), grid,
+            n_samples=n_samples, target_stderr=target_stderr))
     return reqs
 
 

@@ -281,6 +281,11 @@ def service_metrics(registry: MetricsRegistry) -> dict:
     zmc_wal_bytes_total              journal bytes written
     zmc_wal_fsync_seconds            histogram: fsync+write latency per commit
     zmc_wal_commits_total            journal write batches
+    zmc_sweep_requests_total         sweep requests accepted
+    zmc_sweep_points_total           grid points across accepted sweeps
+    zmc_sweep_slices_total           {outcome=new|shared}: canonical sweep
+                                     slices allocated vs deduped onto an
+                                     existing cache stream
     ==============================  =============================================
     """
     return {
@@ -336,4 +341,14 @@ def service_metrics(registry: MetricsRegistry) -> dict:
             "write+fsync latency per journal commit"),
         "wal_commits": registry.counter(
             "zmc_wal_commits_total", "journal write batches"),
+        "sweep_submitted": registry.counter(
+            "zmc_sweep_requests_total", "accepted sweep requests"),
+        "sweep_points": registry.counter(
+            "zmc_sweep_points_total",
+            "grid points across accepted sweep requests"),
+        "sweep_slices": registry.counter(
+            "zmc_sweep_slices_total",
+            "canonical sweep slices by cache fate (shared = deduped onto "
+            "an existing stream, incl. sub-grid overlap with another "
+            "client's sweep)", ("outcome",)),
     }

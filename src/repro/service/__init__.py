@@ -9,9 +9,11 @@
 #   api        - request/response dataclasses and the blocking client
 
 from repro.service.api import (Backpressure, IntegrationClient,
-                               IntegrationRequest, IntegrationResult)
+                               IntegrationRequest, IntegrationResult,
+                               SweepRequest, SweepResult)
 from repro.service.cache import CacheEntry, ResultCache
-from repro.service.canonical import canonical_family, family_hash, spec_hash
+from repro.service.canonical import (canonical_family, family_hash,
+                                     spec_hash, sweep_slices)
 from repro.service.engine import EngineStats, IntegrationEngine
 from repro.service.store import DurableStore, EntryState, RecoveredState
 
@@ -27,7 +29,10 @@ __all__ = [
     "IntegrationResult",
     "RecoveredState",
     "ResultCache",
+    "SweepRequest",
+    "SweepResult",
     "canonical_family",
     "family_hash",
     "spec_hash",
+    "sweep_slices",
 ]

@@ -1,9 +1,20 @@
 """Public request/response surface of the integration service.
 
-A request names *what* to integrate (a list of
-:class:`~repro.core.integrand.IntegrandFamily`) and *how well*: a sample
-budget, a standard-error target, or both.  The engine decides everything
-else — batching, caching, counter-space placement, kernel dispatch.
+A request names *what* to integrate and *how well*: a sample budget, a
+standard-error target, or both.  The engine decides everything else —
+batching, caching, counter-space placement, kernel dispatch.  Two
+request shapes exist:
+
+* :class:`IntegrationRequest` — a list of
+  :class:`~repro.core.integrand.IntegrandFamily` (the original shape);
+* :class:`SweepRequest` — ONE single-function template family × a
+  parameter grid.  The service canonicalizes the grid into fixed-size
+  slices of swept families (``repro.service.canonical.sweep_slices``),
+  so a 10^5-point scan costs slice-count cache entries and one fused
+  launch per (dim, sampler) bucket per wave — not 10^5 of each — and
+  overlapping sweeps from different clients share streams at the
+  sub-grid level.  Results stream back per point as rounds complete
+  (``engine.sweep_partial``).
 
 ``IntegrationClient`` is the blocking convenience wrapper: it submits,
 drives the engine if no background worker is running, and returns the
@@ -66,6 +77,57 @@ class IntegrationRequest:
 
 
 @dataclasses.dataclass(frozen=True)
+class SweepRequest:
+    """One client ask: scan a template integrand over a parameter grid.
+
+    Attributes:
+      template: a single-function (``n_fn == 1``) family whose dict
+        params the grid overrides by name.
+      grid: ``{param name: axis values}``; the swept points are the
+        row-major cartesian product over axes in sorted-name order
+        (last axis fastest).  Axis values may be vectors per point
+        (e.g. a dim-wide ``k``) — leading axis is the point axis.
+      n_samples / target_stderr / sampler: as on
+        :class:`IntegrationRequest`, applied to every grid point.
+    """
+
+    template: IntegrandFamily
+    grid: dict
+    n_samples: int | None = None
+    target_stderr: float | None = None
+    sampler: str = "mc"
+
+    @classmethod
+    def make(cls, template: IntegrandFamily, grid: dict, *,
+             n_samples: int | None = None,
+             target_stderr: float | None = None,
+             sampler: str = "mc") -> "SweepRequest":
+        template = template.validate()
+        if template.n_fn != 1:
+            raise ValueError(
+                f"sweep template must be a single function (n_fn == 1); "
+                f"got n_fn={template.n_fn}")
+        if not isinstance(template.params, dict):
+            raise ValueError("sweep template needs dict params")
+        if not grid:
+            raise ValueError("sweep grid must name at least one axis")
+        missing = [k for k in grid if k not in template.params]
+        if missing:
+            raise ValueError(f"sweep grid names {sorted(missing)} not in "
+                             f"template params {sorted(template.params)}")
+        if n_samples is None and target_stderr is None:
+            raise ValueError("request needs n_samples or target_stderr")
+        if n_samples is not None and n_samples <= 0:
+            raise ValueError("n_samples must be positive")
+        if target_stderr is not None and target_stderr <= 0:
+            raise ValueError("target_stderr must be positive")
+        if sampler not in ("mc", "sobol"):
+            raise ValueError(f"unknown sampler {sampler!r}")
+        return cls(template=template, grid=dict(grid), n_samples=n_samples,
+                   target_stderr=target_stderr, sampler=sampler)
+
+
+@dataclasses.dataclass(frozen=True)
 class IntegrationResult:
     """Finished estimates, in the request's family-by-family order."""
 
@@ -82,6 +144,27 @@ class IntegrationResult:
     @property
     def n_fn_total(self) -> int:
         return int(self.means.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult(IntegrationResult):
+    """Per-point estimates of a sweep, in row-major grid order.
+
+    ``means``/``stderrs`` are flat over grid points; reshape to
+    ``grid_shape`` to index by axis value (``axis_names`` gives the
+    axis order — sorted parameter names).  ``n_per_family`` /
+    ``names`` / ``stream_ids`` are per canonical *slice*, the unit the
+    cache keys on.  A partial snapshot (``engine.sweep_partial``)
+    carries ``complete=False`` and a ``points_done`` boolean mask over
+    points whose slice has at least one finished round (undone points
+    hold NaN means / inf stderrs).
+    """
+
+    grid_shape: tuple[int, ...] = ()
+    axis_names: tuple[str, ...] = ()
+    n_points: int = 0
+    points_done: np.ndarray | None = None
+    complete: bool = True
 
 
 class IntegrationClient:
@@ -116,6 +199,20 @@ class IntegrationClient:
     def integrate(self, families, **kwargs) -> IntegrationResult:
         ticket = self.submit(families, **kwargs)
         return self.wait(ticket)
+
+    def submit_sweep(self, template, grid, **kwargs) -> int:
+        return self.engine.submit(SweepRequest.make(template, grid, **kwargs))
+
+    def sweep(self, template, grid, **kwargs) -> "SweepResult":
+        """Scan ``template`` over ``grid`` and block for every point."""
+        ticket = self.submit_sweep(template, grid, **kwargs)
+        return self.wait(ticket)
+
+    def sweep_partial(self, ticket: int) -> "SweepResult":
+        """Current per-point snapshot of an in-flight sweep (non-blocking):
+        finished points carry real estimates, pending ones NaN/inf —
+        see :class:`SweepResult`.``points_done``."""
+        return self.engine.sweep_partial(ticket)
 
     def wait(self, ticket: int, timeout: float | None = None) -> IntegrationResult:
         if self.engine.running:

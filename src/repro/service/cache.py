@@ -29,6 +29,14 @@ bump allocator over the 2^24-id space of ``rng.DIM_STRIDE``), so every
 Threefry counter of every cached stream stays addressable and collision
 free no matter which batch the family first arrived in.
 
+Parameter sweeps add no machinery here: a sweep request canonicalizes
+into fixed-size slices of *swept* families
+(``repro.service.canonical.sweep_slices``), each an ordinary entry —
+content-hashed, allocated its own counter range, topped up and
+journaled exactly like a single-family stream — so overlapping sweeps
+from different clients share streams wherever their canonical slices
+align, and every guarantee above applies per slice.
+
 Concurrency: an entry's mutable accumulator state lives in ONE tuple,
 swapped atomically under the cache lock by :meth:`deposit`; readers
 (``stderr``/``finalize``/``meets``) work from a single snapshot, so a

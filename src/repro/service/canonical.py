@@ -23,6 +23,18 @@ Infinite domains are compactified *before* hashing, mirroring what the
 engine does before sampling, so ``gaussian over R^d`` submitted raw and
 pre-compactified dedupe to the same entry.
 
+Requests are not per-family-only: a **sweep request** (one template
+family × a parameter grid) canonicalizes here too.  The grid spec is
+normalized — axes sorted by name, values to f32, points enumerated in
+row-major (last-axis-fastest) order — and chunked into fixed-size
+*slices* (:data:`DEFAULT_SWEEP_SLICE` points), each an ordinary swept
+:class:`IntegrandFamily` that hashes by content like any other.  Cache
+streams are therefore keyed per (family, grid-slice), not per point:
+two clients sweeping overlapping grids dedupe at the sub-grid level
+wherever their canonical slices align (same template, same axis names,
+same point values at the same slice offsets), with no sweep-specific
+hash scheme.
+
 The hash addresses the service's result cache; it is not a security
 boundary.
 """
@@ -163,6 +175,82 @@ def family_hash(family: IntegrandFamily, *, canonicalize: bool = True) -> str:
     _hash_pytree(h, family.params)
     _hash_array(h, family.domains)
     return h.hexdigest()
+
+
+# Points per canonical sweep slice.  Part of the dedupe contract: two
+# sweeps share cache streams only where their canonical slices align, so
+# every engine must chunk at the same quantum (engines expose it as the
+# ``sweep_slice_points`` knob for tests; changing it in production
+# orphans — but never corrupts — previously cached sweep streams).
+DEFAULT_SWEEP_SLICE = 64
+
+
+def canonical_grid(grid: dict) -> tuple:
+    """Normalize a sweep grid spec to ``((name, f32 values), ...)``.
+
+    Axes are sorted by parameter name; values become f32 arrays with a
+    leading point axis (scalars promoted to length-1 axes, trailing
+    shape preserved for vector-valued parameters).  Two grid dicts that
+    enumerate the same points canonicalize identically regardless of
+    insertion order or input dtype.
+    """
+    if not grid:
+        raise ValueError("sweep grid must name at least one axis")
+    axes = []
+    for name in sorted(grid):
+        vals = np.asarray(grid[name], np.float32)
+        if vals.ndim == 0:
+            vals = vals.reshape(1)
+        if vals.shape[0] == 0:
+            raise ValueError(f"sweep axis {name!r} is empty")
+        axes.append((str(name), vals))
+    return tuple(axes)
+
+
+def grid_table(axes: tuple) -> tuple[dict, tuple[int, ...]]:
+    """Row-major point table of a canonical grid.
+
+    Returns ``(table, shape)``: ``table[name]`` holds axis ``name``'s
+    value at every grid point (leading axis = flat point index, last
+    grid axis fastest — C order, so clients can reshape results to
+    ``shape``), ``shape`` the per-axis point counts in sorted-name
+    order.
+    """
+    sizes = [int(v.shape[0]) for _, v in axes]
+    idx = np.indices(sizes).reshape(len(sizes), -1)
+    table = {name: v[idx[i]] for i, (name, v) in enumerate(axes)}
+    return table, tuple(sizes)
+
+
+def sweep_slices(template: IntegrandFamily, grid: dict, *,
+                 slice_points: int = DEFAULT_SWEEP_SLICE) -> tuple:
+    """Canonical slice families of one sweep request.
+
+    Chunks the row-major point enumeration into ``slice_points``-sized
+    pieces and builds each as a canonical (compactified) swept family —
+    the unit the cache keys on.  Deterministic: same template + same
+    grid content → byte-identical slice sequence, and a *prefix* grid
+    (extending only the slowest-varying axis) reproduces its aligned
+    slices exactly, which is what makes overlapping client sweeps
+    dedupe below the request level.
+
+    Returns ``(slice_families, grid_shape, axis_names)``.
+    """
+    if int(slice_points) < 1:
+        raise ValueError(f"slice_points must be >= 1, got {slice_points}")
+    axes = canonical_grid(grid)
+    table, shape = grid_table(axes)
+    n_points = 1
+    for s in shape:
+        n_points *= s
+    fams = []
+    for start in range(0, n_points, int(slice_points)):
+        stop = min(start + int(slice_points), n_points)
+        chunk = {name: vals[start:stop] for name, vals in table.items()}
+        fam = canonical_family(template.swept_over(chunk))
+        fam.name = f"{template.name}:sweep[{start}:{stop}]"
+        fams.append(fam)
+    return tuple(fams), shape, tuple(name for name, _ in axes)
 
 
 def spec_hash(spec: MultiFunctionSpec | Any, *, sampler: str = "mc") -> str:

@@ -62,10 +62,11 @@ from repro.distributed.fault_tolerance import StepWatchdog, run_with_restarts
 from repro.obs import Observability
 from repro.obs import clock as _clock
 from repro.service.api import (Backpressure, IntegrationRequest,
-                               IntegrationResult)
+                               IntegrationResult, SweepRequest, SweepResult)
 from repro.service.batcher import InFlightWave, RoundBatcher, WorkItem
 from repro.service.cache import CacheEntry, ResultCache
-from repro.service.canonical import canonical_family, family_hash
+from repro.service.canonical import (DEFAULT_SWEEP_SLICE, canonical_family,
+                                     family_hash, sweep_slices)
 from repro.service.store import DurableStore
 
 
@@ -94,14 +95,25 @@ class EngineStats:
         return self.items_requested - self.items_executed
 
 
+@dataclasses.dataclass(frozen=True)
+class _SweepInfo:
+    """Grid geometry a sweep ticket needs to assemble its result."""
+    grid_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    n_points: int
+    slice_sizes: tuple[int, ...]   # points per canonical slice, in order
+    slice_names: tuple[str, ...]
+
+
 @dataclasses.dataclass
 class _Pending:
     ticket: int
-    request: IntegrationRequest
+    request: IntegrationRequest | SweepRequest
     entries: list[CacheEntry]
     event: threading.Event
     result: IntegrationResult | None = None
     new_rounds_scheduled: bool = False
+    sweep: _SweepInfo | None = None
 
 
 class IntegrationEngine:
@@ -119,6 +131,7 @@ class IntegrationEngine:
                  state_dir: str | None = None,
                  compact_on_start: bool = False,
                  store_fsync: bool = True,
+                 sweep_slice_points: int = DEFAULT_SWEEP_SLICE,
                  obs: Observability | None = None):
         # telemetry first: every layer below receives the same bundle
         self.obs = obs if obs is not None else Observability.disabled()
@@ -154,6 +167,11 @@ class IntegrationEngine:
                                     "round_samples": int(round_samples)})
             if compact_on_start:
                 self.cache.snapshot_to_store()
+        if int(sweep_slice_points) < 1:
+            raise ValueError("sweep_slice_points must be >= 1")
+        # part of the dedupe contract: engines chunking at different
+        # quanta never share sweep streams (see canonical.sweep_slices)
+        self.sweep_slice_points = int(sweep_slice_points)
         self.max_pending = int(max_pending)
         self.max_rounds_per_wave = int(max_rounds_per_wave)
         if max_items_per_wave is not None and int(max_items_per_wave) <= 0:
@@ -193,23 +211,82 @@ class IntegrationEngine:
     def running(self) -> bool:
         return self._worker is not None and self._worker.is_alive()
 
-    def submit(self, request: IntegrationRequest, *, block: bool = True,
-               timeout: float | None = None) -> int:
+    def submit(self, request: IntegrationRequest | SweepRequest, *,
+               block: bool = True, timeout: float | None = None) -> int:
         """Register a request; returns a ticket for :meth:`poll`/:meth:`result`.
 
-        Pure cache hits complete inline (no waiting, no launches, and no
-        pending-table space needed).  Otherwise, when the pending table
-        is full, blocks until space frees up — or raises
-        :class:`Backpressure` with ``block=False``.  A rejected submit
-        allocates nothing: counter-space ranges are only consumed once
-        the request is accepted.
+        Accepts both request shapes — a :class:`SweepRequest` dispatches
+        to :meth:`submit_sweep`.  Pure cache hits complete inline (no
+        waiting, no launches, and no pending-table space needed).
+        Otherwise, when the pending table is full, blocks until space
+        frees up — or raises :class:`Backpressure` with ``block=False``.
+        A rejected submit allocates nothing: counter-space ranges are
+        only consumed once the request is accepted.
         """
+        if isinstance(request, SweepRequest):
+            return self.submit_sweep(request, block=block, timeout=timeout)
         canon_fams = []
         for fam in request.families:
             canon = canonical_family(fam)
             chash = f"{family_hash(canon, canonicalize=False)}:{request.sampler}"
             canon_fams.append((chash, canon))
+        return self._submit_canonical(request, canon_fams, block=block,
+                                      timeout=timeout)
 
+    def submit_sweep(self, request: SweepRequest, *, block: bool = True,
+                     timeout: float | None = None) -> int:
+        """Register a parameter sweep; returns a ticket like :meth:`submit`.
+
+        The grid canonicalizes into fixed ``sweep_slice_points``-sized
+        slices of swept families (``canonical.sweep_slices``) — each
+        slice one cache stream, so counter-space placement, top-up,
+        persistence and the STR001–006 invariants apply per slice
+        unchanged, and an overlapping sweep from another client dedupes
+        onto the shared slices.  When the template names a registered
+        kernel form, the (dim, sampler, compactified, sweep) capability
+        is checked here, eagerly, with ``registry.lookup(...,
+        required=True)`` — a sweep the fused path cannot serve fails at
+        submit with the nearest supported combo named, instead of
+        silently falling back for 10^5 points.
+        """
+        with self.obs.span("sweep_plan", template=request.template.name,
+                           axes=len(request.grid)):
+            fams, shape, axis_names = sweep_slices(
+                request.template, request.grid,
+                slice_points=self.sweep_slice_points)
+            probe = fams[0]
+            if probe.kernel is not None:
+                from repro.kernels import registry
+                if registry.form(probe.kernel) is not None:
+                    registry.lookup(probe.kernel, dim=probe.dim,
+                                    sampler=request.sampler,
+                                    compactified=probe.compact,
+                                    sweep=probe.swept, required=True)
+            canon_fams = [
+                (f"{family_hash(f, canonicalize=False)}:{request.sampler}", f)
+                for f in fams]
+        n_points = int(np.prod(shape))
+        shared = sum(1 for chash, f in canon_fams
+                     if self.cache.get(chash, f) is not None)
+        self.obs.m["sweep_submitted"].inc()
+        self.obs.m["sweep_points"].inc(n_points)
+        if shared:
+            self.obs.m["sweep_slices"].inc(shared, outcome="shared")
+        if len(canon_fams) - shared:
+            self.obs.m["sweep_slices"].inc(len(canon_fams) - shared,
+                                           outcome="new")
+        sweep = _SweepInfo(grid_shape=shape, axis_names=axis_names,
+                           n_points=n_points,
+                           slice_sizes=tuple(f.n_fn for f in fams),
+                           slice_names=tuple(f.name for f in fams))
+        return self._submit_canonical(request, canon_fams, block=block,
+                                      timeout=timeout, sweep=sweep)
+
+    def _submit_canonical(self, request, canon_fams, *, block: bool,
+                          timeout: float | None,
+                          sweep: _SweepInfo | None = None) -> int:
+        """Shared tail of :meth:`submit`/:meth:`submit_sweep`: cache-hit
+        peek, pending-table admission, allocation."""
         # hit path needs no allocation: all entries must already exist
         # (a persisted stream from a previous process counts — passing
         # the family lets the cache rehydrate it, so a warm *restart*
@@ -223,7 +300,7 @@ class IntegrationEngine:
                     ticket = self._new_ticket()
                     pend = _Pending(ticket=ticket, request=request,
                                     entries=list(peek),
-                                    event=threading.Event())
+                                    event=threading.Event(), sweep=sweep)
                     self.stats.cache_hits += 1
                     self.obs.m["cache_requests"].inc(outcome="hit")
                     self._finish(pend, served_from_cache=True)
@@ -241,7 +318,7 @@ class IntegrationEngine:
                        for chash, canon in canon_fams]
             ticket = self._new_ticket()
             pend = _Pending(ticket=ticket, request=request, entries=entries,
-                            event=threading.Event())
+                            event=threading.Event(), sweep=sweep)
             if self._meets(pend):     # became satisfiable while we waited
                 self.stats.cache_hits += 1
                 self.obs.m["cache_requests"].inc(outcome="hit")
@@ -269,6 +346,51 @@ class IntegrationEngine:
         """
         with self._lock:
             return self._results.get(ticket)
+
+    def sweep_partial(self, ticket: int) -> SweepResult:
+        """Per-point snapshot of a sweep, streamed as rounds complete.
+
+        Non-blocking: for a finished sweep this is exactly the final
+        :class:`SweepResult`; while in flight it carries the current
+        estimate of every point whose slice has deposited at least one
+        round (``points_done`` marks them; undone points hold NaN means
+        and inf stderrs) with ``complete=False``.  Slices finish in
+        counter order within a wave, so a client can consume a large
+        sweep incrementally instead of blocking for the whole grid.
+        """
+        with self._lock:
+            res = self._results.get(ticket)
+            if res is None:
+                pend = self._pending.get(ticket)
+                if pend is None:
+                    raise KeyError(f"unknown ticket {ticket}")
+                if pend.sweep is None:
+                    raise TypeError(f"ticket {ticket} is not a sweep")
+                sw = pend.sweep
+                means, errs, done = [], [], []
+                for entry, size in zip(pend.entries, sw.slice_sizes):
+                    if entry.rounds_done > 0:
+                        snap = entry.finalize()
+                        means.append(np.asarray(snap.mean))
+                        errs.append(np.asarray(snap.stderr))
+                        done.append(np.ones(size, bool))
+                    else:
+                        means.append(np.full(size, np.nan, np.float32))
+                        errs.append(np.full(size, np.inf, np.float32))
+                        done.append(np.zeros(size, bool))
+                return SweepResult(
+                    means=np.concatenate(means),
+                    stderrs=np.concatenate(errs),
+                    n_per_family=tuple(e.n for e in pend.entries),
+                    names=sw.slice_names, served_from_cache=False,
+                    ticket=ticket,
+                    stream_ids=tuple(e.chash for e in pend.entries),
+                    grid_shape=sw.grid_shape, axis_names=sw.axis_names,
+                    n_points=sw.n_points,
+                    points_done=np.concatenate(done), complete=False)
+        if not isinstance(res, SweepResult):
+            raise TypeError(f"ticket {ticket} is not a sweep")
+        return res
 
     def release(self, ticket: int) -> None:
         """Drop a finished result the client no longer needs."""
@@ -479,12 +601,24 @@ class IntegrationEngine:
             res = entry.finalize()
             means.append(np.asarray(res.mean))
             errs.append(np.asarray(res.stderr))
-        pend.result = IntegrationResult(
-            means=np.concatenate(means), stderrs=np.concatenate(errs),
-            n_per_family=tuple(e.n for e in pend.entries),
-            names=tuple(f.name for f in pend.request.families),
-            served_from_cache=served_from_cache, ticket=pend.ticket,
-            stream_ids=tuple(e.chash for e in pend.entries))
+        if pend.sweep is not None:
+            sw = pend.sweep
+            pend.result = SweepResult(
+                means=np.concatenate(means), stderrs=np.concatenate(errs),
+                n_per_family=tuple(e.n for e in pend.entries),
+                names=sw.slice_names,
+                served_from_cache=served_from_cache, ticket=pend.ticket,
+                stream_ids=tuple(e.chash for e in pend.entries),
+                grid_shape=sw.grid_shape, axis_names=sw.axis_names,
+                n_points=sw.n_points,
+                points_done=np.ones(sw.n_points, bool), complete=True)
+        else:
+            pend.result = IntegrationResult(
+                means=np.concatenate(means), stderrs=np.concatenate(errs),
+                n_per_family=tuple(e.n for e in pend.entries),
+                names=tuple(f.name for f in pend.request.families),
+                served_from_cache=served_from_cache, ticket=pend.ticket,
+                stream_ids=tuple(e.chash for e in pend.entries))
         self._results[pend.ticket] = pend.result
         while len(self._results) > self.max_retained_results:
             self._results.popitem(last=False)

@@ -149,8 +149,10 @@ class TestRegisteredForms:
         assert contracts.check_registered_forms() == []
 
     def test_every_advertised_combo_is_covered(self):
-        # 100% coverage: every (sampler, compactified, probe-dim) combo a
-        # form claims to support is traced by check_form
+        # 100% coverage: every (sampler, compactified, swept, probe-dim)
+        # combo a form claims to support is traced by check_form; swept
+        # probes the full sweep_cols name set (subsets substitute fewer
+        # columns through identical machinery)
         for form in registry.forms():
             combos = set(contracts._combos(form))
             assert combos, f"{form.name} advertises no workable combo"
@@ -159,9 +161,25 @@ class TestRegisteredForms:
                     if compact and not form.supports_compactified:
                         continue
                     for dim in contracts.PROBE_DIMS:
-                        if form.supports(dim=dim, sampler=sampler,
-                                         compactified=compact):
-                            assert (sampler, compact, dim) in combos
+                        sweeps = [()]
+                        if form.supports_swept:
+                            sweeps.append(contracts._full_sweep(form, dim))
+                        for swept in sweeps:
+                            if form.supports(dim=dim, sampler=sampler,
+                                             compactified=compact,
+                                             sweep=swept):
+                                assert (sampler, compact, swept,
+                                        dim) in combos
+
+    def test_swept_combos_probed_for_sweepable_forms(self):
+        # every builtin form declares sweep_cols, so each contributes
+        # swept combos and check_form traces the KCT005 composition
+        for form in registry.forms():
+            if not form.supports_swept:
+                continue
+            swept_combos = [c for c in contracts._combos(form) if c[2]]
+            assert swept_combos, f"{form.name} has sweep_cols but no " \
+                                 "swept combo was enumerated"
 
     def test_builtin_forms_share_uniform_buckets(self):
         assert contracts.check_bucket_uniformity(registry.forms()) == []

@@ -1,0 +1,42 @@
+"""Docs stay honest: every fenced python block in docs/*.md must parse,
+and every import it names must resolve against the current tree.
+
+The architecture documents quote real entry points (``from repro.service
+import SweepRequest``, ``registry.lookup(...)``, rule-id tables...); a
+rename that orphans a doc snippet should fail CI, not wait for a reader
+to trip over it.  Full execution is out of scope — blocks may launch
+kernels or spin up engines — so only the import statements of each
+block are executed; the rest is syntax-checked via ``ast.parse``.
+"""
+
+import ast
+import pathlib
+import re
+
+import pytest
+
+DOCS = pathlib.Path(__file__).resolve().parents[2] / "docs"
+_FENCE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def _blocks():
+    out = []
+    for md in sorted(DOCS.glob("*.md")):
+        for i, m in enumerate(_FENCE.finditer(md.read_text())):
+            out.append(pytest.param(m.group(1), id=f"{md.name}:block{i}"))
+    return out
+
+
+def test_docs_exist_and_have_blocks():
+    assert (DOCS / "architecture.md").is_file()
+    assert (DOCS / "sweeps.md").is_file()
+    assert len(_blocks()) > 0
+
+
+@pytest.mark.parametrize("source", _blocks())
+def test_block_parses_and_imports_resolve(source):
+    tree = ast.parse(source)          # syntax of the whole block
+    imports = [n for n in tree.body
+               if isinstance(n, (ast.Import, ast.ImportFrom))]
+    mod = ast.Module(body=imports, type_ignores=[])
+    exec(compile(mod, "<doc-block>", "exec"), {})  # imports must resolve

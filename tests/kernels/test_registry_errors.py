@@ -1,0 +1,70 @@
+"""Registry miss diagnostics: lookups name what they wanted and what is.
+
+``registry.lookup`` historically returned ``None`` on any capability
+miss so callers could fall back to the chunked path; ``required=True``
+callers (the sweep planner, which has no fallback worth hiding) instead
+get a ValueError that names the form, the requested capability combo
+and the nearest combo the registry *does* serve — not a bare KeyError.
+"""
+
+import pytest
+
+from repro.kernels import registry
+
+
+def test_lookup_miss_returns_none_by_default():
+    assert registry.lookup("no_such_form", dim=3) is None
+    assert registry.lookup("mc_eval_harmonic", dim=3,
+                           sweep=("nope",)) is None
+
+
+def test_lookup_hit_with_sweep_capability():
+    impl = registry.lookup("mc_eval_harmonic", dim=3, sweep=("a", "b"))
+    assert callable(impl)
+    assert callable(registry.lookup("mc_eval_harmonic", dim=3,
+                                    sampler="sobol", compactified=True,
+                                    sweep=("a",)))
+
+
+def test_required_unknown_form_names_registry():
+    with pytest.raises(ValueError) as ei:
+        registry.lookup("no_such_form", dim=3, required=True)
+    msg = str(ei.value)
+    assert "no_such_form" in msg
+    assert "mc_eval_harmonic" in msg          # lists what IS registered
+
+
+def test_required_unsweepable_param_names_sweepable_set():
+    with pytest.raises(ValueError) as ei:
+        registry.lookup("mc_eval_harmonic", dim=3, sweep=("sigma",),
+                        required=True)
+    msg = str(ei.value)
+    assert "mc_eval_harmonic" in msg
+    assert "sigma" in msg and "not sweepable" in msg
+    # the nearest-supported hint names what the form CAN sweep
+    assert "nearest supported" in msg and "'a'" in msg and "'b'" in msg
+
+
+def test_required_bad_sampler_states_request_and_support():
+    with pytest.raises(ValueError) as ei:
+        registry.lookup("mc_eval_harmonic", dim=3, sampler="qmc",
+                        required=True)
+    msg = str(ei.value)
+    assert "'qmc'" in msg and "dim=3" in msg
+    assert "nearest supported" in msg
+
+
+def test_required_dim_overflow_reports_max_dim():
+    form = registry.form("mc_eval_harmonic")
+    with pytest.raises(ValueError) as ei:
+        registry.lookup("mc_eval_harmonic", dim=form.max_dim + 1,
+                        required=True)
+    assert f"max_dim {form.max_dim}" in str(ei.value)
+
+
+def test_impl_keyerror_lists_registry_and_sampler_naming():
+    with pytest.raises(KeyError) as ei:
+        registry.impl("no_such_impl")
+    msg = str(ei.value)
+    assert "no_such_impl" in msg
+    assert "<form>@<sampler>" in msg          # the naming-scheme hint

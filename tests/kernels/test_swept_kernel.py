@@ -1,0 +1,222 @@
+"""Swept families on the fused kernel path: cross-path parity.
+
+A parameter-grid sweep reaches the kernels as ONE swept family: the
+template's packed row plus per-point table columns, substituted into
+the effective parameter block in-kernel by a wrapper stage around the
+registered eval body (``template.swept_body`` — the sweep analogue of
+``template.compactified_body``).  The invariants asserted here:
+
+* **bit-identity** — the fused swept family's per-round sums are byte
+  identical to evaluating each grid point as its own single-function
+  family at the matching global function id, for mc and sobol and for
+  finite and compactified (infinite-domain) templates: same effective
+  parameters, and counters depend only on (global fn id, sample id);
+* **chunked parity** — the swept family evaluates on the chunked JAX
+  path (table merged into the base params) to the same sums up to f32
+  fold order;
+* **layout** — ``sweep_col_map`` / ``packed_cols`` describe the
+  ``[base][sweep][transform]`` column layout consistently, and reject
+  un-sweepable parameters and width mismatches at build time;
+* **construction** — ``IntegrandFamily.swept_over`` validates its
+  table eagerly (single-function templates only, sweep before
+  compactify, axes must agree on the point count and per-point shape).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import family_sums, gaussian_family, genz, harmonic_family
+from repro.core import rng as rng_lib
+from repro.kernels import registry, template
+
+KEY = rng_lib.fold_key(23, 0)
+N = 4096 + 321   # off a block multiple: exercises the tail mask
+DIM = 3
+
+A = np.linspace(0.5, 2.0, 6).astype(np.float32)
+B = np.linspace(-1.0, 1.0, 6).astype(np.float32)
+SIGMA = np.linspace(0.6, 1.8, 6).astype(np.float32)
+
+
+def _swept(maker, **table):
+    return maker(1, DIM).swept_over(table)
+
+
+def _points(maker, **table):
+    n_pts = len(next(iter(table.values())))
+    return [maker(1, DIM, **{k: np.asarray(v[j:j + 1]) for k, v in
+                             table.items()})
+            for j in range(n_pts)]
+
+
+def harmonic_half(n, dim, **kw):
+    return harmonic_family(n, dim, lo=0.0, hi=np.inf, **kw)
+
+
+# -- fused swept family vs per-point launches ---------------------------------
+
+@pytest.mark.parametrize("sampler", ["mc", "sobol"])
+def test_swept_bit_identical_to_per_point(sampler):
+    """One fused launch over the grid == one launch per point, byte for
+    byte, when the global function ids line up."""
+    sw = _swept(harmonic_family, a=A, b=B)
+    assert sw.n_fn == len(A) and sw.swept == ("a", "b")
+    template.reset_launch_count()
+    fused = family_sums(sw, N, KEY, use_kernel=True, sampler=sampler)
+    assert template.launch_count() == 1, "swept family fell back"
+    for j, pt in enumerate(_points(harmonic_family, a=A, b=B)):
+        one = family_sums(pt, N, KEY, fn_offset=j, use_kernel=True,
+                          sampler=sampler)
+        np.testing.assert_array_equal(np.asarray(fused.s1)[j],
+                                      np.asarray(one.s1)[0])
+        np.testing.assert_array_equal(np.asarray(fused.s2)[j],
+                                      np.asarray(one.s2)[0])
+
+
+@pytest.mark.parametrize("sampler", ["mc", "sobol"])
+@pytest.mark.parametrize("lo", [-np.inf, 0.0])
+def test_compactified_swept_bit_identical(lo, sampler):
+    """Sweep composes with compactification — the kernel wraps
+    ``compactified_body(swept_body(body))`` over a
+    ``[base][sweep][transform]`` packed row — without breaking
+    bit-identity on fully- and half-infinite domains."""
+    def maker(n, dim, **kw):
+        return gaussian_family(n, dim, lo=lo, hi=np.inf, **kw)
+    sw = _swept(maker, sigma=SIGMA).compactified()
+    assert sw.compact and sw.swept == ("sigma",)
+    template.reset_launch_count()
+    fused = family_sums(sw, N, KEY, use_kernel=True, sampler=sampler)
+    assert template.launch_count() == 1, "compactified sweep fell back"
+    for j, pt in enumerate(_points(maker, sigma=SIGMA)):
+        one = family_sums(pt.compactified(), N, KEY, fn_offset=j,
+                          use_kernel=True, sampler=sampler)
+        np.testing.assert_array_equal(np.asarray(fused.s1)[j],
+                                      np.asarray(one.s1)[0])
+        np.testing.assert_array_equal(np.asarray(fused.s2)[j],
+                                      np.asarray(one.s2)[0])
+
+
+def test_harmonic_half_infinite_swept_same_magnitude():
+    """Harmonic over [0, inf)^d: the integral diverges and the dominant
+    samples evaluate cos at phases ~1e8, where transcendental expansion
+    differences between two compiled programs alone move individual
+    sample values — elementwise bit-parity across program boundaries is
+    ill-posed for it (same caveat as the non-swept compactified test).
+    What IS well-posed: the Jacobian-amplified magnitude, which pins
+    the composed sweep+transform stages to ~1e-7 of the per-point path
+    without asserting meaningless digits."""
+    sw = _swept(harmonic_half, a=A).compactified()
+    fused = family_sums(sw, N, KEY, use_kernel=True)
+    for j, pt in enumerate(_points(harmonic_half, a=A)):
+        one = family_sums(pt.compactified(), N, KEY, fn_offset=j,
+                          use_kernel=True)
+        np.testing.assert_allclose(np.asarray(fused.s1)[j],
+                                   np.asarray(one.s1)[0], rtol=1e-5)
+
+
+def test_vector_valued_axis_bit_identical():
+    """A dim-wide axis (harmonic's k) packs one table column per
+    component and still substitutes bit-identically."""
+    k = np.stack([np.full(DIM, 7.0 + j, np.float32) for j in range(4)])
+    sw = _swept(harmonic_family, k=k)
+    fused = family_sums(sw, N, KEY, use_kernel=True)
+    for j in range(4):
+        pt = harmonic_family(1, DIM, k=k[j:j + 1])
+        one = family_sums(pt, N, KEY, fn_offset=j, use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(fused.s1)[j],
+                                      np.asarray(one.s1)[0])
+
+
+def test_swept_kernel_matches_chunked():
+    """The chunked path merges the table into the base params in plain
+    JAX — both paths draw the same counters, so sums agree up to f32
+    association order."""
+    sw = _swept(harmonic_family, a=A, b=B)
+    k = family_sums(sw, N, KEY, use_kernel=True)
+    c = family_sums(sw, N, KEY, use_kernel=False, chunk=1024)
+    np.testing.assert_allclose(np.asarray(k.s1), np.asarray(c.s1),
+                               rtol=5e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(k.s2), np.asarray(c.s2),
+                               rtol=5e-3, atol=1e-2)
+
+
+def test_swept_body_identity_is_shared():
+    """Same (body, base_cols, col_map) -> the same wrapped body object,
+    so fused buckets dedupe and jit cache keys stay stable."""
+    a = template.body_and_packed(registry.form("mc_eval_harmonic"),
+                                 _swept(harmonic_family, a=A))
+    b = template.body_and_packed(registry.form("mc_eval_harmonic"),
+                                 _swept(harmonic_family, a=2 * A))
+    assert a[0] is b[0]
+
+
+# -- column layout ------------------------------------------------------------
+
+def test_sweep_col_map_and_packed_cols():
+    form = registry.form("mc_eval_harmonic")
+    sw = _swept(harmonic_family, a=A, b=B)
+    assert template.sweep_col_map(form, sw) == (0, 1)
+    assert template.packed_cols(form, sw) == form.n_cols(DIM) + 2
+    csw = _swept(harmonic_half, a=A).compactified()
+    assert template.packed_cols(form, csw) == form.n_cols(DIM) + 1 + 2 * DIM
+    _, packed = template.body_and_packed(form, csw)
+    assert packed.shape == (len(A), template.packed_cols(form, csw))
+
+
+def test_sweep_col_map_rejects_unsweepable_name():
+    """genz_osc's "u" enters the packed row only through u[:, :1] — the
+    form excludes it from sweep_cols, and the layout builder says so."""
+    fam, _ = genz.oscillatory(1, DIM)
+    sw = fam.swept_over({"u": np.linspace(0.1, 0.9, 4)[:, None]
+                         * np.ones(DIM, np.float32)})
+    with pytest.raises(ValueError, match="cannot sweep parameter 'u'"):
+        template.sweep_col_map(registry.form("mc_eval_genz_osc"), sw)
+
+
+def test_sweep_col_map_rejects_width_mismatch():
+    """A table leaf whose per-point width disagrees with the form's
+    column map fails at build time, not inside the kernel."""
+    import dataclasses
+    form = registry.form("mc_eval_harmonic")
+    bad = dataclasses.replace(form, name="bad",
+                              sweep_cols=lambda dim: {"a": (0, 1)})
+    sw = _swept(harmonic_family, a=A)
+    with pytest.raises(ValueError, match="packs 1 column"):
+        template.sweep_col_map(bad, sw)
+
+
+def test_sweep_col_map_requires_sweepable_form():
+    import dataclasses
+    form = registry.form("mc_eval_harmonic")
+    none = dataclasses.replace(form, name="none", sweep_cols=None)
+    with pytest.raises(ValueError, match="does not support swept"):
+        template.sweep_col_map(none, _swept(harmonic_family, a=A))
+
+
+# -- swept_over construction --------------------------------------------------
+
+def test_swept_over_validates():
+    tmpl = harmonic_family(1, DIM)
+    with pytest.raises(ValueError, match="at least one parameter"):
+        tmpl.swept_over({})
+    with pytest.raises(ValueError, match="not in template params"):
+        tmpl.swept_over({"nope": A})
+    with pytest.raises(ValueError, match="single function"):
+        harmonic_family(2, DIM).swept_over({"a": A})
+    with pytest.raises(ValueError, match="before compactifying"):
+        harmonic_half(1, DIM).compactified().swept_over({"a": A})
+    with pytest.raises(ValueError, match="disagree on n_points"):
+        tmpl.swept_over({"a": A, "b": B[:3]})
+    with pytest.raises(ValueError, match="per-point shape"):
+        tmpl.swept_over({"k": np.ones((4, DIM + 1), np.float32)})
+
+
+def test_swept_over_chunked_semantics():
+    """Row j of the swept family IS the template with table[j] merged
+    over its params — checked on plain eval, no kernel involved."""
+    sw = _swept(harmonic_family, a=A)
+    x = np.random.default_rng(0).random((len(A), 5, DIM)).astype(np.float32)
+    got = np.asarray(sw.eval_batch(x))
+    for j, pt in enumerate(_points(harmonic_family, a=A)):
+        want = np.asarray(pt.eval_batch(x[j:j + 1]))[0]
+        np.testing.assert_allclose(got[j], want, rtol=1e-6)

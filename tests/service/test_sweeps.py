@@ -1,0 +1,181 @@
+"""Parameter-grid sweeps through the service: one request, many points.
+
+A ``SweepRequest`` names a single-function template and a grid; the
+engine canonicalizes the grid into fixed-size slices of swept families
+(``canonical.sweep_slices``), so the whole scan runs on the fused
+swept-kernel path and cache streams key per (family, grid-slice).  The
+invariants asserted here:
+
+* **end to end** — a sweep returns per-point estimates in row-major
+  grid order, bit-identical to submitting each grid point as its own
+  request on a fresh engine (same global function ids);
+* **sub-grid dedupe** — a second sweep extending the slowest axis pays
+  launches only for its NEW canonical slices and reproduces the shared
+  prefix byte for byte; a verbatim resubmit is a pure cache hit and a
+  budget top-up pays only the delta rounds (STR semantics carry over);
+* **streaming** — ``sweep_partial`` snapshots an in-flight sweep
+  without blocking: undone points hold NaN/inf under a ``points_done``
+  mask, finished rounds surface before the ticket completes;
+* **durability** — sweep streams journal and restart like any other
+  stream: a post-kill engine serves the same sweep with zero launches;
+* **eager capability gating** — a sweep over a parameter the kernel
+  form cannot substitute fails at submit time with the registry's
+  capability diagnostic, not at first wave.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import genz, harmonic_family
+from repro.kernels import template
+from repro.service import IntegrationClient, SweepRequest
+from repro.service.api import SweepResult
+
+R = 4096
+
+A4 = np.linspace(0.5, 2.0, 4).astype(np.float32)
+B2 = np.asarray([-0.5, 1.5], np.float32)
+
+
+def _drain(engine):
+    while engine.step():
+        pass
+
+
+@pytest.mark.parametrize("sampler", ["mc", "sobol"])
+def test_sweep_end_to_end_bit_identical_to_per_point(make_engine, sampler):
+    res = IntegrationClient(make_engine()).sweep(
+        harmonic_family(1, 2), {"a": A4, "b": B2}, n_samples=R,
+        sampler=sampler)
+    assert isinstance(res, SweepResult) and res.complete
+    assert res.grid_shape == (4, 2) and res.axis_names == ("a", "b")
+    assert res.n_points == 8 == res.means.shape[0]
+    assert res.points_done.all() and np.isfinite(res.means).all()
+
+    # fresh engine, same seed: sequential per-point requests draw the
+    # same global function ids 0..7 -> byte-for-byte agreement
+    per = IntegrationClient(make_engine())
+    flat = []
+    for ai in A4:                      # sorted axes, last ("b") fastest
+        for bi in B2:
+            one = per.integrate(
+                [harmonic_family(1, 2, a=np.asarray([ai]),
+                                 b=np.asarray([bi]))],
+                n_samples=R, sampler=sampler)
+            flat.append(one.means[0])
+    np.testing.assert_array_equal(
+        np.asarray(flat, res.means.dtype), res.means)
+
+
+def test_overlapping_sweeps_dedupe_at_subgrid_level(make_engine):
+    engine = make_engine(sweep_slice_points=4)
+    client = IntegrationClient(engine)
+    template.reset_launch_count()
+    first = client.sweep(harmonic_family(1, 2), {"a": A4, "b": B2},
+                         n_samples=R)
+    cold_launches = template.launch_count()
+    assert cold_launches >= 1
+
+    # extend the slowest axis ("a"): the first 8 points re-enumerate
+    # sweep A's two canonical slices exactly
+    a8 = np.concatenate([A4, A4 + 2.0])
+    template.reset_launch_count()
+    second = client.sweep(harmonic_family(1, 2), {"a": a8, "b": B2},
+                          n_samples=R)
+    assert second.n_points == 16
+    # same bucket, same budget: the two NEW slices fit the same wave
+    # shape the cold sweep needed, never more
+    assert 1 <= template.launch_count() <= cold_launches
+    np.testing.assert_array_equal(second.means[:8], first.means)
+
+    # verbatim resubmit: every slice is already at precision
+    template.reset_launch_count()
+    warm = client.sweep(harmonic_family(1, 2), {"a": A4, "b": B2},
+                        n_samples=R)
+    assert template.launch_count() == 0 and warm.served_from_cache
+    np.testing.assert_array_equal(warm.means, first.means)
+
+    # budget top-up: existing sweep streams extend, means change
+    topped = client.sweep(harmonic_family(1, 2), {"a": A4, "b": B2},
+                          n_samples=2 * R)
+    assert not topped.served_from_cache
+    assert all(n >= 2 * R for n in topped.n_per_family)
+
+
+def test_sweep_partial_streams_before_completion(make_engine):
+    engine = make_engine(max_rounds_per_wave=1)
+    ticket = engine.submit(SweepRequest.make(
+        harmonic_family(1, 2), {"a": A4, "b": B2}, n_samples=2 * R))
+
+    # nothing deposited yet: masked-out NaN means, inf stderrs
+    snap = engine.sweep_partial(ticket)
+    assert not snap.complete and not snap.points_done.any()
+    assert np.isnan(snap.means).all() and np.isinf(snap.stderrs).all()
+
+    # one single-round wave: every slice has a first estimate but the
+    # 2-round budget is not met -> streamed, still incomplete
+    assert engine.step()
+    mid = engine.sweep_partial(ticket)
+    assert not mid.complete and mid.points_done.all()
+    assert np.isfinite(mid.means).all()
+    assert engine.poll(ticket) is None
+
+    _drain(engine)
+    done = engine.sweep_partial(ticket)
+    assert done.complete and done.points_done.all()
+    np.testing.assert_array_equal(done.means, engine.poll(ticket).means)
+
+
+def test_sweep_partial_rejects_non_sweep_tickets(make_engine):
+    from repro.service import IntegrationRequest
+    engine = make_engine()
+    plain = engine.submit(IntegrationRequest.make(
+        [harmonic_family(2, 2)], n_samples=R))
+    with pytest.raises(TypeError, match="not a sweep"):
+        engine.sweep_partial(plain)
+    _drain(engine)
+    with pytest.raises(TypeError, match="not a sweep"):
+        engine.sweep_partial(plain)
+    with pytest.raises(KeyError, match="unknown ticket"):
+        engine.sweep_partial(10_000)
+
+
+def test_sweep_streams_survive_a_kill(make_engine, tmp_path):
+    grid = {"a": A4, "b": B2}
+    first = IntegrationClient(make_engine(state_dir=str(tmp_path))).sweep(
+        harmonic_family(1, 2), grid, n_samples=R)
+    # no close(): the journal is all that survives the "SIGKILL"
+    e2 = make_engine(state_dir=str(tmp_path))
+    template.reset_launch_count()
+    again = IntegrationClient(e2).sweep(harmonic_family(1, 2), grid,
+                                        n_samples=R)
+    assert template.launch_count() == 0 and again.served_from_cache
+    np.testing.assert_array_equal(first.means, again.means)
+    assert again.grid_shape == (4, 2) and again.complete
+
+
+def test_unsweepable_parameter_fails_at_submit(make_engine):
+    """genz_osc's "u" reaches the packed row only as u[:, :1]; the form
+    excludes it from sweep_cols, and the engine surfaces the registry
+    diagnostic before any wave runs."""
+    tmpl, _ = genz.oscillatory(1, 2)
+    u = np.linspace(0.1, 0.9, 4)[:, None] * np.ones(2, np.float32)
+    req = SweepRequest.make(tmpl, {"u": u}, n_samples=R)
+    with pytest.raises(ValueError, match="not sweepable"):
+        make_engine().submit(req)
+
+
+def test_sweep_request_validation():
+    tmpl = harmonic_family(1, 2)
+    with pytest.raises(ValueError, match="single function"):
+        SweepRequest.make(harmonic_family(2, 2), {"a": A4}, n_samples=R)
+    with pytest.raises(ValueError, match="at least one axis"):
+        SweepRequest.make(tmpl, {}, n_samples=R)
+    with pytest.raises(ValueError, match="not in"):
+        SweepRequest.make(tmpl, {"nope": A4}, n_samples=R)
+    with pytest.raises(ValueError, match="n_samples or target_stderr"):
+        SweepRequest.make(tmpl, {"a": A4})
+    with pytest.raises(ValueError, match="unknown sampler"):
+        SweepRequest.make(tmpl, {"a": A4}, n_samples=R, sampler="qmc")
+    with pytest.raises(ValueError, match="must be positive"):
+        SweepRequest.make(tmpl, {"a": A4}, n_samples=-1)
