@@ -1,0 +1,284 @@
+"""Chaos certification: the fault-matrix sweep behind the resilience
+claims (doubles as the CI gate via ``--smoke``).
+
+One workload, one seed, many injected failures.  A fault-free reference
+run pins the result digest; then every scenario in the matrix re-runs
+the identical workload with one :class:`~repro.service.FaultPlan`
+armed — a crash at each of the six pipeline stages, a failed WAL fsync,
+a torn journal write, a lost accelerator at dispatch, a NaN-poisoned
+transfer, a worker-thread death, and a stale-lease takeover — and must
+produce
+
+* the **bit-identical digest**: counter-addressed rounds make every
+  retried/salvaged wave recompute exactly what was lost, so chaos is
+  invisible in the estimates;
+* a **clean Layer-3 audit** (``repro.analysis.streams``): the state dir
+  the faulted run leaves behind passes the same determinism audit CI
+  runs on post-SIGKILL dirs (STR001-006);
+* **exact telemetry agreement**: ``zmc_faults_injected_total`` equals
+  the plan's fired-trigger count, ``zmc_retries_total`` summed over
+  stages equals ``EngineStats.restarts``, and
+  ``zmc_quarantined_streams_total`` equals the cache's quarantine list.
+
+Two scenarios gate *graceful degradation* rather than transparency:
+
+* ``quarantine`` — a stream poisoned three waves running must complete
+  its ticket as ``RequestFailed(reason="quarantined")`` while a healthy
+  sibling request in the same batch still serves bit-identically;
+* ``deadline`` — a request with a microscopic deadline budget must
+  complete as ``RequestFailed(reason="deadline")`` within a bounded
+  wall-clock multiple of the budget: failure is a *result*, never a
+  hung ticket.
+
+Wall-clock numbers are incidental here; the certification is the
+digest/audit/agreement triple per scenario, written as ``BENCH_9.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import gaussian_family, harmonic_family
+from repro.service import (FaultPlan, IntegrationEngine, IntegrationRequest,
+                           RequestFailed, RetryPolicy)
+from repro.service.resilience import DeadlineExceeded, RetryExhausted
+from repro.service.store import DurableStore
+
+# a retried wave should not serialize the bench on real backoff sleeps
+FAST_RETRY = RetryPolicy(max_attempts=3, base_delay=0.001, max_delay=0.01)
+
+
+def _workload(n_fn: int, rounds: int, round_samples: int):
+    return [
+        IntegrationRequest.make([harmonic_family(n_fn, 2)],
+                                n_samples=rounds * round_samples),
+        IntegrationRequest.make([gaussian_family(n_fn, 3)],
+                                n_samples=rounds * round_samples),
+        IntegrationRequest.make([harmonic_family(n_fn, 4)],
+                                n_samples=rounds * round_samples),
+    ]
+
+
+def _drive(engine, tickets, max_steps=500):
+    """Step-drive to completion; permanent failures complete tickets
+    (they surface to the sync driver too — swallow and keep going)."""
+    for _ in range(max_steps):
+        if all(engine.poll(t) is not None for t in tickets):
+            return [engine.poll(t) for t in tickets]
+        try:
+            engine.step()
+        except (RetryExhausted, DeadlineExceeded):
+            continue
+    raise AssertionError("workload did not complete (hung ticket?)")
+
+
+def _digest(results) -> str:
+    h = hashlib.sha256()
+    for res in results:
+        assert not res.failed, f"unexpected failure: {res}"
+        h.update(np.asarray(res.means).astype("<f4").tobytes())
+        h.update(np.asarray(res.stderrs).astype("<f4").tobytes())
+    return h.hexdigest()
+
+
+def _audit(state_dir: str) -> str:
+    from repro.analysis.streams import audit_state_dir
+    report = audit_state_dir(state_dir)
+    assert report.ok, (f"state dir {state_dir} failed the determinism "
+                       f"audit after chaos: {report.summary()}")
+    return report.summary()
+
+
+def _agreement(engine, plan) -> dict:
+    """The exact counter-vs-observable contracts, asserted."""
+    m = engine.obs.m
+    injected = sum(m["faults_injected"].value(stage=p)
+                   for p in dict.fromkeys(p for p, _ in plan.fired))
+    assert injected == len(plan.fired), \
+        f"faults_injected {injected} != fired {len(plan.fired)}"
+    retries = sum(m["retries"].value(stage=s)
+                  for s in ("wave", "launch", "deposit"))
+    assert retries == engine.stats.restarts, \
+        f"sum(retries) {retries} != stats.restarts {engine.stats.restarts}"
+    quarantined = m["quarantined_streams"].value()
+    assert quarantined == len(engine.cache.quarantined_streams()), \
+        "quarantine counter disagrees with the cache"
+    return {"faults_injected": injected, "retries": retries,
+            "restarts": engine.stats.restarts,
+            "quarantined": quarantined}
+
+
+def _run_scenario(name, plan, *, workdir, reqs, round_samples, seed,
+                  use_worker=False, stale_lease=False):
+    state = os.path.join(workdir, f"state_{name}")
+    if stale_lease:
+        # a crashed previous holder: unexpired leases from dead pids and
+        # expired leases are both taken over; model the expired case
+        os.makedirs(state, exist_ok=True)
+        with open(os.path.join(state, DurableStore.LEASE), "w",
+                  encoding="utf-8") as f:
+            json.dump({"token": "crashed-writer", "pid": 1,
+                       "acquired": time.time() - 7200,
+                       "expires": time.time() - 3600}, f)
+    eng = IntegrationEngine(seed=seed, round_samples=round_samples,
+                            max_rounds_per_wave=2, state_dir=state,
+                            retry_policy=FAST_RETRY, faults=plan)
+    t0 = time.time()
+    tickets = [eng.submit(r) for r in reqs]
+    if use_worker:
+        eng.start()
+        eng._worker.join(timeout=120.0)
+        assert not eng.running, "worker_crash fault never fired"
+    results = _drive(eng, tickets)
+    dt = time.time() - t0
+    digest = _digest(results)
+    agreement = _agreement(eng, plan)
+    assert plan.exhausted, \
+        f"{name}: not every configured trigger fired: {plan.spec()}"
+    if stale_lease:
+        with open(os.path.join(state, DurableStore.LEASE),
+                  encoding="utf-8") as f:
+            assert json.load(f)["pid"] == os.getpid(), "lease not taken over"
+    eng.stop()
+    audit = _audit(state)
+    return {"fault_plan": plan.spec(), "fired": sorted(plan.fired),
+            "digest": digest, "restarts": eng.stats.restarts,
+            "agreement": agreement, "audit": audit,
+            "wall_seconds": round(dt, 3)}
+
+
+def _quarantine_scenario(workdir, *, n_fn, round_samples, seed):
+    """A poisoned stream fails alone; its healthy sibling still serves."""
+    plan = FaultPlan({"transfer_nan": [0, 1, 2, 3, 4]})
+    state = os.path.join(workdir, "state_quarantine")
+    eng = IntegrationEngine(seed=seed, round_samples=round_samples,
+                            state_dir=state, retry_policy=FAST_RETRY,
+                            faults=plan)
+    poisoned = eng.submit(IntegrationRequest.make(
+        [harmonic_family(n_fn, 2)], n_samples=round_samples))
+    healthy = eng.submit(IntegrationRequest.make(
+        [gaussian_family(n_fn, 3)], n_samples=round_samples))
+    res_p, res_h = _drive(eng, [poisoned, healthy])
+    assert isinstance(res_p, RequestFailed) and res_p.reason == "quarantined"
+    assert not res_h.failed and np.isfinite(res_h.means).all()
+    agreement = _agreement(eng, plan)
+    assert agreement["quarantined"] == 1
+    eng.stop()
+    return {"fault_plan": plan.spec(), "failed_reason": res_p.reason,
+            "healthy_sibling_served": True, "agreement": agreement,
+            "audit": _audit(state)}
+
+
+def _deadline_scenario(workdir, *, n_fn, round_samples, seed):
+    """A doomed deadline completes as a failure, never a hung ticket."""
+    eng = IntegrationEngine(seed=seed, round_samples=round_samples,
+                            max_rounds_per_wave=1, retry_policy=FAST_RETRY)
+    req = IntegrationRequest.make([harmonic_family(n_fn, 2)],
+                                  n_samples=8 * round_samples,
+                                  deadline=0.001)
+    t0 = time.time()
+    res = _drive(eng, [eng.submit(req)])[0]
+    dt = time.time() - t0
+    assert isinstance(res, RequestFailed) and res.reason == "deadline"
+    assert eng.stats.deadline_expirations >= 1
+    # "no ticket hangs past its deadline": completion is bounded by the
+    # in-flight wave it had to finish, not by the remaining budget
+    assert dt < 60.0, f"deadline failure took {dt:.1f}s to surface"
+    return {"failed_reason": res.reason, "wall_seconds": round(dt, 3),
+            "deadline_expirations": eng.stats.deadline_expirations}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-fn", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="rounds per request (waves = rounds / 2)")
+    ap.add_argument("--round-samples", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + assert every gate (the CI mode)")
+    ap.add_argument("--json-out", default=None,
+                    help="write the certification record (BENCH_9.json)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n_fn, args.rounds, args.round_samples = 4, 3, 2048
+
+    workdir = tempfile.mkdtemp(prefix="chaos_bench_")
+    reqs = _workload(args.n_fn, args.rounds, args.round_samples)
+    run = dict(workdir=workdir, reqs=reqs, seed=args.seed,
+               round_samples=args.round_samples)
+
+    # the fault-free reference pins the digest every scenario must hit
+    baseline = _run_scenario("baseline", FaultPlan({}), **run)
+    print(f"baseline digest {baseline['digest'][:16]}...")
+
+    # 3 streams journal 3 alloc records before the first wave commit;
+    # WAL triggers index past them so the fault lands on deposit frames
+    matrix = {
+        "stage_plan": FaultPlan({"plan": 0}),
+        "stage_launch": FaultPlan({"launch": 0}),
+        "stage_device_execute": FaultPlan({"device_execute": 0}),
+        "stage_transfer": FaultPlan({"transfer": 1}),
+        "stage_deposit": FaultPlan({"deposit": 0}),
+        "stage_wal_commit": FaultPlan({"wal_commit": 3}),
+        "wal_fsync": FaultPlan({"wal_fsync": 3}),
+        "wal_torn_write": FaultPlan({"wal_torn_write": 3}),
+        "device_error": FaultPlan({"device_error": 0}),
+        "transfer_nan_transient": FaultPlan({"transfer_nan": 0}),
+    }
+    scenarios = {"baseline": baseline}
+    for name, plan in matrix.items():
+        scenarios[name] = _run_scenario(name, plan, **run)
+        ok = scenarios[name]["digest"] == baseline["digest"]
+        print(f"{name:24s} restarts={scenarios[name]['restarts']} "
+              f"digest {'==' if ok else '!='} baseline")
+        assert ok, f"{name}: digest diverged from the fault-free run"
+
+    scenarios["worker_crash"] = _run_scenario(
+        "worker_crash", FaultPlan({"worker_crash": 0}), use_worker=True,
+        **run)
+    assert scenarios["worker_crash"]["digest"] == baseline["digest"], \
+        "worker_crash: step()-salvaged digest diverged"
+    print("worker_crash             salvaged by step(), digest == baseline")
+
+    scenarios["lease_takeover"] = _run_scenario(
+        "lease_takeover", FaultPlan({}), stale_lease=True, **run)
+    assert scenarios["lease_takeover"]["digest"] == baseline["digest"]
+    print("lease_takeover           stale lease reclaimed, digest == baseline")
+
+    scenarios["quarantine"] = _quarantine_scenario(
+        workdir, n_fn=args.n_fn, round_samples=args.round_samples,
+        seed=args.seed)
+    print("quarantine               poisoned stream failed alone")
+
+    scenarios["deadline"] = _deadline_scenario(
+        workdir, n_fn=args.n_fn, round_samples=args.round_samples,
+        seed=args.seed)
+    print(f"deadline                 failed structured in "
+          f"{scenarios['deadline']['wall_seconds']}s")
+
+    payload = {"bench": "chaos", "seed": args.seed,
+               "round_samples": args.round_samples,
+               "rounds": args.rounds, "n_fn": args.n_fn,
+               "scenarios": scenarios}
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json_out}")
+    shutil.rmtree(workdir, ignore_errors=True)
+    print(f"chaos certification PASSED: {len(scenarios) - 1} fault "
+          f"scenarios, all digests bit-identical, all audits clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

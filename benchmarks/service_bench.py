@@ -68,7 +68,7 @@ import numpy as np
 from repro.core import ZMCMultiFunctions
 from repro.kernels import template
 from repro.launch.serve_integrals import demo_workload
-from repro.service import IntegrationEngine
+from repro.service import FAULT_POINTS, IntegrationEngine
 
 
 def _sequential(reqs, *, seed: int):
@@ -300,6 +300,29 @@ def _telemetry_phase(*, n_requests: int, n_fn: int, n_samples: int,
         metric = snap[name]["value"]
         assert metric == observable, (
             f"{name}={metric} disagrees with {source}={observable}")
+
+    # the resilience counters hold the same exactness contract (read
+    # through the handles: labelled series that never fired need no
+    # snapshot entry).  A fault-free run pins them all at zero except
+    # retries, which must equal the engine's own restart count.
+    m = obs.m
+    retries = sum(m["retries"].value(stage=s)
+                  for s in ("wave", "launch", "deposit"))
+    assert retries == engine.stats.restarts, (
+        f"zmc_retries_total={retries} disagrees with "
+        f"EngineStats.restarts={engine.stats.restarts}")
+    assert m["quarantined_streams"].value() == \
+        len(engine.cache.quarantined_streams()), \
+        "zmc_quarantined_streams_total disagrees with the cache"
+    assert m["deadline_expirations"].value() == \
+        engine.stats.deadline_expirations, \
+        "zmc_deadline_expirations_total disagrees with EngineStats"
+    fired = len(getattr(engine.faults, "fired", ()))
+    injected = sum(m["faults_injected"].value(stage=p)
+                   for p in FAULT_POINTS)
+    assert injected == fired, (
+        f"zmc_faults_injected_total={injected} disagrees with the "
+        f"fault plan's fired count {fired}")
 
     # (d) a stderr trajectory exists for every stream served
     for res in results:

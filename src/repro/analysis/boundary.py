@@ -28,6 +28,12 @@ in prose:
   latencies and fake-clock tests must all observe the same clock.
   Kernels/core stay wholly clock-free under the stricter PUR001;
   standalone launchers and ``distributed/`` are out of scope.
+* **RES001** — modules under ``repro/service/`` retry, back off and
+  sleep only through ``repro/service/resilience.py``: importing the
+  ad-hoc ``run_with_restarts`` loop or calling any ``.sleep(...)``
+  elsewhere in the service is flagged.  One policy object owns attempt
+  budgets, deterministic jitter and deadline clamping — scattered retry
+  loops are exactly how tickets end up hanging past their deadline.
 
 Escape hatch: append ``# analysis: ignore[RULE]`` (comma-separate for
 several rules) to the offending line.  Use it to *document* a deliberate
@@ -67,6 +73,14 @@ _IMPURE_MODULES = ("time", "random", "datetime")
 OBS_SCOPE_SEGMENTS = ("service", "obs")
 CLOCK_SHIM_SUFFIX = "obs/clock.py"
 
+# Path fragments marking retry-policy-scoped modules (RES001), and the
+# one file allowed to run retry loops and sleep inside them.
+RES_SCOPE_SEGMENTS = ("service",)
+RESILIENCE_SUFFIX = "service/resilience.py"
+
+# The ad-hoc retry entry point RES001 bans outside the policy module.
+_ADHOC_RETRY = "run_with_restarts"
+
 # Builtin calls that do host I/O.
 _IO_CALLS = ("open", "input")
 
@@ -99,6 +113,13 @@ def _in_obs_scope(path: str) -> bool:
     return any(seg in parts[:-1] for seg in OBS_SCOPE_SEGMENTS)
 
 
+def _in_res_scope(path: str) -> bool:
+    if path.endswith(RESILIENCE_SUFFIX):
+        return False     # the policy module itself retries and sleeps
+    parts = path.split("/")
+    return any(seg in parts[:-1] for seg in RES_SCOPE_SEGMENTS)
+
+
 def _dotted(node: ast.AST) -> str | None:
     """'a.b.c' for an Attribute/Name chain, None for anything else."""
     parts: list[str] = []
@@ -126,6 +147,7 @@ class _Checker(ast.NodeVisitor):
         self.shim = _is_boundary_shim(path)
         self.pure = _in_pure_scope(path)
         self.obs_scope = _in_obs_scope(path)
+        self.res_scope = _in_res_scope(path)
         self.found: list[Violation] = []
 
     def _flag(self, rule: str, node: ast.AST, message: str) -> None:
@@ -147,6 +169,15 @@ class _Checker(ast.NodeVisitor):
                     self._flag("BND002", node,
                                "import jax.shard_map via repro.compat, "
                                "not directly")
+        if self.res_scope:
+            for alias in node.names:
+                if alias.name == _ADHOC_RETRY:
+                    self._flag("RES001", node,
+                               f"import of {_ADHOC_RETRY!r} in a service "
+                               "module: retries go through "
+                               "repro.service.resilience.run_with_policy "
+                               "(one policy, deterministic jitter, "
+                               "deadline-aware)")
         self.generic_visit(node)
 
     def _check_module(self, node: ast.AST, mod: str) -> None:
@@ -198,6 +229,11 @@ class _Checker(ast.NodeVisitor):
                 self._flag("OBS001", node,
                            f"wall-clock read {chain!r} in a service/obs "
                            "module: use repro.obs.clock")
+            if self.res_scope and chain.endswith("." + _ADHOC_RETRY):
+                self._flag("RES001", node,
+                           f"reference to {chain!r} in a service module: "
+                           "retries go through "
+                           "repro.service.resilience.run_with_policy")
             # a complete chain is all Names/Attributes: recursing would
             # re-flag its sub-chains (jax.experimental.pallas AND
             # jax.experimental) on the same line
@@ -206,6 +242,12 @@ class _Checker(ast.NodeVisitor):
 
     # -- calls ----------------------------------------------------------------
     def visit_Call(self, node: ast.Call) -> None:
+        if (self.res_scope and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "sleep"):
+            self._flag("RES001", node,
+                       "ad-hoc sleep in a service module: backoff pauses "
+                       "belong to repro.service.resilience (jittered, "
+                       "clamped to the request deadline)")
         if self.pure:
             if isinstance(node.func, ast.Name) and node.func.id in _IO_CALLS:
                 self._flag("PUR001", node,

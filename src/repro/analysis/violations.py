@@ -30,6 +30,10 @@ RULES: dict[str, str] = {
     "OBS001": ("service/obs layers read the wall clock only through "
                "repro/obs/clock.py (one shim: fake-clock tests and "
                "trace timestamps stay consistent)"),
+    "RES001": ("service-layer retries, backoff sleeps and deadlines go "
+               "only through repro/service/resilience.py (no ad-hoc "
+               "run_with_restarts or .sleep() calls: one policy, "
+               "deterministic jitter, budget-aware)"),
     "KCT001": ("kernel eval bodies must trace to a side-effect-free "
                "jaxpr (no callbacks, debug prints, infeed/outfeed)"),
     "KCT002": ("kernel eval bodies must accumulate in float32 — the "

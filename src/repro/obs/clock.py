@@ -57,3 +57,13 @@ def wall() -> float:
     if _FakeState.clock is not None:
         return _FakeState.clock()
     return _time.time()
+
+
+def sleep(seconds: float) -> None:
+    """Block for ``seconds`` — the service's only sleep primitive
+    (retry backoff via :mod:`repro.service.resilience`, rule RES001).
+    Under a fake clock this returns immediately: fake time only moves
+    when the test advances it, so a real block would deadlock."""
+    if _FakeState.clock is not None:
+        return
+    _time.sleep(seconds)

@@ -286,6 +286,15 @@ def service_metrics(registry: MetricsRegistry) -> dict:
     zmc_sweep_slices_total           {outcome=new|shared}: canonical sweep
                                      slices allocated vs deduped onto an
                                      existing cache stream
+    zmc_faults_injected_total        {stage}: chaos-harness faults fired
+                                     (agrees with FaultPlan.fired)
+    zmc_retries_total                {stage}: retry attempts the unified
+                                     policy actually ran (agrees with
+                                     EngineStats.restarts)
+    zmc_quarantined_streams_total    streams quarantined by the poison
+                                     ladder (agrees with
+                                     ResultCache.quarantined_streams)
+    zmc_deadline_expirations_total   tickets failed on an expired deadline
     ==============================  =============================================
     """
     return {
@@ -351,4 +360,19 @@ def service_metrics(registry: MetricsRegistry) -> dict:
             "canonical sweep slices by cache fate (shared = deduped onto "
             "an existing stream, incl. sub-grid overlap with another "
             "client's sweep)", ("outcome",)),
+        "faults_injected": registry.counter(
+            "zmc_faults_injected_total",
+            "deterministic chaos faults fired (agrees with "
+            "FaultPlan.fired)", ("stage",)),
+        "retries": registry.counter(
+            "zmc_retries_total",
+            "retry attempts run by the unified policy (agrees with "
+            "EngineStats.restarts across stages)", ("stage",)),
+        "quarantined_streams": registry.counter(
+            "zmc_quarantined_streams_total",
+            "streams quarantined by the poison ladder (agrees with "
+            "ResultCache.quarantined_streams)"),
+        "deadline_expirations": registry.counter(
+            "zmc_deadline_expirations_total",
+            "tickets completed as RequestFailed on an expired deadline"),
     }

@@ -5,34 +5,57 @@
 #   batcher    - cross-request coalescing into fused multi-round buckets
 #   engine     - continuously-batching submit/poll worker (fair wave
 #                planner, double-buffered wave pipeline, backpressure)
-#   store      - crash-safe journal + snapshot persistence (warm restarts)
+#   store      - crash-safe journal + snapshot persistence (warm restarts,
+#                single-writer lease)
 #   api        - request/response dataclasses and the blocking client
+#   resilience - the ONE retry/backoff/deadline policy (rule RES001)
+#   faults     - deterministic fault injection (chaos harness)
 
 from repro.service.api import (Backpressure, IntegrationClient,
                                IntegrationRequest, IntegrationResult,
+                               RequestError, RequestFailed,
                                SweepRequest, SweepResult)
 from repro.service.cache import CacheEntry, ResultCache
 from repro.service.canonical import (canonical_family, family_hash,
                                      spec_hash, sweep_slices)
 from repro.service.engine import EngineStats, IntegrationEngine
-from repro.service.store import DurableStore, EntryState, RecoveredState
+from repro.service.faults import (FAULT_POINTS, FaultPlan, InjectedFault,
+                                  NullFaultPlan)
+from repro.service.resilience import (Deadline, DeadlineExceeded,
+                                      RetryExhausted, RetryPolicy,
+                                      run_with_policy)
+from repro.service.store import (DurableStore, EntryState, LeaseHeld,
+                                 LeaseLost, RecoveredState)
 
 __all__ = [
     "Backpressure",
     "CacheEntry",
+    "Deadline",
+    "DeadlineExceeded",
     "DurableStore",
     "EngineStats",
     "EntryState",
+    "FAULT_POINTS",
+    "FaultPlan",
+    "InjectedFault",
     "IntegrationClient",
     "IntegrationEngine",
     "IntegrationRequest",
     "IntegrationResult",
+    "LeaseHeld",
+    "LeaseLost",
+    "NullFaultPlan",
     "RecoveredState",
+    "RequestError",
+    "RequestFailed",
     "ResultCache",
+    "RetryExhausted",
+    "RetryPolicy",
     "SweepRequest",
     "SweepResult",
     "canonical_family",
     "family_hash",
+    "run_with_policy",
     "spec_hash",
     "sweep_slices",
 ]

@@ -35,6 +35,19 @@ class Backpressure(RuntimeError):
     """Raised by non-blocking submit when the pending table is full."""
 
 
+class RequestError(RuntimeError):
+    """Raised by the blocking client when a ticket completed as a
+    :class:`RequestFailed`; carries the structured failure as
+    ``.failure``."""
+
+    def __init__(self, failure: "RequestFailed"):
+        super().__init__(
+            f"request {failure.ticket} failed ({failure.reason}"
+            f"{f', stage {failure.stage}' if failure.stage else ''}): "
+            f"{failure.message}")
+        self.failure = failure
+
+
 @dataclasses.dataclass(frozen=True)
 class IntegrationRequest:
     """One client ask: evaluate these families to this precision.
@@ -47,18 +60,25 @@ class IntegrationRequest:
         below this.  With both set, both must hold.
       sampler: "mc" | "sobol" — selects the sample stream (and therefore
         the cache entry: the two streams never mix).
+      deadline: optional wall-time budget in seconds, measured from
+        submit.  When it expires before the precision is reached the
+        ticket *completes* with a :class:`RequestFailed` (reason
+        ``"deadline"``) instead of hanging; retry backoff sleeps are
+        clamped to the remaining budget.
     """
 
     families: tuple[IntegrandFamily, ...]
     n_samples: int | None = None
     target_stderr: float | None = None
     sampler: str = "mc"
+    deadline: float | None = None
 
     @classmethod
     def make(cls, families: Sequence[IntegrandFamily] | MultiFunctionSpec,
              *, n_samples: int | None = None,
              target_stderr: float | None = None,
-             sampler: str = "mc") -> "IntegrationRequest":
+             sampler: str = "mc",
+             deadline: float | None = None) -> "IntegrationRequest":
         if isinstance(families, MultiFunctionSpec):
             families = families.families
         families = tuple(f.validate() for f in families)
@@ -72,8 +92,11 @@ class IntegrationRequest:
             raise ValueError("target_stderr must be positive")
         if sampler not in ("mc", "sobol"):
             raise ValueError(f"unknown sampler {sampler!r}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError("deadline must be positive (seconds)")
         return cls(families=families, n_samples=n_samples,
-                   target_stderr=target_stderr, sampler=sampler)
+                   target_stderr=target_stderr, sampler=sampler,
+                   deadline=deadline)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +110,7 @@ class SweepRequest:
         row-major cartesian product over axes in sorted-name order
         (last axis fastest).  Axis values may be vectors per point
         (e.g. a dim-wide ``k``) — leading axis is the point axis.
-      n_samples / target_stderr / sampler: as on
+      n_samples / target_stderr / sampler / deadline: as on
         :class:`IntegrationRequest`, applied to every grid point.
     """
 
@@ -96,12 +119,14 @@ class SweepRequest:
     n_samples: int | None = None
     target_stderr: float | None = None
     sampler: str = "mc"
+    deadline: float | None = None
 
     @classmethod
     def make(cls, template: IntegrandFamily, grid: dict, *,
              n_samples: int | None = None,
              target_stderr: float | None = None,
-             sampler: str = "mc") -> "SweepRequest":
+             sampler: str = "mc",
+             deadline: float | None = None) -> "SweepRequest":
         template = template.validate()
         if template.n_fn != 1:
             raise ValueError(
@@ -123,8 +148,11 @@ class SweepRequest:
             raise ValueError("target_stderr must be positive")
         if sampler not in ("mc", "sobol"):
             raise ValueError(f"unknown sampler {sampler!r}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError("deadline must be positive (seconds)")
         return cls(template=template, grid=dict(grid), n_samples=n_samples,
-                   target_stderr=target_stderr, sampler=sampler)
+                   target_stderr=target_stderr, sampler=sampler,
+                   deadline=deadline)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,6 +172,34 @@ class IntegrationResult:
     @property
     def n_fn_total(self) -> int:
         return int(self.means.shape[0])
+
+    @property
+    def failed(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestFailed:
+    """Terminal failure of a ticket — a *completed* result, not a hang.
+
+    Produced by the engine when a request can no longer succeed: its
+    wave's retry budget is exhausted (``reason="retry_exhausted"``), its
+    deadline ran out (``"deadline"``), or every path to it runs through
+    a quarantined stream (``"quarantined"``).  Polling/result calls
+    return it like any result; the blocking client raises
+    :class:`RequestError` around it.
+    """
+
+    ticket: int
+    reason: str                      # retry_exhausted | deadline | quarantined
+    stage: str | None = None         # pipeline stage that exhausted, if any
+    attempts: int = 0                # attempts the retry policy ran
+    message: str = ""
+    stream_ids: tuple[str, ...] = ()
+
+    @property
+    def failed(self) -> bool:
+        return True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,11 +272,26 @@ class IntegrationClient:
 
     def wait(self, ticket: int, timeout: float | None = None) -> IntegrationResult:
         if self.engine.running:
-            return self.engine.result(ticket, timeout=timeout)
+            return self._unwrap(self.engine.result(ticket, timeout=timeout))
+        from repro.service.resilience import (DeadlineExceeded,
+                                              RetryExhausted)
         while (res := self.engine.poll(ticket)) is None:
-            if not self.engine.step():
+            try:
+                stepped = self.engine.step()
+            except (RetryExhausted, DeadlineExceeded):
+                # the wave this step drove failed permanently; its riders
+                # (possibly including our ticket) were completed as
+                # RequestFailed — keep driving the remaining pendings
+                continue
+            if not stepped:
                 res = self.engine.poll(ticket)
                 if res is None:
                     raise RuntimeError(f"ticket {ticket} cannot make progress")
-                return res
+                return self._unwrap(res)
+        return self._unwrap(res)
+
+    @staticmethod
+    def _unwrap(res):
+        if isinstance(res, RequestFailed):
+            raise RequestError(res)
         return res

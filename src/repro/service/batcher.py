@@ -56,6 +56,7 @@ from repro.core import direct_mc
 from repro.core.direct_mc import SumsState
 from repro.core.integrand import MultiFunctionSpec
 from repro.service.cache import CacheEntry, ResultCache
+from repro.service.faults import NULL_FAULTS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,11 +94,12 @@ class RoundBatcher:
     def __init__(self, cache: ResultCache, key, *, use_kernel: bool = True,
                  mesh=None, fn_axis: str = "model",
                  sample_axes: Sequence[str] = ("data",), chunk: int = 8192,
-                 plan_cache_size: int = 256, obs=None):
+                 plan_cache_size: int = 256, obs=None, faults=None):
         if obs is None:
             from repro.obs import Observability
             obs = Observability.disabled()
         self.obs = obs
+        self.faults = NULL_FAULTS if faults is None else faults
         self.cache = cache
         self.key = key
         self.use_kernel = bool(use_kernel)
@@ -137,6 +139,7 @@ class RoundBatcher:
         launches_before = template.launch_count()
         results: list[tuple[CacheEntry, int, SumsState]] = []
         with obs.span("launch", items=len(unique), groups=len(groups)):
+            self.faults.check("launch")
             for group_key in sorted(groups):
                 results.extend(self._launch_group(groups[group_key]))
         obs.m["launches"].inc(template.launch_count() - launches_before)
@@ -162,17 +165,28 @@ class RoundBatcher:
             with obs.span("device_execute", items=wave.n_items):
                 # block on the device futures *before* converting, so
                 # the trace splits device wait from host-side transfer
+                self.faults.check("device_execute")
                 import jax
                 jax.block_until_ready([sums.s1 for _, _, sums
                                        in wave.results])
         with obs.span("transfer", items=wave.n_items):
+            self.faults.check("transfer")
             deposits = [
                 (entry, round_index,
                  SumsState(s1=np.asarray(sums.s1, np.float32),
                            s2=np.asarray(sums.s2, np.float32),
                            n=np.float32(np.asarray(sums.n))))
                 for entry, round_index, sums in wave.results]
+            if (self.faults.enabled and deposits
+                    and self.faults.fire("transfer_nan")):
+                # poison the wave's first deposit: the cache's finite
+                # check must reject it pre-journal and strike its stream
+                entry, ri, sums = deposits[0]
+                deposits[0] = (entry, ri, SumsState(
+                    s1=np.full_like(sums.s1, np.nan),
+                    s2=sums.s2, n=sums.n))
         with obs.span("deposit", items=wave.n_items):
+            self.faults.check("deposit")
             self.cache.deposit_wave(deposits)
         return wave.n_items
 
@@ -205,15 +219,23 @@ class RoundBatcher:
         for sp in spans:
             self.obs.m["bucket_rounds"].inc(
                 count, dim=sp.entry.family.dim, sampler=sampler)
-        entries = [sp.entry for sp in spans]
-        fn_offsets = [e.fn_offset for e in entries]
-        spec = MultiFunctionSpec(families=tuple(e.family for e in entries))
+        # streams the poison ladder degraded leave the fused path: they
+        # re-run on the chunked per-round fallback, isolated from the
+        # healthy buckets they shared a launch with (counter addressing
+        # keeps the chunked recomputation bit-identical to the fused one)
+        healthy = [sp for sp in spans if not sp.entry.degraded]
+        degraded = [sp for sp in spans if sp.entry.degraded]
 
         fused: dict[int, tuple] = {}
-        if self.use_kernel:
+        if self.use_kernel and healthy:
+            entries = [sp.entry for sp in healthy]
+            fn_offsets = [e.fn_offset for e in entries]
+            spec = MultiFunctionSpec(
+                families=tuple(e.family for e in entries))
             from repro.kernels.mc_eval import multi
+            self.faults.check("device_error")
             plan = self._plan_for(entries, sampler, spec, fn_offsets)
-            start_rounds = {i: sp.start for i, sp in enumerate(spans)}
+            start_rounds = {i: sp.start for i, sp in enumerate(healthy)}
             if self.mesh is not None:
                 fused = multi.sharded_eval_plan_rounds(
                     plan, n, count, self.key, self.mesh,
@@ -224,32 +246,39 @@ class RoundBatcher:
                     plan, n, count, self.key, start_rounds=start_rounds)
 
         out = []
-        for idx, sp in enumerate(spans):
+        for idx, sp in enumerate(healthy):
             if idx in fused:
                 for r in range(count):
                     out.append((sp.entry, sp.start + r, fused[idx][r]))
                 continue
-            # chunked fallback: one counter-addressed eval per round
-            self.fallback_rounds += count
-            self.obs.m["fallback_rounds"].inc(count)
-            for r in range(count):
-                sample_offset = (sp.start + r) * n
-                if self.mesh is not None:
-                    sums, _ = direct_mc.sharded_family_sums(
-                        sp.entry.family, n, self.key, self.mesh,
-                        fn_axis=self.fn_axis, sample_axes=self.sample_axes,
-                        fn_offset=sp.entry.fn_offset,
-                        sample_offset=sample_offset, chunk=self.chunk,
-                        use_kernel=self.use_kernel, sampler=sampler)
-                    sums = SumsState(s1=sums.s1[: sp.entry.n_fn],
-                                     s2=sums.s2[: sp.entry.n_fn], n=sums.n)
-                else:
-                    sums = direct_mc.family_sums(
-                        sp.entry.family, n, self.key,
-                        fn_offset=sp.entry.fn_offset,
-                        sample_offset=sample_offset, chunk=self.chunk,
-                        use_kernel=self.use_kernel, sampler=sampler)
-                out.append((sp.entry, sp.start + r, sums))
+            out.extend(self._chunked_rounds(sp, count, n, sampler))
+        for sp in degraded:
+            out.extend(self._chunked_rounds(sp, count, n, sampler))
+        return out
+
+    def _chunked_rounds(self, sp: _Span, count: int, n: int, sampler: str):
+        """Chunked fallback: one counter-addressed eval per round."""
+        self.fallback_rounds += count
+        self.obs.m["fallback_rounds"].inc(count)
+        out = []
+        for r in range(count):
+            sample_offset = (sp.start + r) * n
+            if self.mesh is not None:
+                sums, _ = direct_mc.sharded_family_sums(
+                    sp.entry.family, n, self.key, self.mesh,
+                    fn_axis=self.fn_axis, sample_axes=self.sample_axes,
+                    fn_offset=sp.entry.fn_offset,
+                    sample_offset=sample_offset, chunk=self.chunk,
+                    use_kernel=self.use_kernel, sampler=sampler)
+                sums = SumsState(s1=sums.s1[: sp.entry.n_fn],
+                                 s2=sums.s2[: sp.entry.n_fn], n=sums.n)
+            else:
+                sums = direct_mc.family_sums(
+                    sp.entry.family, n, self.key,
+                    fn_offset=sp.entry.fn_offset,
+                    sample_offset=sample_offset, chunk=self.chunk,
+                    use_kernel=self.use_kernel, sampler=sampler)
+            out.append((sp.entry, sp.start + r, sums))
         return out
 
     def _plan_for(self, entries: list[CacheEntry], sampler: str, spec,

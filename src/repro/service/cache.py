@@ -88,6 +88,12 @@ class CacheEntry:
         # (s1, s2, n, rounds_done): replaced wholesale, never mutated
         self._state = (np.zeros(n_fn, np.float32),
                        np.zeros(n_fn, np.float32), 0, 0)
+        # poison ladder (non-finite deposits, see deposit_wave): strikes
+        # count consecutive poisoned waves; `degraded` routes the stream
+        # off the fused path, `quarantined` stops scheduling it at all
+        self.poison_strikes = 0
+        self.degraded = False
+        self.quarantined = False
 
     @property
     def n_fn(self) -> int:
@@ -142,14 +148,23 @@ class ResultCache:
     """In-memory cache of canonical-family accumulators (thread-safe)."""
 
     def __init__(self, round_samples: int = 65536,
-                 store: DurableStore | None = None, obs=None):
+                 store: DurableStore | None = None, obs=None,
+                 degrade_after: int = 2, quarantine_after: int = 3):
         if round_samples <= 0:
             raise ValueError("round_samples must be positive")
+        if not 1 <= degrade_after <= quarantine_after:
+            raise ValueError("need 1 <= degrade_after <= quarantine_after")
         if obs is None:
             from repro.obs import Observability
             obs = Observability.disabled()
         self.obs = obs
         self.round_samples = int(round_samples)
+        # poison-ladder thresholds, in consecutive poisoned waves: at
+        # `degrade_after` strikes a stream leaves the fused path (a
+        # fused-kernel bug must not condemn the integrand), at
+        # `quarantine_after` it stops being scheduled at all
+        self.degrade_after = int(degrade_after)
+        self.quarantine_after = int(quarantine_after)
         self._entries: dict[str, CacheEntry] = {}
         self._next_id = 0
         self._lock = threading.Lock()
@@ -334,6 +349,23 @@ class ResultCache:
                  np.asarray(sums.s2, np.float32),
                  int(np.asarray(sums.n)))
                 for entry, round_index, sums in deposits]
+        # per-round finite check BEFORE journaling: a NaN/Inf deposit is
+        # never written ahead (it would poison every future replay) and
+        # never folded — the stream takes a poison strike instead, and
+        # its un-deposited rounds go back to the planner.  Checking per
+        # round means one bad integrand quarantines only its own stream,
+        # not the fused bucket it rode in.
+        poisoned: list = []
+        seen_poison: set[int] = set()
+        if recs:
+            clean = []
+            for rec in recs:
+                if np.isfinite(rec[2]).all() and np.isfinite(rec[3]).all():
+                    clean.append(rec)
+                elif id(rec[0]) not in seen_poison:
+                    seen_poison.add(id(rec[0]))
+                    poisoned.append(rec[0])
+            recs = clean
         if self.store is None:
             with self._lock:
                 accepted = self._admit_locked(recs, on_ahead)
@@ -347,8 +379,55 @@ class ResultCache:
                     for entry, ri, s1, s2, n in accepted)
                 with self._lock:
                     folded, states = self._fold_batch_locked(accepted)
+        if poisoned:
+            self._note_poison(poisoned)
+        if folded:
+            # a clean folded wave resets the strike count of streams it
+            # covered (transient device/transfer glitches must not creep
+            # a healthy stream toward quarantine); degradation and
+            # quarantine themselves stay sticky
+            with self._lock:
+                for entry, *_ in accepted:
+                    if id(entry) not in seen_poison and entry.poison_strikes:
+                        entry.poison_strikes = 0
         self._observe_deposits(folded, states)
         return folded
+
+    def _note_poison(self, entries) -> None:
+        """Advance the poison ladder for streams whose wave deposited
+        non-finite sums: reschedule (strike 1+) -> degrade off the fused
+        path (``degrade_after``) -> quarantine (``quarantine_after``)."""
+        degraded, quarantined = [], []
+        with self._lock:
+            for entry in entries:
+                entry.poison_strikes += 1
+                if (entry.poison_strikes >= self.degrade_after
+                        and not entry.degraded):
+                    entry.degraded = True
+                    degraded.append(entry)
+                if (entry.poison_strikes >= self.quarantine_after
+                        and not entry.quarantined):
+                    entry.quarantined = True
+                    quarantined.append(entry)
+        for entry in entries:
+            self.obs.event("poison_deposit", stream=entry.chash[:16],
+                           strikes=entry.poison_strikes,
+                           degraded=entry.degraded,
+                           quarantined=entry.quarantined)
+        for entry in degraded:
+            self.obs.event("degrade", stream=entry.chash[:16],
+                           strikes=entry.poison_strikes)
+        for entry in quarantined:
+            self.obs.m["quarantined_streams"].inc()
+            self.obs.event("quarantine", stream=entry.chash[:16],
+                           strikes=entry.poison_strikes)
+
+    def quarantined_streams(self) -> list[str]:
+        """chashes of quarantined streams (stable order, observables
+        for the metrics-agreement gate)."""
+        with self._lock:
+            return sorted(c for c, e in self._entries.items()
+                          if e.quarantined)
 
     def _admit_locked(self, recs, on_ahead: str):
         """Filter a deposit batch against a local frontier image.

@@ -58,15 +58,19 @@ import numpy as np
 
 from repro.analysis import streams as _analysis
 from repro.core import rng as rng_lib
-from repro.distributed.fault_tolerance import StepWatchdog, run_with_restarts
 from repro.obs import Observability
 from repro.obs import clock as _clock
 from repro.service.api import (Backpressure, IntegrationRequest,
-                               IntegrationResult, SweepRequest, SweepResult)
+                               IntegrationResult, RequestFailed,
+                               SweepRequest, SweepResult)
 from repro.service.batcher import InFlightWave, RoundBatcher, WorkItem
 from repro.service.cache import CacheEntry, ResultCache
 from repro.service.canonical import (DEFAULT_SWEEP_SLICE, canonical_family,
                                      family_hash, sweep_slices)
+from repro.service.faults import NULL_FAULTS, InjectedCrash
+from repro.service.resilience import (Deadline, DeadlineExceeded,
+                                      RetryExhausted, RetryPolicy,
+                                      StepWatchdog, run_with_policy)
 from repro.service.store import DurableStore
 
 
@@ -89,6 +93,8 @@ class EngineStats:
     items_executed: int = 0
     items_requested: int = 0   # before cross-request dedup
     restarts: int = 0
+    failed: int = 0            # tickets completed as RequestFailed
+    deadline_expirations: int = 0
 
     @property
     def items_deduped(self) -> int:
@@ -111,9 +117,10 @@ class _Pending:
     request: IntegrationRequest | SweepRequest
     entries: list[CacheEntry]
     event: threading.Event
-    result: IntegrationResult | None = None
+    result: IntegrationResult | RequestFailed | None = None
     new_rounds_scheduled: bool = False
     sweep: _SweepInfo | None = None
+    deadline: Deadline | None = None
 
 
 class IntegrationEngine:
@@ -132,15 +139,26 @@ class IntegrationEngine:
                  compact_on_start: bool = False,
                  store_fsync: bool = True,
                  sweep_slice_points: int = DEFAULT_SWEEP_SLICE,
-                 obs: Observability | None = None):
+                 obs: Observability | None = None,
+                 retry_policy: RetryPolicy | None = None,
+                 faults=None, lease_ttl: float | None = 30.0):
         # telemetry first: every layer below receives the same bundle
         self.obs = obs if obs is not None else Observability.disabled()
         self.seed = int(seed)
         self.key = rng_lib.fold_key(self.seed, 0)
+        # the ONE retry policy (rule RES001): `max_restarts` is kept as
+        # shorthand for its attempt budget; an explicit policy wins
+        if retry_policy is None:
+            retry_policy = RetryPolicy(max_attempts=int(max_restarts) + 1,
+                                       seed=self.seed)
+        self.retry = retry_policy
+        self.faults = (NULL_FAULTS if faults is None
+                       else faults).bind(self.obs)
         self.store = None
         if state_dir is not None:
             self.store = DurableStore(state_dir, fsync=store_fsync,
-                                      obs=self.obs)
+                                      obs=self.obs, faults=self.faults,
+                                      lease_ttl=lease_ttl)
         self.cache = ResultCache(round_samples=round_samples,
                                  store=self.store, obs=self.obs)
         if sample_axes is None and mesh is not None:
@@ -157,7 +175,7 @@ class IntegrationEngine:
         self.batcher = RoundBatcher(
             self.cache, self.key, use_kernel=use_kernel, mesh=mesh,
             fn_axis=fn_axis, sample_axes=sample_axes or ("data",),
-            chunk=chunk, obs=self.obs)
+            chunk=chunk, obs=self.obs, faults=self.faults)
         if self.store is not None:
             # only after every constructor check passed: a rejected
             # configuration must not pin meta into a fresh state dir.
@@ -182,7 +200,7 @@ class IntegrationEngine:
         self.max_items_per_wave = (None if max_items_per_wave is None
                                    else int(max_items_per_wave))
         self.pipeline_waves = bool(pipeline_waves)
-        self.max_restarts = int(max_restarts)
+        self.max_restarts = self.retry.max_attempts - 1
         self.max_retained_results = int(max_retained_results)
         self.watchdog = watchdog if watchdog is not None else StepWatchdog()
         self.stats = EngineStats()
@@ -205,6 +223,9 @@ class IntegrationEngine:
         self._deposit_cv = threading.Condition(self._lock)
         self._worker: threading.Thread | None = None
         self._stop = False
+        # armed by the first completed stop(): makes stop()/close()
+        # re-entrant (second call is a no-op, no double snapshot)
+        self._shutdown = False
 
     # -- submit / poll --------------------------------------------------------
     @property
@@ -317,8 +338,11 @@ class IntegrationEngine:
             entries = [self.cache.get_or_allocate(chash, canon)
                        for chash, canon in canon_fams]
             ticket = self._new_ticket()
+            budget = getattr(request, "deadline", None)
             pend = _Pending(ticket=ticket, request=request, entries=entries,
-                            event=threading.Event(), sweep=sweep)
+                            event=threading.Event(), sweep=sweep,
+                            deadline=(None if budget is None
+                                      else Deadline(budget)))
             if self._meets(pend):     # became satisfiable while we waited
                 self.stats.cache_hits += 1
                 self.obs.m["cache_requests"].inc(outcome="hit")
@@ -397,9 +421,16 @@ class IntegrationEngine:
         with self._lock:
             self._results.pop(ticket, None)
 
-    def result(self, ticket: int, timeout: float | None = None) -> IntegrationResult:
+    def result(self, ticket: int,
+               timeout: float | None = None) -> IntegrationResult:
         """Block until ``ticket`` finishes (worker thread must be running
-        or another thread driving :meth:`step`)."""
+        or another thread driving :meth:`step`).
+
+        A request that failed permanently (retry budget exhausted,
+        deadline expired, stream quarantined) returns its structured
+        :class:`~repro.service.api.RequestFailed` — a completed ticket,
+        not a hang.
+        """
         with self._lock:
             res = self._results.get(ticket)
             if res is not None:
@@ -408,7 +439,14 @@ class IntegrationEngine:
         if pend is None:
             raise KeyError(f"unknown ticket {ticket}")
         if not pend.event.wait(timeout=timeout):
-            raise TimeoutError(f"ticket {ticket} still pending")
+            with self._lock:
+                state = ("pending" if ticket in self._pending
+                         else "completing")
+                rounds = [e.rounds_done for e in pend.entries]
+            raise TimeoutError(
+                f"ticket {ticket} still {state} after {timeout:g}s "
+                f"(worker {'running' if self.running else 'NOT running'}, "
+                f"rounds folded per stream: {rounds})")
         return pend.result
 
     # -- the wave loop --------------------------------------------------------
@@ -437,15 +475,26 @@ class IntegrationEngine:
             if attempt:
                 with self._lock:
                     self.stats.restarts += 1
+                self.obs.m["retries"].inc(stage="wave")
+            self.faults.check("plan")
             with self.watchdog:
                 return self.batcher.execute(items)
 
         t0 = _clock.monotonic()
         stragglers_before = self.watchdog.straggler_count
         try:
-            executed = run_with_restarts(
-                wave, max_restarts=self.max_restarts,
-                on_restart=self._restart_hook("wave_restart", seq, items))
+            executed = run_with_policy(
+                wave, self.retry, stage="wave", counter=seq,
+                deadline=self._wave_deadline(items),
+                on_retry=self._restart_hook("wave_restart", seq, items))
+        except (RetryExhausted, DeadlineExceeded) as exc:
+            # the wave is permanently lost: complete its tickets with a
+            # structured failure, then surface the error to this
+            # synchronous driver (async drivers swallow and move on)
+            with self._lock:
+                self._retire_items(items)
+                self._fail_wave(items, exc)
+            raise
         except Exception:
             with self._lock:
                 self._retire_items(items)
@@ -495,6 +544,67 @@ class IntegrationEngine:
         return any(self._inflight.get(e.chash) for p in self._pending.values()
                    for e in p.entries)
 
+    # -- failure surfacing ----------------------------------------------------
+    def _wave_deadline(self, items: Sequence[WorkItem]) -> Deadline | None:
+        """Tightest remaining per-request deadline riding this wave, as
+        a fresh budget for the retry loop (None when no rider has one)."""
+        streams = {it.chash for it in items}
+        with self._lock:
+            remains = [p.deadline.remaining()
+                       for p in self._pending.values()
+                       if p.deadline is not None
+                       and any(e.chash in streams for e in p.entries)]
+        if not remains:
+            return None
+        return Deadline(max(min(remains), 1e-9))
+
+    def _fail_wave(self, items: Sequence[WorkItem], exc: Exception) -> None:
+        """Complete the tickets a permanently-failed wave was serving
+        with a structured :class:`RequestFailed` (caller holds the lock).
+
+        A :class:`DeadlineExceeded` fails only the riders whose own
+        deadline ran out — other requests on the same streams simply get
+        rescheduled; :class:`RetryExhausted` fails every rider.
+        """
+        streams = {it.chash for it in items}
+        riders = [p for p in self._pending.values()
+                  if any(e.chash in streams for e in p.entries)]
+        if isinstance(exc, DeadlineExceeded):
+            riders = [p for p in riders
+                      if p.deadline is not None and p.deadline.expired]
+            reason = "deadline"
+        else:
+            reason = "retry_exhausted"
+        for pend in riders:
+            del self._pending[pend.ticket]
+            if reason == "deadline":
+                self.stats.deadline_expirations += 1
+                self.obs.m["deadline_expirations"].inc()
+            self._fail(pend, reason=reason,
+                       stage=getattr(exc, "stage", None),
+                       attempts=getattr(exc, "attempts", 0),
+                       message=str(exc))
+        if riders:
+            self.obs.m["pending"].set(len(self._pending))
+            self._space_cv.notify_all()
+
+    def _fail(self, pend: _Pending, *, reason: str, stage: str | None = None,
+              attempts: int = 0, message: str = "") -> None:
+        """Terminal completion of one ticket as ``RequestFailed``
+        (caller holds the lock)."""
+        pend.result = RequestFailed(
+            ticket=pend.ticket, reason=reason, stage=stage,
+            attempts=attempts, message=message,
+            stream_ids=tuple(e.chash for e in pend.entries))
+        self._results[pend.ticket] = pend.result
+        while len(self._results) > self.max_retained_results:
+            self._results.popitem(last=False)
+        self.stats.failed += 1
+        self.obs.event("request_failed", ticket=pend.ticket, reason=reason,
+                       stage=stage, streams=[c[:16]
+                                             for c in pend.result.stream_ids])
+        pend.event.set()
+
     def _plan_wave(self) -> list[WorkItem]:
         """Assign the wave's round budget fairly across pending requests.
 
@@ -510,8 +620,12 @@ class IntegrationEngine:
         info: dict[str, dict] = {}
         order: list[str] = []
         for pend in self._pending.values():
+            if pend.deadline is not None and pend.deadline.expired:
+                continue     # _complete_ready fails it; no more rounds
             req = pend.request
             for entry in pend.entries:
+                if entry.quarantined:
+                    continue  # poison ladder: stream is unschedulable
                 inflight = self._inflight.get(entry.chash, 0)
                 raw = self.cache.rounds_needed(
                     entry, target_stderr=req.target_stderr,
@@ -591,7 +705,27 @@ class IntegrationEngine:
             del self._pending[pend.ticket]
             self._finish(pend,
                          served_from_cache=not pend.new_rounds_scheduled)
-        if done:
+        # graceful degradation, terminal branch: a pending that can
+        # never be met — its stream quarantined, or its deadline gone —
+        # completes as RequestFailed instead of parking forever
+        failed = []
+        for pend in self._pending.values():
+            bad = [e.chash[:16] for e in pend.entries if e.quarantined]
+            if bad:
+                failed.append((pend, "quarantined",
+                               f"stream(s) {', '.join(bad)} quarantined "
+                               f"after repeated non-finite deposits"))
+            elif pend.deadline is not None and pend.deadline.expired:
+                failed.append((pend, "deadline",
+                               f"deadline budget {pend.deadline.budget:g}s "
+                               f"expired"))
+        for pend, reason, message in failed:
+            del self._pending[pend.ticket]
+            if reason == "deadline":
+                self.stats.deadline_expirations += 1
+                self.obs.m["deadline_expirations"].inc()
+            self._fail(pend, reason=reason, message=message)
+        if done or failed:
             self.obs.m["pending"].set(len(self._pending))
             self._space_cv.notify_all()
 
@@ -635,12 +769,17 @@ class IntegrationEngine:
             if self.running:
                 return
             self._stop = False
+            self._shutdown = False
             self._worker = threading.Thread(
                 target=self._run, name="integration-engine", daemon=True)
             self._worker.start()
 
     def stop(self, timeout: float | None = 30.0) -> None:
+        """Stop the worker and snapshot (re-entrant: a second stop()
+        after a completed one is a no-op — no double snapshot)."""
         with self._lock:
+            if self._shutdown and self._worker is None:
+                return
             self._stop = True
             self._work_cv.notify_all()
             worker = self._worker
@@ -655,6 +794,10 @@ class IntegrationEngine:
             self._worker = None
         # snapshot-on-shutdown: compact the journal once no worker can
         # deposit anymore (a kill before this point only costs replay)
+        with self._lock:
+            if self._shutdown:
+                return
+            self._shutdown = True
         self.checkpoint()
 
     def checkpoint(self) -> None:
@@ -694,15 +837,30 @@ class IntegrationEngine:
                 raise TimeoutError("pending requests did not drain")
 
     def _run(self) -> None:
-        if not self.pipeline_waves:
+        try:
+            if self.pipeline_waves:
+                self._run_pipelined()
+                return
             while True:
+                if self.store is not None:
+                    self.store.heartbeat()   # idle engines keep the lease
+                self.faults.check("worker_crash")
                 with self._lock:
                     while not self._pending and not self._stop:
                         self._work_cv.wait(timeout=0.5)
                     if self._stop:
                         return
-                self.step()
-        self._run_pipelined()
+                try:
+                    self.step()
+                except (RetryExhausted, DeadlineExceeded):
+                    # step() already completed the affected tickets as
+                    # RequestFailed; the worker keeps serving the rest
+                    continue
+        except InjectedCrash as exc:
+            # chaos: the worker dies at a wave boundary like a real
+            # thread crash would — durable state is intact, a driver
+            # can resume via step() or a fresh start()
+            self.obs.event("worker_crash", error=str(exc))
 
     def _run_pipelined(self) -> None:
         """Double-buffered wave loop: dispatch wave k+1, then deposit
@@ -720,6 +878,12 @@ class IntegrationEngine:
         inflight: tuple[InFlightWave, list[WorkItem], float, int] | None = \
             None
         while True:
+            if self.store is not None:
+                self.store.heartbeat()       # idle engines keep the lease
+            if inflight is None:
+                # wave boundary with nothing salvageable in flight: the
+                # only spot where an injected worker death is loss-free
+                self.faults.check("worker_crash")
             with self._lock:
                 while (not self._pending and inflight is None
                        and not self._stop):
@@ -749,15 +913,25 @@ class IntegrationEngine:
                     if attempt:
                         with self._lock:
                             self.stats.restarts += 1
+                        self.obs.m["retries"].inc(stage="launch")
+                    self.faults.check("plan")
                     with self.watchdog:
                         return self.batcher.launch(_items)
 
                 stragglers_before = self.watchdog.straggler_count
                 try:
-                    handle = run_with_restarts(
-                        launch, max_restarts=self.max_restarts,
-                        on_restart=self._restart_hook(
+                    handle = run_with_policy(
+                        launch, self.retry, stage="launch", counter=seq,
+                        deadline=self._wave_deadline(items),
+                        on_retry=self._restart_hook(
                             "wave_restart", seq, items))
+                except (RetryExhausted, DeadlineExceeded) as exc:
+                    # permanent: complete the riders as RequestFailed
+                    # and keep serving — the sibling wave deposits below
+                    with self._lock:
+                        self._retire_items(items)
+                        self._fail_wave(items, exc)
+                    handle = None
                 except Exception:
                     # the worker is about to die: salvage the sibling
                     # wave first (its rounds are real), and make sure no
@@ -797,15 +971,24 @@ class IntegrationEngine:
             if k:
                 with self._lock:
                     self.stats.restarts += 1
+                self.obs.m["retries"].inc(stage="deposit")
                 state["wave"] = self.batcher.launch(items)
             with self.watchdog:
                 return self.batcher.deposit(state["wave"])
 
         stragglers_before = self.watchdog.straggler_count
         try:
-            executed = run_with_restarts(
-                attempt, max_restarts=self.max_restarts,
-                on_restart=self._restart_hook("deposit_retry", seq, items))
+            executed = run_with_policy(
+                attempt, self.retry, stage="deposit", counter=seq,
+                deadline=self._wave_deadline(items),
+                on_retry=self._restart_hook("deposit_retry", seq, items))
+        except (RetryExhausted, DeadlineExceeded) as exc:
+            # permanent loss of this wave only: fail its riders and let
+            # the worker keep serving everything else
+            with self._lock:
+                self._retire_items(items)
+                self._fail_wave(items, exc)
+            return
         except Exception:
             with self._lock:
                 self._retire_items(items)

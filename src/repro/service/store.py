@@ -39,12 +39,31 @@ persisted ones.
 ``meta.json`` pins the engine configuration a state dir was created
 with (seed, round size); reopening with a different configuration is an
 error rather than a silently different sample stream.
+
+**Fail-closed appends**: a journal write that errors mid-record (ENOSPC,
+failed fsync, torn write) leaves bytes of unknown durability at the
+tail.  ``_write`` rewinds the file to the last known-good record
+boundary before re-raising, so the *next* append frames correctly and a
+retried wave never lands after garbage — the cache acks a deposit only
+once its journal record is durably framed.
+
+**Single-writer lease** (``lease.json``): one engine owns a state dir at
+a time.  The lease is an fsynced JSON record ``{token, pid, acquired,
+expires}`` renewed (heartbeat) on journal activity; a second process
+opening the dir takes over only when the lease is *expired*, its holder
+process is *dead*, or the holder is this same process (an abandoned
+in-process handle).  An unexpired lease with a live foreign holder
+raises :class:`LeaseHeld` — the first concrete step of the ROADMAP's
+replicated-engine scale-out item.  Heartbeats verify the on-disk token
+still matches; a usurped writer gets :class:`LeaseLost` instead of
+silently double-writing (fencing).
 """
 
 from __future__ import annotations
 
 import base64
 import dataclasses
+import errno
 import json
 import os
 import struct
@@ -59,6 +78,25 @@ _MAGIC = b"ZMJ1"
 _HEADER = struct.Struct("<II")          # payload length, crc32(payload)
 _HEADER_BYTES = len(_MAGIC) + _HEADER.size
 _SNAPSHOT_VERSION = 1
+
+
+class LeaseHeld(RuntimeError):
+    """The state dir's lease is held by a live process elsewhere."""
+
+
+class LeaseLost(RuntimeError):
+    """Our lease token was usurped — stop writing (fencing)."""
+
+
+def _pid_alive(pid: int) -> bool:
+    """Best-effort liveness probe for a same-host lease holder."""
+    try:
+        os.kill(int(pid), 0)
+    except ProcessLookupError:
+        return False
+    except OSError:
+        return True      # exists but not ours to signal (or unknowable)
+    return True
 
 
 def _encode_f32(arr: np.ndarray) -> str:
@@ -159,24 +197,122 @@ class DurableStore:
     JOURNAL = "journal.bin"
     SNAPSHOT = "snapshot.npz"
     META = "meta.json"
+    LEASE = "lease.json"
 
-    def __init__(self, state_dir: str, *, fsync: bool = True, obs=None):
+    def __init__(self, state_dir: str, *, fsync: bool = True, obs=None,
+                 faults=None, lease_ttl: float | None = 30.0):
         if obs is None:
             from repro.obs import Observability
             obs = Observability.disabled()
+        if faults is None:
+            from repro.service.faults import NULL_FAULTS
+            faults = NULL_FAULTS
         self.obs = obs
+        self.faults = faults
         self.state_dir = str(state_dir)
         self.fsync = bool(fsync)
         os.makedirs(self.state_dir, exist_ok=True)
         self.journal_path = os.path.join(self.state_dir, self.JOURNAL)
         self.snapshot_path = os.path.join(self.state_dir, self.SNAPSHOT)
         self.meta_path = os.path.join(self.state_dir, self.META)
+        self.lease_path = os.path.join(self.state_dir, self.LEASE)
         self._journal_f = None
+        # byte offset of the last durably framed record boundary; a
+        # failed append rewinds to it so the journal never grows a
+        # torn middle (fail-closed, see module docstring)
+        self._good_size = 0
         # serializes appends against each other and against snapshot's
         # journal reset; a caller may hold it across append + its own
         # in-memory apply to stay coherent with a concurrent snapshot
         # (reentrant so such callers can still invoke append/snapshot)
         self.mutex = threading.RLock()
+        self.lease_ttl = None if lease_ttl is None else float(lease_ttl)
+        self._lease_token = f"{os.getpid()}-{os.urandom(8).hex()}"
+        self._lease_renewed: float | None = None
+        if self.lease_ttl is not None:
+            self._acquire_lease()
+
+    # -- single-writer lease --------------------------------------------------
+    def _read_lease(self) -> dict | None:
+        try:
+            with open(self.lease_path, encoding="utf-8") as f:
+                return json.load(f)
+        except (FileNotFoundError, ValueError):
+            return None
+
+    def _write_lease(self, now: float) -> None:
+        record = {"token": self._lease_token, "pid": os.getpid(),
+                  "acquired": now, "expires": now + self.lease_ttl}
+        tmp = self.lease_path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(record, f, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.lease_path)
+        self._sync_dir()
+        self._lease_renewed = now
+
+    def _acquire_lease(self) -> None:
+        """Claim the state dir, taking over a crash-expired lease.
+
+        Takeover conditions (any one suffices): the lease expired, its
+        holder process is dead (SIGKILL leaves an unexpired lease
+        behind — waiting out the TTL would stall every warm restart),
+        or the holder is this same process (an abandoned handle).  A
+        live foreign holder raises :class:`LeaseHeld`.
+        """
+        now = _clock.wall()
+        existing = self._read_lease()
+        reason = None
+        if existing is not None:
+            pid = existing.get("pid")
+            expires = float(existing.get("expires", 0.0))
+            if pid == os.getpid():
+                reason = "same_process"
+            elif expires <= now:
+                reason = "expired"
+            elif pid is None or not _pid_alive(pid):
+                reason = "holder_dead"
+            else:
+                raise LeaseHeld(
+                    f"state dir {self.state_dir!r} is leased to pid {pid} "
+                    f"for another {expires - now:.1f}s; takeover requires "
+                    f"expiry or holder death")
+        self._write_lease(now)
+        if reason is not None:
+            self.obs.event("lease_takeover", state_dir=self.state_dir,
+                           reason=reason,
+                           previous_pid=existing.get("pid"))
+
+    def heartbeat(self, force: bool = False) -> None:
+        """Renew the lease once half the TTL has elapsed (cheap to call
+        every wave).  Raises :class:`LeaseLost` if another writer took
+        the lease over — the fencing check that keeps a paused-then-
+        resumed engine from double-writing a usurped dir."""
+        if self.lease_ttl is None:
+            return
+        now = _clock.wall()
+        if (not force and self._lease_renewed is not None
+                and now - self._lease_renewed < self.lease_ttl / 2.0):
+            return
+        with self.mutex:
+            existing = self._read_lease()
+            if (existing is not None
+                    and existing.get("token") != self._lease_token):
+                raise LeaseLost(
+                    f"lease on {self.state_dir!r} now belongs to "
+                    f"pid {existing.get('pid')}; this writer must stop")
+            self._write_lease(now)
+
+    def _release_lease(self) -> None:
+        if self.lease_ttl is None:
+            return
+        existing = self._read_lease()
+        if existing is not None and existing.get("token") == self._lease_token:
+            try:
+                os.unlink(self.lease_path)
+            except OSError:
+                pass
 
     # -- configuration guard --------------------------------------------------
     def ensure_meta(self, meta: dict) -> None:
@@ -244,22 +380,59 @@ class DurableStore:
 
     def _write(self, record: bytes) -> None:
         obs = self.obs
+        faults = self.faults
         with self.mutex:
+            self.heartbeat()
             t0 = _clock.monotonic()
             with obs.span("wal_commit", bytes=len(record)):
+                faults.check("wal_commit")
                 f = self._journal()
-                f.write(record)
-                f.flush()
-                if self.fsync:
-                    os.fsync(f.fileno())
+                start = self._good_size
+                try:
+                    if faults.enabled and faults.fire("wal_torn_write"):
+                        # model a torn write: a prefix of the record
+                        # reaches the file, then the device dies
+                        from repro.service.faults import InjectedIOError
+                        f.write(record[:max(1, len(record) // 2)])
+                        f.flush()
+                        raise InjectedIOError(
+                            errno.ENOSPC, "injected torn journal write")
+                    f.write(record)
+                    f.flush()
+                    faults.check("wal_fsync")
+                    if self.fsync:
+                        os.fsync(f.fileno())
+                except OSError:
+                    # fail closed: whatever partial/unsynced bytes this
+                    # append left must not become a torn *middle* once a
+                    # retry appends after them — rewind to the last
+                    # known-good record boundary before surfacing
+                    self._rewind(start)
+                    raise
+                self._good_size = start + len(record)
             obs.m["wal_fsync_seconds"].observe(_clock.monotonic() - t0)
             obs.m["wal_bytes"].inc(len(record))
             obs.m["wal_commits"].inc()
+
+    def _rewind(self, good_size: int) -> None:
+        """Truncate the journal back to the last durable record boundary
+        after a failed append (best-effort: if even the truncate fails,
+        ``load()``'s tail truncation still recovers the prefix)."""
+        self._close_journal()
+        try:
+            with open(self.journal_path, "r+b") as f:
+                f.truncate(good_size)
+                f.flush()
+                os.fsync(f.fileno())
+        except OSError:
+            pass
+        self._good_size = good_size
 
     def _journal(self):
         if self._journal_f is None or self._journal_f.closed:
             created = not os.path.exists(self.journal_path)
             self._journal_f = open(self.journal_path, "ab")
+            self._good_size = self.journal_size()
             if created:
                 # fsyncing records is useless if the file's own dirent
                 # is lost to a power cut; persist it on first creation
@@ -305,11 +478,12 @@ class DurableStore:
             # drop the bad tail on disk too, so new appends framing-align
             state.truncated_bytes = bad_tail
             good_end = self.journal_size() - bad_tail
-            self.close()
+            self._close_journal()
             with open(self.journal_path, "r+b") as f:
                 f.truncate(good_end)
                 f.flush()
                 os.fsync(f.fileno())
+            self._good_size = good_end
 
     def _apply(self, record: dict, state: RecoveredState) -> None:
         kind = record.get("t")
@@ -366,6 +540,7 @@ class DurableStore:
 
         tmp = self.snapshot_path + ".tmp"
         with self.mutex:
+            self.heartbeat()
             with open(tmp, "wb") as f:
                 np.savez(f, **payload)
                 f.flush()
@@ -374,10 +549,11 @@ class DurableStore:
             self._sync_dir()
             # the snapshot supersedes every journal record; reset it (a
             # crash between replace and reset only costs replay skips)
-            self.close()
+            self._close_journal()
             with open(self.journal_path, "wb") as f:
                 f.flush()
                 os.fsync(f.fileno())
+            self._good_size = 0
 
     def _sync_dir(self) -> None:
         try:
@@ -389,7 +565,12 @@ class DurableStore:
         finally:
             os.close(fd)
 
-    def close(self) -> None:
+    def _close_journal(self) -> None:
         if self._journal_f is not None and not self._journal_f.closed:
             self._journal_f.close()
         self._journal_f = None
+
+    def close(self) -> None:
+        """Release the journal handle and the lease (idempotent)."""
+        self._close_journal()
+        self._release_lease()

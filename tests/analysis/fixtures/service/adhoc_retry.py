@@ -1,0 +1,17 @@
+"""Seeded violation: an ad-hoc retry loop inside a ``service/`` path.
+Linted by path only — never imported.  Expected findings: RES001 at the
+``run_with_restarts`` import, the attribute reference, and the raw
+backoff sleep (importing the fault_tolerance *module* is clean; only
+the ad-hoc retry entry point and sleeps are fenced to resilience.py).
+"""
+
+from repro.distributed.fault_tolerance import run_with_restarts  # RES001
+
+from repro.distributed import fault_tolerance as ft
+from repro.obs import clock
+
+
+def flaky_wave(body):
+    ft.run_with_restarts(body, max_restarts=3)                   # RES001
+    clock.sleep(0.25)                                            # RES001
+    return run_with_restarts

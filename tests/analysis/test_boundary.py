@@ -59,13 +59,21 @@ class TestSeededFixtures:
         # call on line 14 must NOT fire
         assert sorted(v.line for v in rules["OBS001"]) == [7, 13, 15], found
 
+    def test_adhoc_retry_fires_res001(self):
+        found = _findings("service/adhoc_retry.py")
+        rules = _by_rule(found)
+        assert set(rules) == {"RES001"}
+        # the run_with_restarts import, its attribute reference, and the
+        # raw clock.sleep call; the module import on line 10 is clean
+        assert sorted(v.line for v in rules["RES001"]) == [8, 15, 16], found
+
     def test_ignore_comment_silences(self):
         assert _findings("ignored_ok.py") == []
 
     def test_fixture_dir_scan_finds_all_rules(self):
         found = boundary.check_paths([FIXTURES])
         assert {v.rule for v in found} == {"BND001", "BND002", "PUR001",
-                                           "F64001", "OBS001"}
+                                           "F64001", "OBS001", "RES001"}
 
 
 class TestRuleScoping:
@@ -120,6 +128,23 @@ class TestRuleScoping:
         source = "import time\nt = time.monotonic()\n"
         assert boundary.check_source(
             source, "src/repro/obs/clock.py") == []
+
+    def test_res001_only_fires_in_service(self):
+        source = ("from repro.distributed.fault_tolerance import "
+                  "run_with_restarts\nclock.sleep(1.0)\n")
+        # distributed/ and launchers keep their own loops; obs/ never
+        # retries; only the service layer is fenced to the policy module
+        assert boundary.check_source(source, "repro/distributed/ft.py") == []
+        assert boundary.check_source(source, "repro/launch/driver.py") == []
+        assert boundary.check_source(source, "repro/obs/export.py") == []
+        found = boundary.check_source(source, "repro/service/engine.py")
+        assert [v.rule for v in found] == ["RES001", "RES001"]
+
+    def test_resilience_module_is_allowed_retries_and_sleep(self):
+        source = ("from repro.distributed.fault_tolerance import "
+                  "run_with_restarts\n_clock.sleep(0.5)\n")
+        assert boundary.check_source(
+            source, "src/repro/service/resilience.py") == []
 
 
 @pytest.mark.parametrize("subtree", [

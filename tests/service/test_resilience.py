@@ -1,0 +1,476 @@
+"""Chaos-harness and policy tests: deterministic fault injection,
+the unified retry/deadline policy, poison-stream quarantine, state-dir
+leases, and idempotent shutdown.
+
+The contract under test is the PR-9 resilience story: transient
+injected faults are retried and leave results bit-identical to a
+fault-free run; permanent failures *complete* their tickets with a
+structured ``RequestFailed`` instead of hanging; NaN-poisoned streams
+quarantine themselves without taking the request's siblings down; and
+a state dir admits exactly one live writer.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import harmonic_family
+from repro.obs import clock
+from repro.service import (Deadline, DeadlineExceeded, FaultPlan,
+                           IntegrationClient, IntegrationEngine,
+                           IntegrationRequest, LeaseHeld, LeaseLost,
+                           NullFaultPlan, RequestError, RequestFailed,
+                           RetryExhausted, RetryPolicy, run_with_policy)
+from repro.service.faults import (FAULT_POINTS, InjectedCrash,
+                                  InjectedDeviceError, InjectedIOError)
+from repro.service.store import DurableStore
+
+R = 4096
+FAMS = [harmonic_family(4, 2)]
+
+
+@pytest.fixture
+def fake_clock():
+    """Install a controllable monotonic/wall clock; yields advance(dt)."""
+    state = {"t": 1000.0}
+    clock.set_clock(lambda: state["t"])
+
+    def advance(dt):
+        state["t"] += dt
+
+    yield advance
+    clock.set_clock(None)
+
+
+def drive(engine, ticket, max_steps=200):
+    """Step-drive the engine until ``ticket`` completes; permanent wave
+    failures surface as exceptions from step() for sync drivers but the
+    ticket still completes — keep stepping through them."""
+    for _ in range(max_steps):
+        res = engine.poll(ticket)
+        if res is not None:
+            return res
+        try:
+            engine.step()
+        except (RetryExhausted, DeadlineExceeded):
+            continue
+    raise AssertionError(f"ticket {ticket} did not complete "
+                         f"in {max_steps} steps")
+
+
+# -- RetryPolicy ---------------------------------------------------------------
+class TestRetryPolicy:
+    def test_backoff_monotone_and_capped(self):
+        pol = RetryPolicy(base_delay=0.05, multiplier=2.0, max_delay=0.4)
+        delays = [pol.backoff(k) for k in range(1, 12)]
+        assert delays == sorted(delays)
+        assert max(delays) == 0.4
+        assert delays[0] == 0.05
+
+    def test_delay_within_jitter_band(self):
+        pol = RetryPolicy(base_delay=0.1, multiplier=3.0, max_delay=5.0,
+                          jitter=0.25, seed=3)
+        for attempt in range(1, 8):
+            b = pol.backoff(attempt)
+            for counter in range(6):
+                d = pol.delay(attempt, counter)
+                assert b * (1.0 - pol.jitter) <= d <= b
+
+    def test_delay_deterministic_per_seed_counter_attempt(self):
+        a = RetryPolicy(seed=7)
+        b = RetryPolicy(seed=7)
+        assert [a.delay(k, 5) for k in range(1, 6)] == \
+               [b.delay(k, 5) for k in range(1, 6)]
+        # the counter actually participates (different waves de-sync)
+        assert len({a.delay(2, c) for c in range(16)}) > 1
+
+    def test_zero_jitter_is_pure_backoff(self):
+        pol = RetryPolicy(jitter=0.0)
+        assert pol.delay(3, counter=9) == pol.backoff(3)
+
+    @pytest.mark.parametrize("kw", [
+        {"max_attempts": 0}, {"multiplier": 0.5}, {"jitter": 1.5},
+        {"jitter": -0.1}, {"base_delay": -1.0}])
+    def test_invalid_policy_rejected(self, kw):
+        with pytest.raises(ValueError):
+            RetryPolicy(**kw)
+
+    def test_backoff_attempt_is_one_based(self):
+        with pytest.raises(ValueError, match="1-based"):
+            RetryPolicy().backoff(0)
+
+
+# -- Deadline + run_with_policy ------------------------------------------------
+class TestRunWithPolicy:
+    def test_success_passes_value_through(self, fake_clock):
+        out = run_with_policy(lambda attempt: ("ok", attempt),
+                              RetryPolicy(max_attempts=3))
+        assert out == ("ok", 0)
+
+    def test_retries_then_succeeds(self, fake_clock):
+        calls, retries = [], []
+
+        def body(attempt):
+            calls.append(attempt)
+            if attempt < 2:
+                raise ValueError(f"transient {attempt}")
+            return attempt
+
+        out = run_with_policy(
+            body, RetryPolicy(max_attempts=4), stage="launch",
+            on_retry=lambda a, exc: retries.append((a, str(exc))))
+        assert out == 2
+        assert calls == [0, 1, 2]
+        assert [a for a, _ in retries] == [0, 1]
+
+    def test_exhaustion_raises_retry_exhausted(self, fake_clock):
+        retries = []
+
+        def body(attempt):
+            raise ValueError("permanent boom")
+
+        with pytest.raises(RetryExhausted) as ei:
+            run_with_policy(body, RetryPolicy(max_attempts=3),
+                            stage="deposit",
+                            on_retry=lambda a, e: retries.append(a))
+        exc = ei.value
+        assert isinstance(exc, RuntimeError)
+        assert exc.stage == "deposit" and exc.attempts == 3
+        assert isinstance(exc.last, ValueError)
+        assert exc.__cause__ is exc.last
+        assert "permanent boom" in str(exc)
+        # the hook fires for EVERY failed attempt, final included
+        assert retries == [0, 1, 2]
+
+    def test_deadline_stops_attempt_loop(self, fake_clock):
+        deadline = Deadline(10.0)
+        calls = []
+
+        def body(attempt):
+            calls.append(attempt)
+            fake_clock(6.0)
+            raise ValueError("slow failure")
+
+        with pytest.raises(DeadlineExceeded) as ei:
+            run_with_policy(body, RetryPolicy(max_attempts=8, base_delay=0),
+                            stage="wave", deadline=deadline)
+        # attempt 0 at t=0, attempt 1 at t=6 (<10); attempt 2 would
+        # start at t=12 — the pre-attempt check stops it there
+        assert calls == [0, 1]
+        assert isinstance(ei.value.__cause__, ValueError)
+        assert "budget 10" in str(ei.value)
+
+    def test_started_attempt_is_never_interrupted(self, fake_clock):
+        deadline = Deadline(1.0)
+
+        def body(attempt):
+            fake_clock(50.0)  # blows way past the budget mid-attempt
+            return "done"
+
+        assert run_with_policy(body, RetryPolicy(max_attempts=2),
+                               deadline=deadline) == "done"
+
+    def test_unbounded_deadline(self, fake_clock):
+        d = Deadline(None)
+        assert d.remaining() == float("inf")
+        fake_clock(1e9)
+        assert not d.expired
+
+    def test_deadline_expiry_and_validation(self, fake_clock):
+        d = Deadline(5.0)
+        assert not d.expired and d.remaining() == pytest.approx(5.0)
+        fake_clock(5.5)
+        assert d.expired and d.remaining() == pytest.approx(-0.5)
+        with pytest.raises(ValueError):
+            Deadline(0.0)
+
+
+# -- FaultPlan -----------------------------------------------------------------
+class TestFaultPlan:
+    def test_from_seed_is_deterministic(self):
+        a = FaultPlan.from_seed(17, FAULT_POINTS)
+        b = FaultPlan.from_seed(17, FAULT_POINTS)
+        assert a.spec() == b.spec()
+        assert set(a.spec()) == set(FAULT_POINTS)
+        json.dumps(a.spec())  # bench artifacts embed the spec
+
+    def test_unknown_point_and_negative_index_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault point"):
+            FaultPlan({"warp_core": 0})
+        with pytest.raises(ValueError, match=">= 0"):
+            FaultPlan({"launch": -1})
+
+    def test_counted_down_trigger(self):
+        plan = FaultPlan({"launch": 2})
+        assert [plan.fire("launch") for _ in range(5)] == \
+               [False, False, True, False, False]
+        assert plan.fired == [("launch", 2)]
+        assert plan.exhausted
+
+    def test_multiple_trigger_indices(self):
+        plan = FaultPlan({"deposit": [0, 2]})
+        assert not plan.exhausted
+        assert [plan.fire("deposit") for _ in range(4)] == \
+               [True, False, True, False]
+        assert plan.exhausted
+
+    def test_exception_types_per_point(self):
+        plan = FaultPlan({"wal_fsync": 0, "device_error": 0, "launch": 0})
+        with pytest.raises(InjectedIOError) as ei:
+            plan.check("wal_fsync")
+        assert isinstance(ei.value, OSError)
+        with pytest.raises(InjectedDeviceError):
+            plan.check("device_error")
+        with pytest.raises(InjectedCrash):
+            plan.check("launch")
+        # untriggered / exhausted points are silent
+        plan.check("wal_fsync")
+        plan.check("transfer")
+
+    def test_null_plan_is_inert(self):
+        null = NullFaultPlan()
+        assert not null.enabled
+        assert null.bind(object()) is null
+        assert not null.fire("launch")
+        assert null.check("wal_fsync") is None
+
+    def test_fired_faults_counted_into_metrics(self, make_engine):
+        eng = make_engine(faults=FaultPlan({"launch": 0}), use_kernel=False,
+                          max_restarts=2)
+        t = eng.submit(IntegrationRequest.make(FAMS, n_samples=R))
+        res = drive(eng, t)
+        assert not res.failed
+        m = eng.obs.m
+        assert m["faults_injected"].value(stage="launch") == 1.0
+        assert eng.faults.exhausted
+
+
+# -- engine-level chaos --------------------------------------------------------
+class TestEngineChaos:
+    def test_transient_faults_leave_results_bit_identical(
+            self, make_engine, bit_identical):
+        req = IntegrationRequest.make(FAMS, n_samples=2 * R)
+        clean = make_engine(use_kernel=False)
+        want = drive(clean, clean.submit(req))
+
+        plan = FaultPlan({"launch": 0, "deposit": 0})
+        eng = make_engine(use_kernel=False, faults=plan,
+                          retry_policy=RetryPolicy(max_attempts=3,
+                                                   base_delay=0.001))
+        got = drive(eng, eng.submit(req))
+        assert not got.failed
+        bit_identical(want, got)
+        assert eng.stats.restarts >= 2
+        assert plan.exhausted
+        # counter contract: sum over stages == EngineStats.restarts
+        retries = eng.obs.m["retries"]
+        total = sum(retries.value(stage=s)
+                    for s in ("wave", "launch", "deposit"))
+        assert total == eng.stats.restarts
+
+    def test_retry_exhaustion_completes_ticket_with_failure(
+            self, make_engine):
+        eng = make_engine(use_kernel=False, max_restarts=1,
+                          faults=FaultPlan({"launch": [0, 1]}))
+        t = eng.submit(IntegrationRequest.make(FAMS, n_samples=R))
+        with pytest.raises(RetryExhausted):
+            while eng.poll(t) is None:
+                eng.step()
+        res = eng.poll(t)
+        assert isinstance(res, RequestFailed) and res.failed
+        assert res.reason == "retry_exhausted"
+        assert res.stage == "wave" and res.attempts == 2
+        assert res.ticket == t
+        assert eng.stats.failed == 1
+        # the ticket COMPLETED: result() returns the failure, no hang
+        assert eng.result(t, timeout=1.0) is res
+
+    def test_client_wait_raises_request_error(self, make_engine):
+        eng = make_engine(use_kernel=False, max_restarts=0,
+                          faults=FaultPlan({"launch": 0}))
+        client = IntegrationClient(eng)
+        t = client.submit(FAMS, n_samples=R)
+        with pytest.raises(RequestError) as ei:
+            client.wait(t, timeout=30.0)
+        assert ei.value.failure.reason == "retry_exhausted"
+        assert "retry_exhausted" in str(ei.value)
+
+    def test_deadline_expiry_fails_ticket_not_hangs(self, make_engine):
+        eng = make_engine(use_kernel=False, max_rounds_per_wave=1)
+        req = IntegrationRequest.make(FAMS, n_samples=4 * R,
+                                      deadline=0.001)
+        res = drive(eng, eng.submit(req))
+        assert isinstance(res, RequestFailed)
+        assert res.reason == "deadline"
+        assert eng.stats.deadline_expirations >= 1
+        assert eng.obs.m["deadline_expirations"].value() >= 1.0
+
+    def test_deadline_validation(self):
+        with pytest.raises(ValueError, match="deadline"):
+            IntegrationRequest.make(FAMS, n_samples=R, deadline=-1.0)
+
+    def test_nan_stream_quarantined(self, make_engine):
+        plan = FaultPlan({"transfer_nan": [0, 1, 2]})
+        eng = make_engine(use_kernel=False, faults=plan)
+        t = eng.submit(IntegrationRequest.make(FAMS, n_samples=R))
+        res = drive(eng, t)
+        assert isinstance(res, RequestFailed)
+        assert res.reason == "quarantined"
+        quarantined = eng.cache.quarantined_streams()
+        assert len(quarantined) == 1
+        assert quarantined[0][:16] in res.message
+        assert eng.obs.m["quarantined_streams"].value() == 1.0
+        # strikes 1-2 only reject+reschedule; strike 2 degrades the
+        # stream off the fused path before strike 3 quarantines it
+        entry = eng.cache.get(quarantined[0])
+        assert entry.quarantined and entry.degraded
+        assert entry.poison_strikes == 3
+        # poison was never journaled and never folded
+        assert entry.rounds_done == 0
+
+    def test_quarantine_spares_healthy_siblings(self, make_engine):
+        from repro.core import gaussian_family
+        plan = FaultPlan({"transfer_nan": [0, 1, 2, 3, 4]})
+        eng = make_engine(use_kernel=False, faults=plan)
+        poisoned = eng.submit(IntegrationRequest.make(FAMS, n_samples=R))
+        healthy = eng.submit(IntegrationRequest.make(
+            [gaussian_family(4, 3)], n_samples=R))
+        res_p = drive(eng, poisoned)
+        res_h = drive(eng, healthy)
+        assert isinstance(res_p, RequestFailed)
+        assert res_p.reason == "quarantined"
+        assert not res_h.failed
+        assert np.isfinite(res_h.means).all()
+
+    def test_worker_crash_is_salvaged_by_step_driver(
+            self, make_engine, bit_identical):
+        req = IntegrationRequest.make(FAMS, n_samples=2 * R)
+        clean = make_engine(use_kernel=False)
+        want = drive(clean, clean.submit(req))
+
+        eng = make_engine(use_kernel=False,
+                          faults=FaultPlan({"worker_crash": 0}))
+        eng.start()
+        t = eng.submit(req)
+        eng._worker.join(timeout=30.0)
+        assert not eng.running  # the injected crash killed the worker
+        got = drive(eng, t)  # a sync driver salvages the pending work
+        assert not got.failed
+        bit_identical(want, got)
+
+
+# -- idempotent shutdown -------------------------------------------------------
+class TestShutdownIdempotency:
+    def test_stop_twice_snapshots_once(self, make_engine, tmp_path,
+                                       monkeypatch):
+        eng = make_engine(state_dir=str(tmp_path / "state"))
+        eng.start()
+        drive_res = eng.result(
+            eng.submit(IntegrationRequest.make(FAMS, n_samples=R)),
+            timeout=60.0)
+        assert not drive_res.failed
+        calls = []
+        real = eng.cache.snapshot_to_store
+        monkeypatch.setattr(eng.cache, "snapshot_to_store",
+                            lambda: calls.append(1) or real())
+        eng.stop()
+        eng.stop()  # second call: no-op, no double snapshot
+        assert calls == [1]
+        assert not eng.running
+
+    def test_close_after_stop_and_restart(self, make_engine, tmp_path):
+        eng = make_engine(state_dir=str(tmp_path / "state"))
+        eng.start()
+        eng.stop()
+        eng.close()
+        eng.close()  # idempotent
+        # a fresh start() re-arms the engine after a completed stop()
+        eng2 = make_engine(state_dir=str(tmp_path / "state"))
+        eng2.start()
+        res = eng2.result(
+            eng2.submit(IntegrationRequest.make(FAMS, n_samples=R)),
+            timeout=60.0)
+        assert not res.failed
+        eng2.close()
+
+    def test_result_timeout_message_names_state(self, make_engine):
+        eng = make_engine(use_kernel=False)  # no worker running
+        t = eng.submit(IntegrationRequest.make(FAMS, n_samples=R))
+        with pytest.raises(TimeoutError) as ei:
+            eng.result(t, timeout=0.01)
+        msg = str(ei.value)
+        assert "still pending" in msg
+        assert "NOT running" in msg
+        assert "rounds folded per stream" in msg
+
+
+# -- state-dir leases ----------------------------------------------------------
+class TestLeases:
+    def test_acquire_writes_fsynced_lease(self, tmp_path):
+        store = DurableStore(str(tmp_path), lease_ttl=30.0)
+        with open(store.lease_path, encoding="utf-8") as f:
+            rec = json.load(f)
+        assert rec["pid"] == os.getpid()
+        assert rec["token"] == store._lease_token
+        assert rec["expires"] > rec["acquired"]
+        store.close()
+        assert not os.path.exists(store.lease_path)  # released
+
+    def test_live_foreign_holder_blocks(self, tmp_path):
+        store = DurableStore(str(tmp_path), lease_ttl=30.0)
+        # forge a live foreign holder: pid 1 is always alive and never us
+        rec = {"token": "not-ours", "pid": 1,
+               "acquired": clock.wall(), "expires": clock.wall() + 3600}
+        with open(store.lease_path, "w", encoding="utf-8") as f:
+            json.dump(rec, f)
+        with pytest.raises(LeaseHeld, match="leased to pid 1"):
+            DurableStore(str(tmp_path), lease_ttl=30.0)
+
+    def test_expired_lease_is_taken_over(self, tmp_path):
+        rec = {"token": "stale", "pid": 1,
+               "acquired": clock.wall() - 7200,
+               "expires": clock.wall() - 3600}
+        lease = tmp_path / "lease.json"
+        lease.write_text(json.dumps(rec))
+        store = DurableStore(str(tmp_path), lease_ttl=30.0)
+        assert json.loads(lease.read_text())["pid"] == os.getpid()
+        store.close()
+
+    def test_dead_holder_is_taken_over(self, tmp_path):
+        # a reaped child is a guaranteed-dead pid (SIGKILL crash model)
+        proc = subprocess.Popen([sys.executable, "-c", "pass"])
+        proc.wait()
+        rec = {"token": "dead-holder", "pid": proc.pid,
+               "acquired": clock.wall(), "expires": clock.wall() + 3600}
+        (tmp_path / "lease.json").write_text(json.dumps(rec))
+        store = DurableStore(str(tmp_path), lease_ttl=30.0)
+        assert json.loads(
+            (tmp_path / "lease.json").read_text())["pid"] == os.getpid()
+        store.close()
+
+    def test_same_process_handle_is_taken_over(self, tmp_path):
+        a = DurableStore(str(tmp_path), lease_ttl=30.0)
+        # an abandoned handle in this very process must not deadlock a
+        # warm reopen (the engine-restart-same-dir pattern)
+        b = DurableStore(str(tmp_path), lease_ttl=30.0)
+        b.close()
+        a.close()
+
+    def test_heartbeat_fencing_detects_usurper(self, tmp_path):
+        store = DurableStore(str(tmp_path), lease_ttl=30.0)
+        rec = {"token": "usurper", "pid": 1,
+               "acquired": clock.wall(), "expires": clock.wall() + 3600}
+        with open(store.lease_path, "w", encoding="utf-8") as f:
+            json.dump(rec, f)
+        with pytest.raises(LeaseLost, match="must stop"):
+            store.heartbeat(force=True)
+
+    def test_lease_disabled_with_none_ttl(self, tmp_path):
+        store = DurableStore(str(tmp_path), lease_ttl=None)
+        assert not os.path.exists(store.lease_path)
+        store.heartbeat(force=True)  # no-op, no file, no error
+        store.close()

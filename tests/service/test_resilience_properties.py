@@ -1,0 +1,92 @@
+"""Property tests for the retry/deadline policy (hypothesis).
+
+Three properties the resilience layer stakes its determinism claims on:
+backoff is monotone and capped for EVERY parameterization, jittered
+delays stay inside the documented band and replay bit-identically from
+``(seed, counter, attempt)``, and no attempt ever *starts* after its
+deadline expired — even across nested retry loops sharing one budget.
+"""
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason=("property tests need hypothesis; the deterministic "
+            "counterparts in test_resilience.py cover the same "
+            "contracts with fixed examples"))
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.obs import clock  # noqa: E402
+from repro.service.resilience import (Deadline, DeadlineExceeded,  # noqa: E402
+                                      RetryExhausted, RetryPolicy,
+                                      run_with_policy)
+
+policies = st.builds(
+    RetryPolicy,
+    max_attempts=st.integers(1, 8),
+    base_delay=st.floats(0.0, 5.0, allow_nan=False),
+    max_delay=st.floats(0.0, 10.0, allow_nan=False),
+    multiplier=st.floats(1.0, 4.0, allow_nan=False),
+    jitter=st.floats(0.0, 1.0, allow_nan=False),
+    seed=st.integers(0, 2**31))
+
+
+@given(policy=policies)
+@settings(max_examples=200, deadline=None)
+def test_backoff_monotone_nondecreasing_and_capped(policy):
+    delays = [policy.backoff(k) for k in range(1, 16)]
+    assert all(a <= b for a, b in zip(delays, delays[1:]))
+    assert all(d <= policy.max_delay for d in delays)
+
+
+@given(policy=policies, attempt=st.integers(1, 12),
+       counter=st.integers(0, 2**31))
+@settings(max_examples=200, deadline=None)
+def test_jitter_bounded_and_seed_deterministic(policy, attempt, counter):
+    b = policy.backoff(attempt)
+    d = policy.delay(attempt, counter)
+    # the jitter only ever SHRINKS the capped backoff, by at most the
+    # jitter fraction — a retry storm can never exceed the cap
+    assert b * (1.0 - policy.jitter) <= d <= b
+    twin = RetryPolicy(max_attempts=policy.max_attempts,
+                       base_delay=policy.base_delay,
+                       max_delay=policy.max_delay,
+                       multiplier=policy.multiplier,
+                       jitter=policy.jitter, seed=policy.seed)
+    assert twin.delay(attempt, counter) == d
+
+
+@given(budget=st.floats(0.5, 50.0, allow_nan=False),
+       costs=st.lists(st.floats(0.01, 20.0, allow_nan=False),
+                      min_size=1, max_size=6),
+       inner_attempts=st.integers(1, 4),
+       outer_attempts=st.integers(1, 4))
+@settings(max_examples=150, deadline=None)
+def test_deadline_never_exceeded_across_nested_retries(
+        budget, costs, inner_attempts, outer_attempts):
+    """No attempt starts after the shared deadline expired, however the
+    outer and inner retry loops interleave."""
+    state = {"t": 0.0}
+    clock.set_clock(lambda: state["t"])
+    try:
+        deadline = Deadline(budget)
+        starts = []
+
+        def inner_body(attempt):
+            starts.append(state["t"])
+            state["t"] += costs[len(starts) % len(costs)]
+            raise ValueError("inner always fails")
+
+        def outer_body(attempt):
+            return run_with_policy(
+                inner_body, RetryPolicy(max_attempts=inner_attempts),
+                stage="inner", deadline=deadline)
+
+        with pytest.raises((RetryExhausted, DeadlineExceeded)):
+            run_with_policy(
+                outer_body, RetryPolicy(max_attempts=outer_attempts),
+                stage="outer", deadline=deadline)
+        assert all(t0 < budget for t0 in starts)
+    finally:
+        clock.set_clock(None)

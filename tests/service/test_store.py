@@ -235,3 +235,70 @@ def test_snapshot_journal_overlap_is_idempotent(tmp_path):
 # The hypothesis round-trip property (arbitrary deposit sequences ->
 # exact replay) lives in test_store_properties.py so this module still
 # runs where hypothesis is not installed.
+
+
+# -- fail-closed WAL under injected faults (chaos regression) ------------------
+
+def _clean_result(tmp_path, n_samples):
+    eng = IntegrationEngine(state_dir=str(tmp_path / "clean"), seed=7,
+                            round_samples=R, use_kernel=False)
+    return IntegrationClient(eng).integrate(FAMS, n_samples=n_samples)
+
+
+@pytest.mark.parametrize("point", ["wal_fsync", "wal_torn_write"])
+def test_injected_wal_fault_retried_bit_identical(tmp_path, point):
+    """A journal write that dies mid-wave (failed fsync / torn write)
+    must not ack any of the wave's deposits: the wave retries whole and
+    the final answer is bit-identical to a fault-free run, with no torn
+    middle left in the journal."""
+    from repro.service import FaultPlan
+    from repro.service.store import read_journal
+
+    want = _clean_result(tmp_path, 2 * R)
+    # journal hit 0 is the stream's alloc record at submit time; the
+    # wave's deposit group-commit is hit 1 — fail THAT one
+    eng = make_engine(tmp_path / "chaos", use_kernel=False,
+                      faults=FaultPlan({point: 1}))
+    got = IntegrationClient(eng).integrate(FAMS, n_samples=2 * R)
+    assert eng.stats.restarts >= 1           # the fault really fired
+    np.testing.assert_array_equal(want.means, got.means)
+    np.testing.assert_array_equal(want.stderrs, got.stderrs)
+    assert want.means.tobytes() == got.means.tobytes()
+    # the failed append rewound to the last good boundary: every frame
+    # on disk parses, nothing torn survives mid-file
+    journal = os.path.join(str(tmp_path / "chaos"), DurableStore.JOURNAL)
+    _, bad_tail = read_journal(journal)
+    assert bad_tail == 0
+    # and the journal replays to the same accumulators (kill -9 model)
+    e2 = make_engine(tmp_path / "chaos", use_kernel=False)
+    template.reset_launch_count()
+    again = IntegrationClient(e2).integrate(FAMS, n_samples=2 * R)
+    assert template.launch_count() == 0 and again.served_from_cache
+    assert again.means.tobytes() == want.means.tobytes()
+
+
+def test_wal_oserror_never_acks_unjournaled_deposits(tmp_path):
+    """The satellite regression: an OSError inside append_deposits must
+    leave the cache exactly as before the wave — no folded rounds whose
+    journal frames never hit the disk."""
+    from repro.service import FaultPlan
+    from repro.service.faults import InjectedIOError
+
+    # hit 0 is the alloc record; fail the wave group-commit (hit 1)
+    store = DurableStore(str(tmp_path), faults=FaultPlan({"wal_fsync": 1}))
+    cache = ResultCache(round_samples=R, store=store)
+    entry = cache.get_or_allocate("e0", harmonic_family(4, 2))
+    rng = np.random.default_rng(0)
+    wave = [(entry, r, SumsState(
+        s1=rng.standard_normal(4).astype(np.float32),
+        s2=rng.random(4).astype(np.float32), n=R)) for r in range(3)]
+    with pytest.raises(InjectedIOError):
+        cache.deposit_wave(wave)
+    assert entry.rounds_done == 0            # nothing acked, fail closed
+    # the handle survives the error: the retried wave commits cleanly
+    assert cache.deposit_wave(wave) == 3
+    assert entry.rounds_done == 3
+    store.close()
+    _, entry2 = _reload(tmp_path)
+    assert entry2.rounds_done == 3
+    assert entry2.s1.tobytes() == entry.s1.tobytes()
