@@ -49,7 +49,16 @@ doubles as the CI regression gate via ``--smoke``):
   (dim, sampler) bucket, not 64 per-point launches) with per-point
   means bit-identical to 64 separate requests, a warm resubmit costing
   zero launches, and an overlapping sweep deduping at the sub-grid
-  slice level (only new canonical slices are computed).
+  slice level (only new canonical slices are computed);
+
+* **adaptive variance reduction** (``BENCH_10.json``) — VEGAS
+  importance grids (``adaptive=True``) must reach a fixed stderr
+  target with >= 5x fewer samples than the fixed-allocation path on
+  peaked workloads (Genz corner-peak, narrow Gaussians over R^d), with
+  at least one grid refit fired, pilot cost charged against the
+  adaptive budget, post-SIGKILL resume bit-identical to an
+  uninterrupted run and the Layer-3 audit (including the STR007 grid
+  epoch chain) clean.
 
 Wall-clock numbers are reported but only meaningful on a real
 accelerator; on CPU the Pallas kernels run interpreted.  Launch counts
@@ -533,13 +542,165 @@ def _sweep_phase(*, round_samples: int, rounds: int, seed: int,
     return payload
 
 
+def _adaptive_phase(*, round_samples: int, seed: int,
+                    json_out: str | None):
+    """Adaptive variance reduction vs fixed allocation (the BENCH_10 gate).
+
+    Two peaked workloads — a Genz corner-peak batch in dim 3 and a
+    narrow-sigma Gaussian mix over R^2 (compactified) — are driven to
+    the same stderr target twice: once on the fixed-allocation path and
+    once with ``adaptive=True`` (VEGAS importance grids, refit in the
+    wave loop; ``docs/adaptive.md``).  Gates:
+
+    * >= 5x fewer samples on the adaptive path, with the pilot cost
+      charged against it;
+    * at least one grid refit fired (the epoch chain is real, not just
+      epoch 1);
+    * estimates still agree with the analytic values / the fixed path;
+    * an adapted run SIGKILLed mid-flight and resumed from its state
+      dir finishes with results *bit-identical* to an uninterrupted
+      run, and the Layer-3 audit (STR001-007, including the grid epoch
+      chain) is clean on both state dirs.
+    """
+    import json
+    import shutil
+    import tempfile
+
+    from repro.analysis.streams import audit_state_dir
+    from repro.core import gaussian_family
+    from repro.core.genz import corner_peak
+    from repro.obs import Observability
+    from repro.service.api import IntegrationClient, IntegrationRequest
+
+    def mk(state_dir=None, obs=None):
+        # one refit opportunity per wave keeps the epoch chain short and
+        # the phase affordable; knobs are part of the replay contract
+        return IntegrationEngine(
+            seed=seed, round_samples=round_samples, state_dir=state_dir,
+            obs=obs if obs is not None else Observability.enabled(),
+            pipeline_waves=False, adapt_rounds_per_epoch=1,
+            adapt_max_epochs=3, adapt_pilot_samples=2048)
+
+    def solve(fams, target, adaptive):
+        engine = mk()
+        t0 = time.time()
+        res = IntegrationClient(engine).integrate(
+            fams, target_stderr=target, adaptive=adaptive)
+        dt = time.time() - t0
+        samples = int(sum(res.n_per_family))
+        if adaptive:
+            # charge every pilot against the adaptive budget: one per
+            # opened epoch plus at most one frozen refit attempt per
+            # base stream, each adapt_pilot_samples draws per function
+            epochs = int(engine.obs.m["adapted_streams"].value())
+            n_fn = sum(f.n_fn for f in fams)
+            samples += (epochs + len(fams)) * \
+                engine.adapt_pilot_samples * n_fn
+        refits = int(engine.obs.m["grid_refits"].value())
+        return res, samples, refits, dt
+
+    corner, corner_exact = corner_peak(2, 3, difficulty=4.0)
+    gauss = gaussian_family(2, 2, sigma=[0.2, 0.35],
+                            lo=-np.inf, hi=np.inf)
+    workloads = [("genz_corner_3d", [corner], 5e-5, corner_exact),
+                 ("gaussian_r2", [gauss], 5e-4, None)]
+
+    rows = []
+    for name, fams, target, exact in workloads:
+        fixed_res, fixed_n, _, fixed_dt = solve(fams, target, False)
+        adapt_res, adapt_n, refits, adapt_dt = solve(fams, target, True)
+        ratio = fixed_n / max(adapt_n, 1)
+        assert ratio >= 5.0, (
+            f"{name}: adaptive path took {adapt_n} samples (incl. "
+            f"pilots) vs {fixed_n} fixed — {ratio:.1f}x, gate >= 5x")
+        assert refits >= 1, (
+            f"{name}: no grid refit fired — the epoch chain never "
+            f"advanced beyond epoch 1")
+        assert np.all(adapt_res.stderrs <= target)
+        if exact is not None:
+            assert np.all(np.abs(adapt_res.means - exact)
+                          <= 6 * adapt_res.stderrs + 1e-5), \
+                f"{name}: adapted estimate off its analytic value"
+        tol = 6 * (adapt_res.stderrs + fixed_res.stderrs) + 1e-6
+        assert np.all(np.abs(adapt_res.means - fixed_res.means) <= tol), \
+            f"{name}: adaptive and fixed paths disagree"
+        print(f"adaptive[{name}]: {fixed_n} fixed vs {adapt_n} adapted "
+              f"samples to stderr<={target:g} ({ratio:.1f}x fewer, "
+              f"{refits} refit(s); {fixed_dt:.1f}s vs {adapt_dt:.1f}s)")
+        rows.append({
+            "workload": name, "target_stderr": target,
+            "fixed_samples": fixed_n, "adaptive_samples": adapt_n,
+            "sample_ratio": round(ratio, 2), "grid_refits": refits,
+            "fixed_seconds": round(fixed_dt, 3),
+            "adaptive_seconds": round(adapt_dt, 3),
+        })
+
+    # SIGKILL resume: an interrupted adapted run must finish
+    # bit-identically to an uninterrupted one, with clean audits
+    work = tempfile.mkdtemp(prefix="zmc_bench10_")
+    resume_target = 2e-4
+    try:
+        dir_a = os.path.join(work, "uninterrupted")
+        eng = mk(state_dir=dir_a)
+        r_a = IntegrationClient(eng).integrate(
+            [corner], target_stderr=resume_target, adaptive=True)
+        eng.close()
+
+        dir_b = os.path.join(work, "interrupted")
+        eng = mk(state_dir=dir_b)
+        eng.submit(IntegrationRequest.make(
+            [corner], target_stderr=resume_target, adaptive=True))
+        for _ in range(3):
+            eng.step()
+        del eng     # abandoned mid-flight: no close(), no snapshot
+
+        eng = mk(state_dir=dir_b)
+        r_b = IntegrationClient(eng).integrate(
+            [corner], target_stderr=resume_target, adaptive=True)
+        eng.close()
+
+        digest_a = (r_a.means.tobytes(), r_a.stderrs.tobytes(),
+                    r_a.n_per_family, r_a.stream_ids)
+        digest_b = (r_b.means.tobytes(), r_b.stderrs.tobytes(),
+                    r_b.n_per_family, r_b.stream_ids)
+        assert digest_a == digest_b, (
+            "resumed adapted run is not bit-identical to the "
+            "uninterrupted run")
+        audits = {}
+        for tag, d in (("uninterrupted", dir_a), ("interrupted", dir_b)):
+            report = audit_state_dir(d)
+            assert report.ok, (
+                f"{tag} state dir failed the Layer-3 audit: "
+                f"{[str(v) for v in report.violations]}")
+            audits[tag] = {"violations": 0, "streams": report.streams}
+        print(f"adaptive resume: SIGKILL mid-flight -> bit-identical "
+              f"result after resume (final epoch stream "
+              f"{r_a.stream_ids[0][:16]}), audits clean on both dirs")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    payload = {
+        "bench": "service_adaptive", "round_samples": round_samples,
+        "gate": "fixed_samples >= 5 * adaptive_samples (pilots charged)",
+        "workloads": rows,
+        "resume": {"target_stderr": resume_target,
+                   "bit_identical": True, "audits": audits},
+    }
+    if json_out:
+        with open(json_out, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_out}")
+    return payload
+
+
 def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
         seed: int = 0, json_out: str | None = None,
         refine_rounds: int = 4, infinite_json_out: str | None = None,
         telemetry_json_out: str | None = None,
         trace_out: str | None = None,
         metrics_out: str | None = None,
-        sweep_json_out: str | None = None) -> int:
+        sweep_json_out: str | None = None,
+        adaptive_json_out: str | None = None) -> int:
     reqs = demo_workload(n_requests, n_fn=n_fn, n_samples=n_samples)
     n_fams = sum(len(r.families) for r in reqs)
     dims = sorted({f.dim for r in reqs for f in r.families})
@@ -594,6 +755,10 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
     sweep = _sweep_phase(round_samples=round_samples, rounds=refine_rounds,
                          seed=seed, json_out=sweep_json_out)
 
+    # adaptive variance reduction vs fixed allocation (BENCH_10 gate)
+    adaptive = _adaptive_phase(round_samples=round_samples, seed=seed,
+                               json_out=adaptive_json_out)
+
     rows = []
     print("path,requests,launches,seconds,req_per_s")
     for name, res, launches, dt in [
@@ -620,6 +785,7 @@ def run(n_requests: int, n_fn: int, n_samples: int, round_samples: int,
                        "infinite_domains": infinite,
                        "telemetry": telemetry,
                        "sweep": sweep,
+                       "adaptive": adaptive,
                        "items_deduped": engine.stats.items_deduped,
                        "cache": engine.cache.stats()},
                       f, indent=2, sort_keys=True)
@@ -655,6 +821,9 @@ def main() -> int:
     ap.add_argument("--sweep-json-out", default=None,
                     help="write the parameter-grid sweep phase as its own "
                          "JSON artifact (BENCH_8.json)")
+    ap.add_argument("--adaptive-json-out", default=None,
+                    help="write the adaptive variance-reduction phase as "
+                         "its own JSON artifact (BENCH_10.json)")
     args = ap.parse_args()
     if args.smoke:
         return run(max(64, args.requests), n_fn=4, n_samples=8192,
@@ -663,14 +832,16 @@ def main() -> int:
                    infinite_json_out=args.infinite_json_out,
                    telemetry_json_out=args.telemetry_json_out,
                    trace_out=args.trace_out, metrics_out=args.metrics_out,
-                   sweep_json_out=args.sweep_json_out)
+                   sweep_json_out=args.sweep_json_out,
+                   adaptive_json_out=args.adaptive_json_out)
     return run(args.requests, n_fn=args.n_fn, n_samples=args.samples,
                round_samples=args.round_samples, json_out=args.json_out,
                refine_rounds=args.refine_rounds,
                infinite_json_out=args.infinite_json_out,
                telemetry_json_out=args.telemetry_json_out,
                trace_out=args.trace_out, metrics_out=args.metrics_out,
-               sweep_json_out=args.sweep_json_out)
+               sweep_json_out=args.sweep_json_out,
+               adaptive_json_out=args.adaptive_json_out)
 
 
 if __name__ == "__main__":

@@ -20,15 +20,22 @@ launch time:
 * a form declaring ``sweep_cols`` really does compose with
   ``template.swept_body`` — the declared column map must substitute
   cleanly into the packed row (and through the compactified wrapper),
-  or parameter sweeps would fail at first launch (KCT005).
+  or parameter sweeps would fail at first launch (KCT005);
+* a form advertising ``supports_adapted=True`` really does compose with
+  ``template.adapted_body`` — the VEGAS importance-map stage must read
+  its packed edge columns and fold the Jacobian cleanly (including
+  through the compactified wrapper), or adapted streams would fail (or
+  bias the estimate) at their first post-pilot launch (KCT006).
 
-This module proves all five **abstractly**: each registered
+This module proves all six **abstractly**: each registered
 :class:`~repro.kernels.registry.KernelForm` body is traced with
 ``jax.make_jaxpr`` on zero-filled probe operands
 (:func:`repro.kernels.template.probe_operands`) for every capability
 combination it advertises (sampler × finite/compactified ×
-plain/swept, over a probe dim sweep).  No kernel is launched and no
-device is needed — this runs in CI on CPU in milliseconds.
+plain/swept × plain/adapted, over a probe dim sweep; the engine never
+builds swept+adapted streams, so that combination is not probed).  No
+kernel is launched and no device is needed — this runs in CI on CPU in
+milliseconds.
 
 :func:`validate_form_registration` packages the same predicates for
 eager use at registration time (``registry.register_form``), so a
@@ -50,6 +57,12 @@ from repro.kernels import template
 # suite lives in plus one mid-size dim; each is clipped to the form's
 # advertised max_dim (and the Sobol table limit for sampler="sobol").
 PROBE_DIMS = (1, 2, 4)
+
+# Importance-grid bins used when probing adapted combos (KCT006).  The
+# adapted wrapper unrolls a static per-axis bin loop, so a small probe
+# count keeps registration-time traces fast; composition is bin-count
+# independent (the column layout is the only thing that scales).
+PROBE_BINS = 4
 
 # jaxpr primitive-name fragments that mean "talks to the host".  The
 # ``effects`` set catches modern versions of these; the name scan keeps
@@ -130,8 +143,10 @@ def _full_sweep(form, dim: int) -> tuple[str, ...]:
 
 def _combos(form):
     """Every advertised capability combination: (sampler, compactified,
-    swept, dim) tuples the form claims to support.  ``swept`` probes the
-    form's full ``sweep_cols`` name set (or stays ``()``)."""
+    swept, adapted, dim) tuples the form claims to support.  ``swept``
+    probes the form's full ``sweep_cols`` name set (or stays ``()``);
+    ``adapted`` is probed only for non-swept combos, mirroring the
+    engine (adapted streams are never swept)."""
     out = []
     for sampler in form.samplers:
         for compact in (False, True):
@@ -140,48 +155,65 @@ def _combos(form):
             for dim in _probe_dims(form, sampler):
                 for swept in ({(), _full_sweep(form, dim)} if
                               form.supports_swept else {()}):
-                    if form.supports(dim=dim, sampler=sampler,
-                                     compactified=compact, sweep=swept):
-                        out.append((sampler, compact, swept, dim))
+                    adapt_axis = ((False, True) if
+                                  form.supports_adapted and not swept
+                                  else (False,))
+                    for adapted in adapt_axis:
+                        if form.supports(dim=dim, sampler=sampler,
+                                         compactified=compact, sweep=swept,
+                                         adapted=adapted):
+                            out.append((sampler, compact, swept, adapted,
+                                        dim))
     return sorted(out)
 
 
-def _body_for(form, compact: bool, dim: int, swept: tuple[str, ...] = ()):
+def _body_for(form, compact: bool, dim: int, swept: tuple[str, ...] = (),
+              adapt_bins: int = 0):
     """(body, n_cols) the launch path would use for this combo — the
-    sweep wrapper grows one table column per swept parameter column and
-    the compactified wrapper 2*dim transform columns after that, exactly
-    mirroring ``template.body_and_packed``'s composition and layout."""
+    sweep wrapper grows one table column per swept parameter column,
+    the importance-map wrapper ``dim * (adapt_bins + 1)`` edge columns
+    after that, and the compactified wrapper 2*dim transform columns
+    last, exactly mirroring ``template.body_and_packed``'s
+    ``[base][sweep][adapt][transform]`` composition and layout."""
     body, n_cols = form.body, form.n_cols(dim)
     if swept:
         cols = form.sweep_cols(dim)
         col_map = tuple(int(c) for name in swept for c in cols[name])
         body = template.swept_body(body, n_cols, col_map)
         n_cols += len(col_map)
+    adapt_len = dim * (adapt_bins + 1) if adapt_bins else 0
     if compact:
-        body = template.compactified_body(body, n_cols)
+        body = template.compactified_body(body, n_cols + adapt_len)
+    if adapt_bins:
+        body = template.adapted_body(body, n_cols, adapt_bins)
+    n_cols += adapt_len
+    if compact:
         n_cols += 2 * dim
     return body, n_cols
 
 
 def check_form(form) -> list[Violation]:
-    """KCT001/KCT002/KCT004/KCT005 for one form, over every advertised
-    combo."""
+    """KCT001/KCT002/KCT004/KCT005/KCT006 for one form, over every
+    advertised combo."""
     found: list[Violation] = []
     path, line = _body_location(form.body)
     seen: set[tuple] = set()
-    for sampler, compact, swept, dim in _combos(form):
-        combo_key = (compact, swept, dim)  # bodies are sampler-independent
+    for sampler, compact, swept, adapted, dim in _combos(form):
+        combo_key = (compact, swept, adapted, dim)  # bodies are sampler-independent
         if combo_key in seen:
             continue
         seen.add(combo_key)
-        body, n_cols = _body_for(form, compact, dim, swept)
+        adapt_bins = PROBE_BINS if adapted else 0
+        body, n_cols = _body_for(form, compact, dim, swept, adapt_bins)
         label = (f"{form.name}[dim={dim}"
                  + (", compactified" if compact else "")
-                 + (f", swept={','.join(swept)}" if swept else "") + "]")
+                 + (f", swept={','.join(swept)}" if swept else "")
+                 + (", adapted" if adapted else "") + "]")
         try:
             out_avals, closed = _trace_body(body, dim, n_cols)
         except Exception as exc:  # noqa: BLE001 - any trace failure is the finding
-            rule = ("KCT005" if swept else
+            rule = ("KCT006" if adapted else
+                    "KCT005" if swept else
                     "KCT004" if compact else "KCT001")
             found.append(Violation(
                 rule=rule, path=path, line=line,
@@ -211,7 +243,8 @@ def check_form(form) -> list[Violation]:
         shapes = [getattr(a, "shape", None) for a in out_avals]
         if shapes != [(template.S_ROWS, template.S_LANES)]:
             found.append(Violation(
-                rule=("KCT005" if swept else
+                rule=("KCT006" if adapted else
+                      "KCT005" if swept else
                       "KCT004" if compact else "KCT002"),
                 path=path, line=line,
                 message=f"{label} returns avals shaped {shapes}, expected "

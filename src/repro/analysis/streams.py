@@ -15,7 +15,13 @@ the counter-stream bookkeeping:
   round quantum (STR003, STR005);
 * every deposit references an **allocated** stream — a dep whose alloc
   never made it to disk is dropped on replay and silently recomputed
-  (STR006).
+  (STR006);
+* adapted streams' **grid epochs chain contiguously** — each ``grid``
+  record extends its parent stream's epoch by exactly one (or opens
+  epoch 1 on a base stream), duplicate records for one child agree, and
+  the grid is journaled *before* the child stream's alloc, so a resumed
+  engine always rebuilds the adapted family from the recorded edges
+  rather than refitting a different grid (STR007).
 
 This module proves them two ways from ONE set of predicates:
 
@@ -201,6 +207,11 @@ def audit_state_dir(state_dir: str) -> AuditReport:
             quantum_src = "meta.json"
 
     streams: dict[str, _Stream] = {}
+    # child chash -> (parent chash, epoch, source path, line) of every
+    # grid record seen; chain contiguity is proven at the end so the
+    # verdict is independent of snapshot/journal interleaving
+    grids: dict[str, tuple[str, int, str, int]] = {}
+    journal_allocs: set[str] = set()
     hwm = 0
     if os.path.exists(snap_path):
         snap_meta, _ = read_snapshot(snap_path)
@@ -238,6 +249,9 @@ def audit_state_dir(state_dir: str) -> AuditReport:
                 rule="STR001", path=snap_path, line=0,
                 message=f"streams {a[:16]} and {b[:16]} own overlapping "
                         "counter ranges"))
+        for i, g in enumerate(snap_meta.get("grids", []), start=1):
+            grids[g["chash"]] = (g["parent"], int(g["epoch"]),
+                                 snap_path, i)
 
     records, bad_tail = read_journal(journal_path)
     report.truncated_tail_bytes = bad_tail
@@ -246,6 +260,7 @@ def audit_state_dir(state_dir: str) -> AuditReport:
         kind = record.get("t")
         if kind == "alloc":
             chash = record["chash"]
+            journal_allocs.add(chash)
             fn_offset = int(record["fn_offset"])
             n_fn = int(record["n_fn"])
             rs = int(record["round_samples"])
@@ -324,10 +339,51 @@ def audit_state_dir(state_dir: str) -> AuditReport:
             else:
                 st.frontier += 1
                 report.deposits_folded += 1
+        elif kind == "grid":
+            chash = record["chash"]
+            parent = record["parent"]
+            epoch = int(record["epoch"])
+            if chash in journal_allocs:
+                found.append(Violation(
+                    rule="STR007", path=journal_path, line=lineno,
+                    message=f"grid record for {chash[:16]} arrives after "
+                            "its stream's alloc: the WAL must journal an "
+                            "adapted stream's grid before the stream "
+                            "itself, or a crash in between strands the "
+                            "child without its edges"))
+            known = grids.get(chash)
+            if known is not None:
+                if (known[0], known[1]) != (parent, epoch):
+                    found.append(Violation(
+                        rule="STR007", path=journal_path, line=lineno,
+                        message=f"duplicate grid record for {chash[:16]} "
+                                f"disagrees: parent {parent[:16]} epoch "
+                                f"{epoch} vs recorded parent "
+                                f"{known[0][:16]} epoch {known[1]}"))
+            else:
+                grids[chash] = (parent, epoch, journal_path, lineno)
         else:
             found.append(Violation(
                 rule="STR003", path=journal_path, line=lineno,
                 message=f"unknown journal record type {kind!r}"))
+
+    # STR007 chain contiguity, order-independently over every grid seen:
+    # epoch k's parent must hold a grid record at epoch k-1, and epoch 1
+    # must chain to a base stream (no grid record of its own)
+    for chash in sorted(grids):
+        parent, epoch, src, line = grids[chash]
+        parent_grid = grids.get(parent)
+        expect = parent_grid[1] + 1 if parent_grid is not None else 1
+        if epoch != expect:
+            holds = (f"holds a grid record at epoch {parent_grid[1]}"
+                     if parent_grid is not None
+                     else "has no grid record (a base stream)")
+            found.append(Violation(
+                rule="STR007", path=src, line=line,
+                message=f"grid for {chash[:16]} opens epoch {epoch}, but "
+                        f"its parent {parent[:16]} {holds} — the epoch "
+                        f"chain must be contiguous (expected epoch "
+                        f"{expect})"))
 
     report.streams = len(streams)
     return report

@@ -44,6 +44,9 @@ RULES: dict[str, str] = {
                "through template.compactified_body"),
     "KCT005": ("forms advertising sweep capability (sweep_cols) must "
                "trace through template.swept_body"),
+    "KCT006": ("forms advertising supports_adapted=True must trace "
+               "through template.adapted_body (the VEGAS importance-map "
+               "stage)"),
     "STR001": ("cached streams own pairwise-disjoint counter-space "
                "ranges"),
     "STR002": ("per-stream deposit rounds are gap-free and monotone "
@@ -56,6 +59,10 @@ RULES: dict[str, str] = {
                "round quantum"),
     "STR006": ("every deposit references an allocated stream (a dep "
                "without its alloc is dropped on replay)"),
+    "STR007": ("adapted-stream grid epochs form a contiguous chain — "
+               "each grid record's epoch extends its parent by one, "
+               "duplicate children agree, and the grid record precedes "
+               "the child stream's alloc in the journal"),
 }
 
 

@@ -5,7 +5,15 @@
 #   ZMCNormal          - stratified sampling + heuristic tree search (dim 8-12)
 #   ZMCFunctional      - one integrand x large parameter grid (v5)
 #   ZMCMultiFunctions  - many heterogeneous integrands (the v5.1 feature)
+#
+# Variance-reduction substrate (the service's adaptive planner builds on
+# these; see docs/adaptive.md):
+#   adaptive    - VEGAS importance grids: pilot, refine, inverse-CDF map
+#   stratified  - fixed-capacity stratum tables + per-stratum statistics
+#   tree_search - priority-driven stratum refinement (dim 8-12 escalation)
 
+from repro.core import adaptive, stratified, tree_search
+from repro.core.adaptive import region_scores
 from repro.core.integrand import (
     IntegrandFamily,
     MultiFunctionSpec,
@@ -38,6 +46,7 @@ __all__ = [
     "ZMCMultiFunctions",
     "ZMCNormal",
     "abs_sum_family",
+    "adaptive",
     "family_sums",
     "finalize",
     "gaussian_analytic",
@@ -45,5 +54,8 @@ __all__ = [
     "harmonic_analytic",
     "harmonic_family",
     "merge_sums",
+    "region_scores",
     "sharded_family_sums",
+    "stratified",
+    "tree_search",
 ]

@@ -268,7 +268,8 @@ def _sums_with_ids(family, n_samples, key, fn_ids, sample_offset, chunk,
         impl = registry.lookup(family.kernel, dim=family.dim,
                                sampler=sampler,
                                compactified=family.compact,
-                               sweep=family.swept)
+                               sweep=family.swept,
+                               adapted=bool(family.adapt_bins))
         if impl is not None:
             return impl(family, n_samples, key, fn_ids=fn_ids,
                         sample_offset=sample_offset)

@@ -13,6 +13,12 @@ which is what lets the fused Pallas path evaluate compactified families
 too: the codes pack into kernel parameter columns and the in-kernel
 wrapper stage (``repro.kernels.template.compactified_body``) applies the
 very same :func:`apply_transform` the chunked closure uses.
+
+The importance-map stage composes *outside* this one: an adapted family
+(``repro.core.adaptive``) maps uniforms through its grid's inverse CDF
+first, then the transform stage maps the grid's x-space — which is the
+canonical (compactified) box — onward.  Packed rows follow the same
+order: ``[base params][sweep table][grid edges][transform columns]``.
 """
 
 from __future__ import annotations

@@ -60,6 +60,11 @@ class IntegrandFamily:
         point, and kernel dispatch substitutes the table columns into
         the packed template row in-kernel
         (``repro.kernels.template.swept_body``).
+      adapt_bins: set by :meth:`adapted` — bins per axis of the VEGAS
+        importance grid (0 = unadapted).  ``params`` is the ``{"inner":
+        wrapped params, "grid": (n_fn, dim, n_bins + 1) edges}`` wrapper,
+        the domain box is the unit cube, and kernel dispatch applies the
+        inverse-CDF map stage (``repro.kernels.template.adapted_body``).
     """
 
     fn: Callable[[Array, Any], Array]
@@ -69,18 +74,21 @@ class IntegrandFamily:
     kernel: str | None = None
     compact: bool = False
     swept: tuple[str, ...] = ()
+    adapt_bins: int = 0
 
-    # -- pytree plumbing (fn/name/kernel/compact/swept are static) -----------
+    # -- pytree plumbing (fn/name/kernel/compact/swept/adapt_bins are static)
     def tree_flatten(self):
         return ((self.params, self.domains),
-                (self.fn, self.name, self.kernel, self.compact, self.swept))
+                (self.fn, self.name, self.kernel, self.compact, self.swept,
+                 self.adapt_bins))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        fn, name, kernel, compact, swept = aux
+        fn, name, kernel, compact, swept, adapt_bins = aux
         params, domains = children
         return cls(fn=fn, params=params, domains=domains, name=name,
-                   kernel=kernel, compact=compact, swept=swept)
+                   kernel=kernel, compact=compact, swept=swept,
+                   adapt_bins=adapt_bins)
 
     # -- derived sizes --------------------------------------------------------
     @property
@@ -137,13 +145,91 @@ class IntegrandFamily:
         Kernel param packers (``KernelForm.pack_params``) consume this:
         same shapes and finite box, but ``params`` is the original user
         pytree rather than the ``{"inner", "aux"}`` wrapper.  Identity
-        for non-compact families.
+        for non-compact families; unwraps the importance-grid stage
+        first on adapted ones.
         """
+        if self.adapt_bins:
+            return self.adapt_inner().inner()
         if not self.compact:
             return self
         return IntegrandFamily(fn=self.fn, params=self.params["inner"],
                                domains=self.domains, name=self.name,
                                kernel=self.kernel, swept=self.swept)
+
+    def adapted(self, edges, *, epoch: int = 1) -> "IntegrandFamily":
+        """Wrap this finite-box family with a VEGAS importance grid.
+
+        Args:
+          edges: (n_fn, dim, n_bins + 1) per-axis bin edges, strictly
+            increasing and spanning this family's box
+            (:func:`repro.core.adaptive.refine_edges` output).
+          epoch: grid-epoch label (cosmetic: it suffixes :attr:`name`;
+            the service keys epoch streams by content hash, which the
+            edge values already make distinct).
+
+        Returns a family whose domain is the unit cube: uniforms map
+        through the grid's inverse CDF with the bin-width Jacobian
+        folded into the value (``repro.core.adaptive.apply_map``), so
+        its plain MC estimate is an unbiased importance-sampled estimate
+        of the same integral, at the variance the grid earns.  Keeps
+        :attr:`kernel`: registered forms evaluate adapted families on
+        the fused Pallas path through the ``adapted_body`` wrapper
+        stage.  Refits never nest: refine from :meth:`adapt_inner`.
+        """
+        if self.adapt_bins:
+            raise ValueError("family is already adapted — refit from "
+                             "adapt_inner(), grids never nest")
+        if not domains_lib.is_finite_box(self.domains):
+            raise ValueError("importance grids need a finite box — "
+                             "compactify before adapting")
+        edges = jnp.asarray(edges, jnp.float32)
+        if edges.ndim != 3 or edges.shape[:2] != (self.n_fn, self.dim):
+            raise ValueError(
+                f"edges must be (n_fn={self.n_fn}, dim={self.dim}, "
+                f"n_bins + 1); got {edges.shape}")
+        n_bins = int(edges.shape[-1]) - 1
+        if n_bins < 1:
+            raise ValueError("importance grids need at least one bin")
+        from repro.core import adaptive as adaptive_lib
+        inner_fn = self.fn
+
+        def fn(u, p):
+            x, jac = adaptive_lib.apply_map(u, p["grid"])
+            return inner_fn(x, p["inner"]) * jac
+
+        unit = jnp.broadcast_to(
+            jnp.asarray([0.0, 1.0], jnp.float32),
+            (self.n_fn, self.dim, 2))
+        return IntegrandFamily(
+            fn=fn,
+            params={"inner": self.params, "grid": edges},
+            domains=unit,
+            name=f"{self.name}:adapted[e{int(epoch)}]",
+            kernel=self.kernel,
+            compact=self.compact,
+            swept=self.swept,
+            adapt_bins=n_bins,
+        )
+
+    def adapt_inner(self) -> "IntegrandFamily":
+        """The pre-grid view of an adapted family.
+
+        Same shapes, ``params`` without the ``{"inner", "grid"}``
+        wrapper, and the original finite box recovered from the grid's
+        outermost edges (the grid spans it by construction).  Kernel
+        param packers and refits consume this.  Identity for unadapted
+        families.  ``fn`` is kept as-is (the packers only read params;
+        to *evaluate* the pre-grid integrand use the base family the
+        grid was fit from).
+        """
+        if not self.adapt_bins:
+            return self
+        edges = self.params["grid"]
+        box = jnp.stack([edges[..., 0], edges[..., -1]], axis=-1)
+        return IntegrandFamily(fn=self.fn, params=self.params["inner"],
+                               domains=box, name=self.name,
+                               kernel=self.kernel, compact=self.compact,
+                               swept=self.swept)
 
     def swept_over(self, table: dict) -> "IntegrandFamily":
         """Sweep this single-function template over a parameter table.
@@ -165,9 +251,10 @@ class IntegrandFamily:
         Sweep before :meth:`compactified`: the canonicalizer composes
         the two stages as ``compactify(sweep(template))``.
         """
-        if self.compact:
-            raise ValueError("sweep the template before compactifying "
-                             "(canonicalization composes the stages)")
+        if self.compact or self.adapt_bins:
+            raise ValueError("sweep the template before compactifying or "
+                             "adapting (canonicalization composes the "
+                             "stages)")
         if self.n_fn != 1:
             raise ValueError(
                 f"sweep template must be a single function (n_fn == 1); "

@@ -4,7 +4,11 @@ The domain is partitioned into axis-aligned boxes ("strata"); each stratum
 is estimated independently with a fixed sample budget and the estimates are
 combined.  Stratification both reduces variance and exposes *where* the
 integrand fluctuates — the per-stratum variance drives the heuristic tree
-search in :mod:`repro.core.tree_search`.
+search in :mod:`repro.core.tree_search`, and the same ``vol * sqrt(var)``
+scores seed the service's adaptive planner
+(:func:`repro.core.adaptive.region_scores` grades how non-uniform an
+integrand's mass is before committing to a VEGAS grid fit).  Exported
+from ``repro.core`` alongside both.
 
 All shapes are static (TPU requirement): a fixed-capacity stratum table with
 an active mask replaces the original implementation's dynamically-growing

@@ -15,6 +15,12 @@ with a bounded, statically-shaped refinement loop:
 Each iteration only evaluates the *new* strata, so the total work is
 ``n0 + 2 * depth * k_split`` stratum evaluations.  Everything is
 ``lax``-expressible and jit-compiles to a single program.
+
+This is the escalation path of the service's variance-reduction stack
+(exported from ``repro.core``): when
+:func:`repro.core.adaptive.region_scores` shows an integrand's mass is
+too non-separable for an axis-factorized VEGAS grid to help, per-region
+refinement here spends samples where ``vol * sigma`` is largest instead.
 """
 
 from __future__ import annotations

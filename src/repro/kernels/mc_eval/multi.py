@@ -115,7 +115,7 @@ def plan_spec(spec, *, sampler: str = "mc",
         form = registry.form(fam.kernel) if fam.kernel else None
         if form is None or not form.supports(
                 dim=fam.dim, sampler=sampler, compactified=fam.compact,
-                sweep=fam.swept):
+                sweep=fam.swept, adapted=bool(fam.adapt_bins)):
             unfused.append(idx)
             continue
         by_dim.setdefault(fam.dim, []).append(idx)

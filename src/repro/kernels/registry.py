@@ -73,6 +73,14 @@ class KernelForm:
         families.  Declared combos are contract-checked eagerly at
         registration (rule KCT005), so an inconsistent map fails at the
         definition site.
+      supports_adapted: whether the eval body composes with the
+        in-kernel VEGAS importance-map stage
+        (``repro.kernels.template.adapted_body``) that serves adapted
+        families (``IntegrandFamily.adapted``).  Like compactification,
+        bodies consuming every dimension through ``draw`` compose
+        automatically; set False for bodies that read domain geometry
+        directly.  Declared combos are contract-checked eagerly at
+        registration (rule KCT006).
     """
 
     name: str
@@ -84,6 +92,7 @@ class KernelForm:
     backends: tuple[str, ...] = ("tpu", "interpret")
     supports_compactified: bool = True
     sweep_cols: Callable[[int], dict[str, tuple[int, ...]]] | None = None
+    supports_adapted: bool = True
 
     @property
     def supports_swept(self) -> bool:
@@ -92,12 +101,15 @@ class KernelForm:
 
     def supports(self, *, dim: int, sampler: str = "mc",
                  compactified: bool = False,
-                 sweep: tuple[str, ...] = ()) -> bool:
+                 sweep: tuple[str, ...] = (),
+                 adapted: bool = False) -> bool:
         if sampler not in self.samplers:
             return False
         if dim > self.max_dim:
             return False
         if compactified and not self.supports_compactified:
+            return False
+        if adapted and not self.supports_adapted:
             return False
         if sweep:
             if self.sweep_cols is None:
@@ -179,12 +191,13 @@ def form(name: str) -> KernelForm | None:
 
 def _explain_miss(f: "KernelForm | None", name: str, *, dim: int,
                   sampler: str, compactified: bool,
-                  sweep: tuple[str, ...]) -> str:
+                  sweep: tuple[str, ...], adapted: bool = False) -> str:
     """Human-readable reason a capability lookup missed, with the nearest
     combo the registry *does* serve."""
     asked = (f"dim={dim}, sampler={sampler!r}"
              + (", compactified" if compactified else "")
-             + (f", sweep={sweep}" if sweep else ""))
+             + (f", sweep={sweep}" if sweep else "")
+             + (", adapted" if adapted else ""))
     if f is None:
         hint = (f"no KernelForm named {name!r}; registered forms: "
                 f"{sorted(_FORMS)}")
@@ -205,6 +218,9 @@ def _explain_miss(f: "KernelForm | None", name: str, *, dim: int,
     if compactified and not f.supports_compactified:
         reasons.append("form does not compose with the compactification "
                        "stage (supports_compactified=False)")
+    if adapted and not f.supports_adapted:
+        reasons.append("form does not compose with the importance-map "
+                       "stage (supports_adapted=False)")
     if sweep:
         if f.sweep_cols is None:
             reasons.append("form declares no sweep_cols (not sweepable)")
@@ -225,16 +241,18 @@ def _explain_miss(f: "KernelForm | None", name: str, *, dim: int,
 
 def lookup(name: str, *, dim: int, sampler: str = "mc",
            compactified: bool = False, sweep: tuple[str, ...] = (),
-           required: bool = False) -> Callable | None:
+           adapted: bool = False, required: bool = False) -> Callable | None:
     """Capability-checked dispatch: impl for the requested combo or None.
 
-    Unknown names and unsupported (dim, sampler, compactified, sweep)
-    combinations return None — callers fall back to the chunked pure-JAX
-    path.  ``compactified`` marks families carrying the infinite-domain
-    transform stage; ``sweep`` names the parameters a swept family's
-    table overrides (forms opt in per parameter via ``sweep_cols``).
-    Legacy bare callables can pack neither transform nor table columns,
-    so they always miss those.
+    Unknown names and unsupported (dim, sampler, compactified, sweep,
+    adapted) combinations return None — callers fall back to the chunked
+    pure-JAX path.  ``compactified`` marks families carrying the
+    infinite-domain transform stage; ``sweep`` names the parameters a
+    swept family's table overrides (forms opt in per parameter via
+    ``sweep_cols``); ``adapted`` marks families carrying a VEGAS
+    importance grid (``IntegrandFamily.adapt_bins``).  Legacy bare
+    callables can pack no wrapper-stage columns, so they always miss
+    those.
 
     ``required=True`` turns the silent None into a ``ValueError`` naming
     the form, the requested capabilities, and the nearest registered
@@ -244,19 +262,21 @@ def lookup(name: str, *, dim: int, sampler: str = "mc",
     f = _FORMS.get(name)
     if f is not None:
         if not f.supports(dim=dim, sampler=sampler,
-                          compactified=compactified, sweep=sweep):
+                          compactified=compactified, sweep=sweep,
+                          adapted=adapted):
             if required:
                 raise ValueError(_explain_miss(
                     f, name, dim=dim, sampler=sampler,
-                    compactified=compactified, sweep=sweep))
+                    compactified=compactified, sweep=sweep,
+                    adapted=adapted))
             return None
         key = name if sampler == "mc" else f"{name}@{sampler}"
         return _REGISTRY.get(key)
-    if compactified or sweep:
+    if compactified or sweep or adapted:
         if required:
             raise ValueError(_explain_miss(
                 None, name, dim=dim, sampler=sampler,
-                compactified=compactified, sweep=sweep))
+                compactified=compactified, sweep=sweep, adapted=adapted))
         return None
     # legacy bare callables: only the default sampler naming convention
     key = name if sampler == "mc" else f"{name}@{sampler}"
@@ -264,7 +284,7 @@ def lookup(name: str, *, dim: int, sampler: str = "mc",
     if found is None and required:
         raise ValueError(_explain_miss(
             None, name, dim=dim, sampler=sampler,
-            compactified=compactified, sweep=sweep))
+            compactified=compactified, sweep=sweep, adapted=adapted))
     return found
 
 

@@ -53,6 +53,23 @@ stages compose — a compactified sweep packs
 ``[base cols][sweep cols][transform cols]`` and wraps
 ``compactified_body(swept_body(body))``.
 
+Adaptive importance sampling: an adapted family
+(``IntegrandFamily.adapt_bins``, built by ``IntegrandFamily.adapted``
+from a VEGAS grid fit — :mod:`repro.core.adaptive`) samples the unit
+cube and maps each draw through its per-axis inverse-CDF grid via a
+third wrapper stage (:func:`adapted_body`): the ``dim * (n_bins + 1)``
+bin-edge columns ride after the form's base (and sweep) columns, the
+wrapper bin-selects with static unrolled column reads (no gather) and
+folds the bin-width Jacobian product into the value tile.  The full
+composition for an adapted compactified family is
+``adapted_body(compactified_body(body))`` over a
+``[base][sweep][adapt][transform]`` column layout — draws are uniforms,
+the adapt stage maps them into the compactified box, the transform
+stage maps onward to the original (possibly infinite) coordinates.
+Adapted streams therefore fuse into the same (dim, sampler) bucket
+launches as everything else, and their counters depend only on (global
+fn id, sample id) exactly like an unadapted stream's.
+
 Multi-round evaluation: the grid carries an optional **round axis**
 (``n_rounds``) so one launch evaluates R consecutive counter-addressed
 sample windows, emitting per-round ``(sum f, sum f^2)`` partials in an
@@ -297,31 +314,91 @@ def sweep_table_cols(family):
          for name in family.swept], axis=1)
 
 
+@functools.lru_cache(maxsize=None)
+def adapted_body(body, base_cols: int, n_bins: int):
+    """Wrap an eval body with the VEGAS importance-map stage.
+
+    An adapted family's packed parameters carry, after its form's (and
+    sweep's) ``base_cols`` columns, ``dim * (n_bins + 1)`` bin-edge
+    columns — axis-major, so axis ``d``'s edges sit at
+    ``base_cols + d * (n_bins + 1)``.  The family's domain box is the
+    unit cube, so ``draw(d)`` yields a raw uniform tile; the wrapper
+    bin-selects with a static unrolled loop (scalar column reads +
+    ``jnp.where`` — no gather, which Mosaic would reject), linearly
+    interpolates inside the selected bin, hands the body the mapped
+    draws, and folds the per-axis ``n_bins * bin_width`` Jacobian
+    product into the returned value tile.  The arithmetic mirrors
+    :func:`repro.core.adaptive.apply_map` expression for expression, so
+    the fused and chunked paths agree on adapted streams exactly like
+    they do on compactified ones.
+
+    lru_cached for the same reason as :func:`compactified_body`: bucket
+    body dedupe and the jit compile cache key on body identity.
+    """
+
+    def wrapped(draw, p, f, dim: int):
+        xs = []
+        jac = None
+        for d in range(dim):
+            u = draw(d)
+            s = u * float(n_bins)
+            idx = jnp.minimum(s.astype(jnp.int32), n_bins - 1)
+            frac = s - idx.astype(jnp.float32)
+            col = base_cols + d * (n_bins + 1)
+            x = jnp.zeros_like(u)
+            w = jnp.zeros_like(u)
+            for b in range(n_bins):
+                e0 = p[f, col + b]
+                e1 = p[f, col + b + 1]
+                sel = idx == b
+                x = jnp.where(sel, e0 + frac * (e1 - e0), x)
+                w = jnp.where(sel, (e1 - e0) * float(n_bins), w)
+            xs.append(x)
+            jac = w if jac is None else jac * w
+        val = body(lambda d: xs[d], p, f, dim)
+        return val * jac
+
+    wrapped.__name__ = f"adapted_{getattr(body, '__name__', 'body')}"
+    return wrapped
+
+
+def adapt_grid_cols(family):
+    """f32[n_fn, dim * (n_bins + 1)] packed bin-edge columns of an
+    adapted family, appended after its form's base (and sweep) columns
+    in axis-major order."""
+    return jnp.asarray(family.params["grid"], jnp.float32).reshape(
+        family.n_fn, -1)
+
+
 def packed_cols(form, family) -> int:
     """Total packed width of ``family`` under ``form`` — the width
-    :func:`body_and_packed` produces, sweep and transform columns
-    included.  The fused planner sizes its buckets with this so the
-    column layout lives in one module."""
+    :func:`body_and_packed` produces, sweep, adapt-grid and transform
+    columns included.  The fused planner sizes its buckets with this so
+    the column layout lives in one module."""
+    adapt = family.dim * (family.adapt_bins + 1) if family.adapt_bins else 0
     extra = 2 * family.dim if family.compact else 0
     sweep = len(sweep_col_map(form, family.inner())) if family.swept else 0
-    return form.n_cols(family.dim) + sweep + extra
+    return form.n_cols(family.dim) + sweep + adapt + extra
 
 
 def body_and_packed(form, family):
     """The (eval body, f32[n_fn, cols]) pair of one family under ``form``.
 
     The single place swept families grow their substitution wrapper and
-    table columns, and compactified families their transform wrapper and
-    transform columns — composed, for a compactified sweep, as
-    ``compactified_body(swept_body(body))`` over a
-    ``[base][sweep][transform]`` column layout.  Finite non-swept
-    families pass through untouched.  Callers (the single-family impl
-    and the fused planner) must have capability-checked
-    ``form.supports(..., compactified=family.compact,
-    sweep=family.swept)`` first.
+    table columns, compactified families their transform wrapper and
+    transform columns, and adapted families their importance-map wrapper
+    and bin-edge columns — composed, in full, as
+    ``adapted_body(compactified_body(swept_body(body)))`` over a
+    ``[base][sweep][adapt][transform]`` column layout.  Finite non-swept
+    non-adapted families pass through untouched.  Callers (the
+    single-family impl and the fused planner) must have
+    capability-checked ``form.supports(..., compactified=family.compact,
+    sweep=family.swept, adapted=bool(family.adapt_bins))`` first.
     """
+    adapt_bins = family.adapt_bins
+    core = family.adapt_inner()
     base_cols = form.n_cols(family.dim)
-    inner = family.inner()
+    inner = core.inner()
     if family.swept:
         col_map = sweep_col_map(form, inner)
         body = swept_body(form.body, base_cols, col_map)
@@ -333,10 +410,16 @@ def body_and_packed(form, family):
         body = form.body
         packed = jnp.asarray(form.pack_params(inner), jnp.float32)
         core_cols = base_cols
-    if not family.compact:
-        return body, packed
-    packed = jnp.concatenate([packed, transform_cols(family)], axis=1)
-    return compactified_body(body, core_cols), packed
+    adapt_len = family.dim * (adapt_bins + 1) if adapt_bins else 0
+    if family.compact:
+        # the transform stage reads past the adapt columns: [..][adapt][transform]
+        body = compactified_body(body, core_cols + adapt_len)
+    if adapt_bins:
+        body = adapted_body(body, core_cols, adapt_bins)
+        packed = jnp.concatenate([packed, adapt_grid_cols(family)], axis=1)
+    if family.compact:
+        packed = jnp.concatenate([packed, transform_cols(core)], axis=1)
+    return body, packed
 
 
 def _fused_kernel(*refs, dim: int, bodies: tuple, sampler: str,
@@ -549,12 +632,14 @@ def make_family_impl(form, sampler: str):
         n_fn, dim = family.n_fn, family.dim
         compact = family.compact
         if not form.supports(dim=dim, sampler=sampler, compactified=compact,
-                             sweep=family.swept):
+                             sweep=family.swept,
+                             adapted=bool(family.adapt_bins)):
             raise ValueError(
                 f"kernel {form.name!r} does not support dim={dim} with "
                 f"sampler={sampler!r}"
                 + (" on a compactified family" if compact else "")
-                + (f" swept over {family.swept}" if family.swept else ""))
+                + (f" swept over {family.swept}" if family.swept else "")
+                + (" with an importance grid" if family.adapt_bins else ""))
         if fn_ids is None:
             fn_ids = jnp.uint32(fn_offset) + jnp.arange(n_fn,
                                                         dtype=jnp.uint32)

@@ -295,6 +295,11 @@ def service_metrics(registry: MetricsRegistry) -> dict:
                                      ladder (agrees with
                                      ResultCache.quarantined_streams)
     zmc_deadline_expirations_total   tickets failed on an expired deadline
+    zmc_adapted_streams_total        importance-grid epoch streams opened
+                                     (one per VEGAS grid fit, incl. epoch 1)
+    zmc_grid_refits_total            grid refits (epoch openings beyond the
+                                     first; agrees with ``grid_refit`` trace
+                                     events)
     ==============================  =============================================
     """
     return {
@@ -375,4 +380,11 @@ def service_metrics(registry: MetricsRegistry) -> dict:
         "deadline_expirations": registry.counter(
             "zmc_deadline_expirations_total",
             "tickets completed as RequestFailed on an expired deadline"),
+        "adapted_streams": registry.counter(
+            "zmc_adapted_streams_total",
+            "importance-grid epoch streams opened (one per VEGAS grid "
+            "fit, including the first epoch)"),
+        "grid_refits": registry.counter(
+            "zmc_grid_refits_total",
+            "importance-grid refits (epoch openings beyond the first)"),
     }

@@ -65,6 +65,14 @@ class IntegrationRequest:
         ticket *completes* with a :class:`RequestFailed` (reason
         ``"deadline"``) instead of hanging; retry backoff sleeps are
         clamped to the remaining budget.
+      adaptive: opt in to VEGAS importance-grid adaptation
+        (``docs/adaptive.md``): the engine fits a per-stream grid from a
+        deterministic pilot and samples subsequent waves through its
+        inverse-CDF map, refitting between waves until ``target_stderr``
+        is met or the grid converges.  Requires ``target_stderr`` (a
+        pure sample budget has nothing to adapt toward — the flag is
+        then ignored); still deterministic and bit-identically resumable
+        (grid epochs are journaled).
     """
 
     families: tuple[IntegrandFamily, ...]
@@ -72,13 +80,15 @@ class IntegrationRequest:
     target_stderr: float | None = None
     sampler: str = "mc"
     deadline: float | None = None
+    adaptive: bool = False
 
     @classmethod
     def make(cls, families: Sequence[IntegrandFamily] | MultiFunctionSpec,
              *, n_samples: int | None = None,
              target_stderr: float | None = None,
              sampler: str = "mc",
-             deadline: float | None = None) -> "IntegrationRequest":
+             deadline: float | None = None,
+             adaptive: bool = False) -> "IntegrationRequest":
         if isinstance(families, MultiFunctionSpec):
             families = families.families
         families = tuple(f.validate() for f in families)
@@ -96,7 +106,7 @@ class IntegrationRequest:
             raise ValueError("deadline must be positive (seconds)")
         return cls(families=families, n_samples=n_samples,
                    target_stderr=target_stderr, sampler=sampler,
-                   deadline=deadline)
+                   deadline=deadline, adaptive=bool(adaptive))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -264,11 +274,15 @@ class IntegrationClient:
         ticket = self.submit_sweep(template, grid, **kwargs)
         return self.wait(ticket)
 
-    def sweep_partial(self, ticket: int) -> "SweepResult":
+    def sweep_partial(self, ticket: int,
+                      since: np.ndarray | None = None) -> "SweepResult":
         """Current per-point snapshot of an in-flight sweep (non-blocking):
         finished points carry real estimates, pending ones NaN/inf —
-        see :class:`SweepResult`.``points_done``."""
-        return self.engine.sweep_partial(ticket)
+        see :class:`SweepResult`.``points_done``.  Pass the previous
+        snapshot's ``points_done`` as ``since`` to have only the newly
+        completed points recomputed (an incremental poll loop over a
+        large grid then pays per-point cost once, not per poll)."""
+        return self.engine.sweep_partial(ticket, since=since)
 
     def wait(self, ticket: int, timeout: float | None = None) -> IntegrationResult:
         if self.engine.running:

@@ -37,6 +37,11 @@ crash-and-restart of a wave (``run_with_restarts``) and concurrent
 Fusion plans (the packed/concatenated bucket operands) are cached per
 (entry set, sampler) with **LRU eviction** — steady-state request mixes
 keep their plans hot instead of periodically re-planning everything.
+Adapted streams need no special handling here: every importance-grid
+epoch is a distinct cache entry (its edges live in the family params and
+therefore in the content hash), so an epoch swap changes the entry set
+and naturally misses to a fresh plan while the old epoch's plan ages out
+of the LRU.
 Compiled kernels are reused more broadly still: bucket kernel names
 encode only the shape signature, so a *new* entry set whose buckets
 match previously-seen shapes reuses the compiled executable (see

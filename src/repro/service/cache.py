@@ -65,7 +65,7 @@ from repro.analysis import streams as _analysis
 from repro.core import direct_mc
 from repro.core.direct_mc import SumsState
 from repro.core.integrand import IntegrandFamily
-from repro.service.store import DurableStore, EntryState
+from repro.service.store import DurableStore, EntryState, GridRecord
 
 # id space addressable by the counter layout: fn_id * DIM_STRIDE + dim
 # must fit u32, so fn_id < 2**24 (DIM_STRIDE = 256)
@@ -170,6 +170,10 @@ class ResultCache:
         self._lock = threading.Lock()
         self.store = store
         self._dormant: dict[str, EntryState] = {}
+        # adapted streams' importance grids, keyed by the child chash —
+        # persisted alongside the accumulators so a resumed engine
+        # rebuilds the exact epoch chain instead of refitting
+        self._grids: dict[str, GridRecord] = {}
         self.recovered = None
         if store is not None:
             state = store.load()
@@ -181,6 +185,7 @@ class ResultCache:
                     f"configured with round_samples={self.round_samples}")
             self._dormant = dict(state.entries)
             self._next_id = max(self._next_id, state.next_id)
+            self._grids = dict(state.grids)
             self.recovered = state
 
     # -- lookup / allocation --------------------------------------------------
@@ -257,6 +262,75 @@ class ResultCache:
                                     n_fn=n_fn,
                                     round_samples=self.round_samples)
         return entry
+
+    # -- importance-grid epoch chains -----------------------------------------
+    def register_grid(self, chash: str, *, parent: str, epoch: int,
+                      edges) -> GridRecord:
+        """Record an adapted stream's importance grid, journal-first.
+
+        A grid refit opens a NEW epoch stream (``chash``) keyed by its
+        edges rather than mutating history, so accumulators stay
+        bit-identically resumable; this registers the edges the child
+        samples through and their position in the epoch chain.  Call it
+        *before* ``get_or_allocate(chash, ...)`` — the WAL must carry
+        the grid ahead of the child's alloc (the Layer-3 STR007
+        ordering rule).  Idempotent: a re-registration (resume replays
+        the planner's decisions) returns the existing record unjournaled.
+        """
+        edges = np.ascontiguousarray(edges, np.float32)
+        with self._lock:
+            rec = self._grids.get(chash)
+            if rec is not None:
+                return rec
+            rec = GridRecord(
+                chash=chash, parent=parent, epoch=int(epoch),
+                n_fn=int(edges.shape[0]), dim=int(edges.shape[1]),
+                n_bins=int(edges.shape[2]) - 1, edges=edges)
+            self._grids[chash] = rec
+        if self.store is not None:
+            # journaled outside the cache lock, same discipline (and
+            # crash window) as get_or_allocate: a grid record with no
+            # child alloc is benign on replay
+            self.store.append_grid(chash, parent=parent, epoch=int(epoch),
+                                   edges=edges)
+        return rec
+
+    def grid_for(self, chash: str) -> GridRecord | None:
+        """The importance-grid record of an adapted stream (or None)."""
+        with self._lock:
+            return self._grids.get(chash)
+
+    def grid_chain(self, chash: str) -> list[GridRecord]:
+        """Grid records from epoch 1 up to ``chash``'s epoch, in order
+        (empty for an unadapted stream)."""
+        chain: list[GridRecord] = []
+        with self._lock:
+            rec = self._grids.get(chash)
+            while rec is not None:
+                chain.append(rec)
+                rec = self._grids.get(rec.parent)
+        chain.reverse()
+        return chain
+
+    def grid_tip(self, base_chash: str) -> GridRecord | None:
+        """Deepest journaled epoch of the chain rooted at ``base_chash``
+        (None when the base stream was never adapted).  A resumed
+        planner adopts the tip — recorded chash, recorded edges — rather
+        than refitting, so the resume samples through exactly the grid
+        the interrupted run journaled.  Deterministic fits give each
+        parent at most one child; should duplicates ever appear, the
+        lexicographically-smallest chash wins so resume stays stable."""
+        with self._lock:
+            children: dict[str, list[GridRecord]] = {}
+            for rec in self._grids.values():
+                children.setdefault(rec.parent, []).append(rec)
+        tip = None
+        cur = base_chash
+        while cur in children:
+            rec = min(children[cur], key=lambda r: r.chash)
+            tip = rec
+            cur = rec.chash
+        return tip
 
     # -- precision logic ------------------------------------------------------
     def rounds_for_budget(self, n_samples: int) -> int:
@@ -526,9 +600,11 @@ class ResultCache:
                         s2=np.asarray(s2, np.float32),
                         n=int(n), rounds_done=int(done)))
                 states.extend(self._dormant.values())
+                grids = [self._grids[c] for c in sorted(self._grids)]
                 next_id = self._next_id
             self.store.snapshot(states, next_id=next_id,
-                                round_samples=self.round_samples)
+                                round_samples=self.round_samples,
+                                grids=grids)
 
     # -- stats ----------------------------------------------------------------
     @property

@@ -35,6 +35,15 @@ wherever their canonical slices align (same template, same axis names,
 same point values at the same slice offsets), with no sweep-specific
 hash scheme.
 
+**Adapted epoch streams** need no hash scheme of their own: an
+importance-grid epoch (``IntegrandFamily.adapted``) carries its grid
+edges inside ``params``, so :func:`family_hash` keys every epoch to a
+distinct stream automatically — a refit opens a new cache entry rather
+than mutating history, which is what keeps adapted streams
+bit-identically resumable (the chain itself is journaled as ``grid``
+records; see ``repro.service.cache.register_grid`` and the Layer-3
+STR007 rule).
+
 The hash addresses the service's result cache; it is not a security
 boundary.
 """

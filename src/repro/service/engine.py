@@ -33,6 +33,17 @@ Life of a request:
    serial waves).  In-flight rounds are tracked per stream so the
    planner schedules beyond them instead of re-planning them.
 
+2b. **adapt** (opt-in) — a request with ``adaptive=True`` and a stderr
+   target samples through a VEGAS importance grid
+   (:mod:`repro.core.adaptive`, ``docs/adaptive.md``): epoch 1 is fit
+   at submit from a deterministic counter-keyed pilot, and the planner
+   refits between waves while the target is unmet.  Every epoch is a
+   NEW cache stream keyed by its grid's edges (the grid record is
+   journaled *before* the child's alloc — the Layer-3 STR007 chain),
+   so adapted streams keep the bit-identical resume contract: a
+   restarted engine adopts the journaled chain tip instead of
+   refitting.
+
 3. **complete** — requests whose entries all meet their precision are
    finalized from the cache accumulators and their tickets released.
 
@@ -52,11 +63,13 @@ from __future__ import annotations
 import collections
 import dataclasses
 import threading
+import zlib
 from typing import Sequence
 
 import numpy as np
 
 from repro.analysis import streams as _analysis
+from repro.core import adaptive
 from repro.core import rng as rng_lib
 from repro.obs import Observability
 from repro.obs import clock as _clock
@@ -112,6 +125,29 @@ class _SweepInfo:
 
 
 @dataclasses.dataclass
+class _AdaptiveState:
+    """Planner-side record of one base stream's importance-grid chain.
+
+    ``chash``/``edges``/``epoch`` track the *current* (deepest) epoch
+    stream; ``base_family`` is the canonical pre-grid family every
+    pilot evaluates (pilots never sample through the grid being refit —
+    :func:`repro.core.adaptive.pilot_weights` maps its own uniforms).
+    ``frozen`` marks a converged chain (a refit reproduced the current
+    edges); it is in-memory only, but a resumed engine re-derives it
+    from the same deterministic pilot.
+    """
+
+    base_chash: str
+    base_family: object     # the canonical pre-grid IntegrandFamily
+    sampler: str
+    epoch: int
+    edges: np.ndarray
+    chash: str
+    family: object          # the current epoch's adapted IntegrandFamily
+    frozen: bool = False
+
+
+@dataclasses.dataclass
 class _Pending:
     ticket: int
     request: IntegrationRequest | SweepRequest
@@ -141,7 +177,11 @@ class IntegrationEngine:
                  sweep_slice_points: int = DEFAULT_SWEEP_SLICE,
                  obs: Observability | None = None,
                  retry_policy: RetryPolicy | None = None,
-                 faults=None, lease_ttl: float | None = 30.0):
+                 faults=None, lease_ttl: float | None = 30.0,
+                 adapt_bins: int = adaptive.N_BINS,
+                 adapt_pilot_samples: int = 4096,
+                 adapt_max_epochs: int = 3,
+                 adapt_rounds_per_epoch: int = 2):
         # telemetry first: every layer below receives the same bundle
         self.obs = obs if obs is not None else Observability.disabled()
         self.seed = int(seed)
@@ -203,6 +243,20 @@ class IntegrationEngine:
         self.max_restarts = self.retry.max_attempts - 1
         self.max_retained_results = int(max_retained_results)
         self.watchdog = watchdog if watchdog is not None else StepWatchdog()
+        # importance-grid adaptation knobs (docs/adaptive.md): pilots
+        # and refit cadence are deterministic in (seed, base stream,
+        # epoch) + durable rounds_done, so two engines with the same
+        # knobs replay the same epoch chain
+        if int(adapt_bins) < 2:
+            raise ValueError("adapt_bins must be >= 2")
+        if int(adapt_max_epochs) < 1 or int(adapt_rounds_per_epoch) < 1:
+            raise ValueError("adapt_max_epochs and adapt_rounds_per_epoch "
+                             "must be >= 1")
+        self.adapt_bins = int(adapt_bins)
+        self.adapt_pilot_samples = int(adapt_pilot_samples)
+        self.adapt_max_epochs = int(adapt_max_epochs)
+        self.adapt_rounds_per_epoch = int(adapt_rounds_per_epoch)
+        self._adaptive: dict[str, _AdaptiveState] = {}
         self.stats = EngineStats()
 
         self._pending: dict[int, _Pending] = {}
@@ -246,11 +300,22 @@ class IntegrationEngine:
         """
         if isinstance(request, SweepRequest):
             return self.submit_sweep(request, block=block, timeout=timeout)
+        # adaptation needs a precision target to chase (a pure sample
+        # budget has nothing to adapt toward — the flag is ignored) and
+        # never applies to swept slices (the sweep table and the grid
+        # map would compete for the packed row; see docs/adaptive.md)
+        adapt = bool(getattr(request, "adaptive", False)
+                     and request.target_stderr is not None)
         canon_fams = []
         for fam in request.families:
             canon = canonical_family(fam)
             chash = f"{family_hash(canon, canonicalize=False)}:{request.sampler}"
-            canon_fams.append((chash, canon))
+            if adapt and not canon.swept:
+                with self._lock:
+                    ast = self._adaptive_state(chash, canon, request.sampler)
+                canon_fams.append((ast.chash, ast.family))
+            else:
+                canon_fams.append((chash, canon))
         return self._submit_canonical(request, canon_fams, block=block,
                                       timeout=timeout)
 
@@ -282,7 +347,9 @@ class IntegrationEngine:
                     registry.lookup(probe.kernel, dim=probe.dim,
                                     sampler=request.sampler,
                                     compactified=probe.compact,
-                                    sweep=probe.swept, required=True)
+                                    sweep=probe.swept,
+                                    adapted=bool(probe.adapt_bins),
+                                    required=True)
             canon_fams = [
                 (f"{family_hash(f, canonicalize=False)}:{request.sampler}", f)
                 for f in fams]
@@ -371,7 +438,8 @@ class IntegrationEngine:
         with self._lock:
             return self._results.get(ticket)
 
-    def sweep_partial(self, ticket: int) -> SweepResult:
+    def sweep_partial(self, ticket: int,
+                      since: np.ndarray | None = None) -> SweepResult:
         """Per-point snapshot of a sweep, streamed as rounds complete.
 
         Non-blocking: for a finished sweep this is exactly the final
@@ -381,6 +449,15 @@ class IntegrationEngine:
         and inf stderrs) with ``complete=False``.  Slices finish in
         counter order within a wave, so a client can consume a large
         sweep incrementally instead of blocking for the whole grid.
+
+        ``since`` makes the poll *incremental*: pass the previous
+        snapshot's ``points_done`` mask and only slices with points not
+        yet covered by it are finalized — an already-reported slice is
+        marked done but carries NaN/inf placeholders (the caller keeps
+        its previous values).  A poll loop over a large grid then pays
+        the per-point finalize cost once per point, not once per poll.
+        The mask covers the full grid including any final partial slice
+        of a grid that is not a multiple of the slice quantum.
         """
         with self._lock:
             res = self._results.get(ticket)
@@ -391,13 +468,31 @@ class IntegrationEngine:
                 if pend.sweep is None:
                     raise TypeError(f"ticket {ticket} is not a sweep")
                 sw = pend.sweep
+                if since is not None:
+                    since = np.asarray(since, bool)
+                    if since.shape != (sw.n_points,):
+                        raise ValueError(
+                            f"since mask has shape {since.shape}; expected "
+                            f"({sw.n_points},) — pass the previous "
+                            f"snapshot's points_done unchanged")
                 means, errs, done = [], [], []
+                offset = 0
                 for entry, size in zip(pend.entries, sw.slice_sizes):
+                    # explicit per-slice extent: the final slice of a
+                    # grid that is not a multiple of the slice quantum
+                    # is shorter, and the mask must align point-exactly
+                    seen = (since is not None
+                            and bool(np.all(since[offset:offset + size])))
+                    offset += size
                     if entry.rounds_done > 0:
-                        snap = entry.finalize()
-                        means.append(np.asarray(snap.mean))
-                        errs.append(np.asarray(snap.stderr))
                         done.append(np.ones(size, bool))
+                        if seen:
+                            means.append(np.full(size, np.nan, np.float32))
+                            errs.append(np.full(size, np.inf, np.float32))
+                        else:
+                            snap = entry.finalize()
+                            means.append(np.asarray(snap.mean))
+                            errs.append(np.asarray(snap.stderr))
                     else:
                         means.append(np.full(size, np.nan, np.float32))
                         errs.append(np.full(size, np.inf, np.float32))
@@ -605,6 +700,118 @@ class IntegrationEngine:
                                              for c in pend.result.stream_ids])
         pend.event.set()
 
+    # -- importance-grid adaptation -------------------------------------------
+    def _pilot_key(self, base_chash: str, epoch: int) -> tuple:
+        """Counter key of the (base stream, epoch) pilot wave.
+
+        Folded onto a stream id derived from the base hash and the
+        epoch being fit, so pilot counters can never collide with the
+        engine's main sample streams (which fold on stream 0) and a
+        resumed planner re-draws the identical pilot.
+        """
+        sid = zlib.crc32(f"adapt:{base_chash}:{int(epoch)}".encode())
+        return rng_lib.fold_key(self.seed, sid)
+
+    def _adaptive_state(self, base_chash: str, canon,
+                        sampler: str) -> _AdaptiveState:
+        """Active importance-grid state for one base stream (caller
+        holds the lock).
+
+        Resume first: when the WAL/snapshot carries an epoch chain
+        rooted at ``base_chash`` the planner adopts its tip — recorded
+        chash, recorded edges — so the resumed stream samples through
+        exactly the journaled grid (refitting could differ only if the
+        code changed; the record is the contract).  Otherwise epoch 1
+        is fit here, at submit, from a deterministic pilot, and its
+        grid is journaled *before* the child stream's alloc (STR007).
+        """
+        ast = self._adaptive.get(base_chash)
+        if ast is not None:
+            return ast
+        tip = self.cache.grid_tip(base_chash)
+        if tip is not None:
+            fam = canon.adapted(tip.edges, epoch=tip.epoch)
+            ast = _AdaptiveState(
+                base_chash=base_chash, base_family=canon, sampler=sampler,
+                epoch=tip.epoch, edges=np.asarray(tip.edges),
+                chash=tip.chash, family=fam)
+        else:
+            edges = adaptive.initial_edges(np.asarray(canon.domains),
+                                           self.adapt_bins)
+            weights = adaptive.pilot_weights(
+                canon, edges, self._pilot_key(base_chash, 1),
+                self.adapt_pilot_samples)
+            edges = adaptive.refine_edges(edges, weights)
+            fam = canon.adapted(edges, epoch=1)
+            chash = f"{family_hash(fam, canonicalize=False)}:{sampler}"
+            self.cache.register_grid(chash, parent=base_chash, epoch=1,
+                                     edges=edges)
+            self.obs.m["adapted_streams"].inc()
+            ast = _AdaptiveState(
+                base_chash=base_chash, base_family=canon, sampler=sampler,
+                epoch=1, edges=edges, chash=chash, family=fam)
+        self._adaptive[base_chash] = ast
+        return ast
+
+    def _maybe_refit_locked(self) -> None:
+        """Open the next grid epoch for adapted streams still chasing
+        their stderr target (caller holds the lock).
+
+        Every trigger input is durable or deterministic — the current
+        epoch stream's ``rounds_done`` (WAL-recovered), the rider's
+        target, and a pilot counter-keyed by (seed, base stream,
+        epoch) — so a SIGKILLed engine re-decides the identical chain.
+        Refits only fire at a wave boundary with nothing in flight on
+        the stream; the new epoch is a NEW cache stream (grid
+        journaled first — STR007) and every pending holding the old
+        entry is swapped to the child, so results finalize from the
+        last epoch only.  A refit that reproduces the current edges
+        freezes the chain: the grid converged.
+        """
+        for ast in self._adaptive.values():
+            if ast.frozen or ast.epoch >= self.adapt_max_epochs:
+                continue
+            if self._inflight.get(ast.chash):
+                continue
+            entry = self.cache.get(ast.chash)
+            if entry is None or entry.quarantined:
+                continue
+            if entry.rounds_done < self.adapt_rounds_per_epoch:
+                continue
+            targets = [p.request.target_stderr
+                       for p in self._pending.values()
+                       if p.request.target_stderr is not None
+                       and any(e.chash == ast.chash for e in p.entries)]
+            if not targets:
+                continue    # no rider is still chasing precision
+            if self.cache.meets(entry, target_stderr=min(targets),
+                                n_samples=None):
+                continue    # met — _complete_ready finishes the riders
+            epoch = ast.epoch + 1
+            weights = adaptive.pilot_weights(
+                ast.base_family, ast.edges,
+                self._pilot_key(ast.base_chash, epoch),
+                self.adapt_pilot_samples)
+            edges = adaptive.refine_edges(ast.edges, weights)
+            if np.array_equal(edges, ast.edges):
+                ast.frozen = True    # a resume re-derives this verdict
+                continue
+            fam = ast.base_family.adapted(edges, epoch=epoch)
+            chash = f"{family_hash(fam, canonicalize=False)}:{ast.sampler}"
+            self.cache.register_grid(chash, parent=ast.chash, epoch=epoch,
+                                     edges=edges)
+            child = self.cache.get_or_allocate(chash, fam)
+            for pend in self._pending.values():
+                pend.entries = [child if e.chash == ast.chash else e
+                                for e in pend.entries]
+            self.obs.m["adapted_streams"].inc()
+            self.obs.m["grid_refits"].inc()
+            self.obs.event("grid_refit", base=ast.base_chash[:16],
+                           parent=ast.chash[:16], stream=chash[:16],
+                           epoch=epoch)
+            ast.chash, ast.edges, ast.epoch, ast.family = \
+                chash, edges, epoch, fam
+
     def _plan_wave(self) -> list[WorkItem]:
         """Assign the wave's round budget fairly across pending requests.
 
@@ -617,6 +824,8 @@ class IntegrationEngine:
         registered in-flight; callers retire them after deposit (or on
         permanent failure).  Caller must hold the engine lock.
         """
+        if self._adaptive:
+            self._maybe_refit_locked()
         info: dict[str, dict] = {}
         order: list[str] = []
         for pend in self._pending.values():

@@ -14,9 +14,14 @@ Two files under ``state_dir``:
   (f32 accumulator arrays base64-encoded raw little-endian, so replay
   folds the *exact bits* the live cache folded).  Two record types:
   ``alloc`` (a stream's counter-space placement: chash, fn_offset,
-  n_fn, round size) and ``dep`` (one round's ``(s1, s2, n)`` delta).
-  Records are fsynced by default; a record is journaled *before* the
-  in-memory fold it describes (WAL ordering).  Whole waves of deposits
+  n_fn, round size), ``dep`` (one round's ``(s1, s2, n)`` delta) and
+  ``grid`` (an adapted stream's importance-grid fit: the child chash,
+  its parent stream, the grid epoch and the exact f32 bin edges — a
+  grid refit opens a NEW epoch stream rather than mutating history, so
+  the record is journaled *before* the child stream's alloc and the
+  whole epoch chain replays deterministically).  Records are fsynced by
+  default; a record is journaled *before* the in-memory fold it
+  describes (WAL ordering).  Whole waves of deposits
   **group-commit** through :meth:`DurableStore.append_deposits` — one
   write + one fsync for the batch; a crash mid-batch tears at a record
   boundary, so the durable prefix is always a prefix of the wave's
@@ -123,6 +128,26 @@ class EntryState:
 
 
 @dataclasses.dataclass
+class GridRecord:
+    """Durable image of one adapted stream's importance grid.
+
+    ``chash`` names the adapted (child) stream the grid serves;
+    ``parent`` the stream the pilot was fitted against (the previous
+    epoch's adapted stream, or the base canonical stream for epoch 1).
+    The exact f32 edges ride along so a resumed engine rebuilds the
+    adapted family bit-identically instead of refitting.
+    """
+
+    chash: str
+    parent: str
+    epoch: int
+    n_fn: int
+    dim: int
+    n_bins: int
+    edges: np.ndarray         # (n_fn, dim, n_bins + 1) f32
+
+
+@dataclasses.dataclass
 class RecoveredState:
     """What ``load()`` reconstructed from disk."""
 
@@ -132,6 +157,7 @@ class RecoveredState:
     journal_records: int = 0          # complete records replayed
     dropped_records: int = 0          # valid records that could not fold
     truncated_bytes: int = 0          # corrupt/partial tail removed
+    grids: dict[str, GridRecord] = dataclasses.field(default_factory=dict)
 
 
 def read_journal(path: str) -> tuple[list[dict], int]:
@@ -347,6 +373,21 @@ class DurableStore:
                       "fn_offset": int(fn_offset), "n_fn": int(n_fn),
                       "round_samples": int(round_samples)})
 
+    def append_grid(self, chash: str, *, parent: str, epoch: int,
+                    edges: np.ndarray) -> None:
+        """Journal an adapted stream's importance grid (exact f32 edges).
+
+        Must precede the child stream's ``alloc`` record so replay (and
+        the Layer-3 auditor's STR007 chain check) always sees the grid
+        an adapted stream samples through before the stream itself.
+        """
+        edges = np.ascontiguousarray(edges, np.float32)
+        n_fn, dim, nb1 = edges.shape
+        self._append({"t": "grid", "chash": chash, "parent": parent,
+                      "epoch": int(epoch), "n_fn": int(n_fn),
+                      "dim": int(dim), "n_bins": int(nb1 - 1),
+                      "edges": _encode_f32(edges.ravel())})
+
     @staticmethod
     def deposit_record(chash: str, round_index: int,
                        s1: np.ndarray, s2: np.ndarray, n: int) -> dict:
@@ -468,6 +509,15 @@ class DurableStore:
                 s2=arrays[f"s2_{i:05d}"],
                 n=int(ent["n"]), rounds_done=int(ent["rounds_done"]))
             state.entries[st.chash] = st
+        # pre-adaptive snapshots carry no "grids" key; .get keeps them
+        # loading unchanged (the snapshot version is unbumped on purpose)
+        for i, g in enumerate(meta.get("grids", [])):
+            rec = GridRecord(
+                chash=g["chash"], parent=g["parent"],
+                epoch=int(g["epoch"]), n_fn=int(g["n_fn"]),
+                dim=int(g["dim"]), n_bins=int(g["n_bins"]),
+                edges=np.asarray(arrays[f"grid_{i:05d}"], np.float32))
+            state.grids[rec.chash] = rec
 
     def _replay_journal(self, state: RecoveredState) -> None:
         records, bad_tail = read_journal(self.journal_path)
@@ -516,13 +566,30 @@ class DurableStore:
             st.s2 = st.s2 + s2
             st.n += int(record["n"])
             st.rounds_done += 1
+        elif kind == "grid":
+            chash = record["chash"]
+            if chash not in state.grids:     # first record wins (refits
+                n_fn = int(record["n_fn"])   # open new chashes, so a
+                dim = int(record["dim"])     # dup is a replayed wave)
+                n_bins = int(record["n_bins"])
+                state.grids[chash] = GridRecord(
+                    chash=chash, parent=record["parent"],
+                    epoch=int(record["epoch"]), n_fn=n_fn, dim=dim,
+                    n_bins=n_bins,
+                    edges=_decode_f32(record["edges"]).reshape(
+                        n_fn, dim, n_bins + 1))
         else:
             state.dropped_records += 1
 
     # -- compaction -----------------------------------------------------------
     def snapshot(self, states: list[EntryState], *, next_id: int,
-                 round_samples: int) -> None:
-        """Atomically persist all stream states, then reset the journal."""
+                 round_samples: int, grids: list[GridRecord] = ()) -> None:
+        """Atomically persist all stream states, then reset the journal.
+
+        ``grids`` carries the adapted streams' importance-grid records;
+        compaction must never forget one (a forgotten grid would orphan
+        its epoch chain on the next restart).
+        """
         payload: dict[str, np.ndarray] = {}
         entries_meta = []
         for i, st in enumerate(states):
@@ -533,8 +600,17 @@ class DurableStore:
                 "n_fn": int(st.n_fn),
                 "round_samples": int(st.round_samples),
                 "n": int(st.n), "rounds_done": int(st.rounds_done)})
+        grids_meta = []
+        for i, g in enumerate(grids):
+            payload[f"grid_{i:05d}"] = np.ascontiguousarray(g.edges, "<f4")
+            grids_meta.append({
+                "chash": g.chash, "parent": g.parent,
+                "epoch": int(g.epoch), "n_fn": int(g.n_fn),
+                "dim": int(g.dim), "n_bins": int(g.n_bins)})
         meta = {"version": _SNAPSHOT_VERSION, "next_id": int(next_id),
                 "round_samples": int(round_samples), "entries": entries_meta}
+        if grids_meta:
+            meta["grids"] = grids_meta
         payload["meta"] = np.frombuffer(
             json.dumps(meta, sort_keys=True).encode("utf-8"), np.uint8)
 

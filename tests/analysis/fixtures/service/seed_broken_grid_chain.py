@@ -1,0 +1,49 @@
+"""Seed a state dir whose importance-grid epoch chain is BROKEN (STR007).
+
+CI's must-fail loop drives this through the real ``DurableStore`` API so
+the journal is byte-for-byte what a buggy planner would have written,
+then requires ``python -m repro.analysis --state-dir <dir>`` to exit
+nonzero.  Two independent STR007 breaks are seeded:
+
+* a **chain gap** — an epoch-3 grid whose parent carries the epoch-1
+  record (a refit must extend its parent by exactly one);
+* a **grid-after-alloc ordering flip** — a child stream alloc'd before
+  its grid record hit the journal (replay could then fold deposits of a
+  stream whose sampling map it does not know yet).
+
+Usage: ``python seed_broken_grid_chain.py <state_dir>``
+"""
+
+import sys
+
+import numpy as np
+
+from repro.service.store import DurableStore
+
+
+def seed(state_dir: str) -> None:
+    store = DurableStore(state_dir, fsync=False)
+    store.ensure_meta({"seed": 0, "round_samples": 4096})
+    edges = np.linspace(0.0, 1.0, 5, dtype=np.float32)
+    edges = np.broadcast_to(edges, (1, 2, 5)).copy()
+
+    # base stream, then a well-formed epoch-1 child (grid BEFORE alloc)
+    store.append_alloc("base:mc", fn_offset=0, n_fn=1, round_samples=4096)
+    store.append_grid("epoch1:mc", parent="base:mc", epoch=1, edges=edges)
+    store.append_alloc("epoch1:mc", fn_offset=1, n_fn=1, round_samples=4096)
+
+    # break 1: the chain skips epoch 2 — a grid claiming epoch 3 whose
+    # parent's record says epoch 1
+    store.append_grid("epoch3:mc", parent="epoch1:mc", epoch=3, edges=edges)
+    store.append_alloc("epoch3:mc", fn_offset=2, n_fn=1, round_samples=4096)
+
+    # break 2: child alloc'd before its grid record was journaled
+    store.append_alloc("late:mc", fn_offset=3, n_fn=1, round_samples=4096)
+    store.append_grid("late:mc", parent="base:mc", epoch=1, edges=edges)
+    store.close()
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        raise SystemExit("usage: seed_broken_grid_chain.py <state_dir>")
+    seed(sys.argv[1])

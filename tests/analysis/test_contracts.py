@@ -52,6 +52,7 @@ def _finite_only_body(draw, p, f, dim):
 def _form(body, name="fixture_form", **kw):
     kw.setdefault("samplers", ("mc",))
     kw.setdefault("supports_compactified", False)
+    kw.setdefault("supports_adapted", False)
     return KernelForm(name=name, body=body,
                       pack_params=lambda fam: None,
                       n_cols=lambda dim: 1, **kw)
@@ -87,6 +88,18 @@ class TestCheckForm:
         # the same body honestly advertised does not fire
         honest = _form(_finite_only_body, supports_compactified=False)
         assert contracts.check_form(honest) == []
+
+    def test_broken_adapted_support_fires_kct006(self):
+        """A body that cannot ignore the grid's packed edge columns must
+        not advertise ``supports_adapted`` — the importance-map wrapper
+        widens the parameter block exactly like compactification does."""
+        form = _form(_finite_only_body, supports_adapted=True)
+        found = contracts.check_form(form)
+        assert "KCT006" in _rules(found)
+        assert any("adapted" in v.message for v in found)
+        # a well-behaved body really does compose with the map stage
+        assert contracts.check_form(
+            _form(_good_body, supports_adapted=True)) == []
 
 
 class TestBucketUniformity:
@@ -149,10 +162,12 @@ class TestRegisteredForms:
         assert contracts.check_registered_forms() == []
 
     def test_every_advertised_combo_is_covered(self):
-        # 100% coverage: every (sampler, compactified, swept, probe-dim)
-        # combo a form claims to support is traced by check_form; swept
-        # probes the full sweep_cols name set (subsets substitute fewer
-        # columns through identical machinery)
+        # 100% coverage: every (sampler, compactified, swept, adapted,
+        # probe-dim) combo a form claims to support is traced by
+        # check_form; swept probes the full sweep_cols name set (subsets
+        # substitute fewer columns through identical machinery); adapted
+        # is probed for non-swept combos only, mirroring the engine
+        # (adapted streams are never swept)
         for form in registry.forms():
             combos = set(contracts._combos(form))
             assert combos, f"{form.name} advertises no workable combo"
@@ -165,11 +180,16 @@ class TestRegisteredForms:
                         if form.supports_swept:
                             sweeps.append(contracts._full_sweep(form, dim))
                         for swept in sweeps:
-                            if form.supports(dim=dim, sampler=sampler,
-                                             compactified=compact,
-                                             sweep=swept):
-                                assert (sampler, compact, swept,
-                                        dim) in combos
+                            adapt_axis = ((False, True)
+                                          if form.supports_adapted
+                                          and not swept else (False,))
+                            for adapted in adapt_axis:
+                                if form.supports(dim=dim, sampler=sampler,
+                                                 compactified=compact,
+                                                 sweep=swept,
+                                                 adapted=adapted):
+                                    assert (sampler, compact, swept,
+                                            adapted, dim) in combos
 
     def test_swept_combos_probed_for_sweepable_forms(self):
         # every builtin form declares sweep_cols, so each contributes

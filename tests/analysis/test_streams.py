@@ -30,6 +30,12 @@ def _rules(report):
     return [v.rule for v in report.violations]
 
 
+def _edges(n_bins=4):
+    """A well-formed (1, 2, n_bins + 1) importance grid."""
+    e = np.linspace(0.0, 1.0, n_bins + 1, dtype=np.float32)
+    return np.broadcast_to(e, (1, 2, n_bins + 1)).copy()
+
+
 class TestAuditSeededViolations:
     def test_overlapping_counter_ranges_fire_str001(self, state_dir):
         store = _store(state_dir)
@@ -90,6 +96,43 @@ class TestAuditSeededViolations:
         report = streams.audit_state_dir(state_dir)
         assert _rules(report) == ["STR006"]
 
+    def test_grid_chain_gap_fires_str007(self, state_dir):
+        store = _store(state_dir)
+        edges = _edges()
+        store.append_alloc("base", fn_offset=0, n_fn=1, round_samples=RS)
+        store.append_grid("ep1", parent="base", epoch=1, edges=edges)
+        store.append_alloc("ep1", fn_offset=1, n_fn=1, round_samples=RS)
+        # refit claims epoch 3 but its parent's record says epoch 1
+        store.append_grid("ep3", parent="ep1", epoch=3, edges=edges)
+        store.append_alloc("ep3", fn_offset=2, n_fn=1, round_samples=RS)
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR007"]
+        assert "contiguous" in report.violations[0].message
+
+    def test_grid_after_alloc_fires_str007(self, state_dir):
+        store = _store(state_dir)
+        store.append_alloc("base", fn_offset=0, n_fn=1, round_samples=RS)
+        store.append_alloc("ep1", fn_offset=1, n_fn=1, round_samples=RS)
+        store.append_grid("ep1", parent="base", epoch=1, edges=_edges())
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR007"]
+        v = report.violations[0]
+        assert v.path.endswith("journal.bin") and v.line == 3
+        assert "before" in v.message
+
+    def test_duplicate_grid_disagreement_fires_str007(self, state_dir):
+        store = _store(state_dir)
+        edges = _edges()
+        store.append_grid("ep1", parent="base", epoch=1, edges=edges)
+        store.append_grid("ep1", parent="other", epoch=1, edges=edges)
+        store.append_alloc("ep1", fn_offset=0, n_fn=1, round_samples=RS)
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert _rules(report) == ["STR007"]
+        assert "disagrees" in report.violations[0].message
+
     def test_snapshot_range_beyond_hwm_fires_str004(self, state_dir):
         store = _store(state_dir)
         store.snapshot([EntryState(
@@ -140,6 +183,26 @@ class TestAuditCleanState:
         # auditing is read-only: the torn tail is still on disk
         report2 = streams.audit_state_dir(state_dir)
         assert report2.truncated_tail_bytes == report.truncated_tail_bytes
+
+    def test_grid_epoch_chain_audits_clean(self, state_dir):
+        """The planner's journal order — grid before alloc, epochs
+        contiguous from a base stream — is exactly what STR007 admits,
+        replays of a grid record included."""
+        store = _store(state_dir)
+        edges = _edges()
+        store.append_alloc("base", fn_offset=0, n_fn=1, round_samples=RS)
+        store.append_grid("ep1", parent="base", epoch=1, edges=edges)
+        store.append_alloc("ep1", fn_offset=1, n_fn=1, round_samples=RS)
+        store.append_grid("ep2", parent="ep1", epoch=2, edges=edges)
+        # an agreeing duplicate is benign (replayed registration) — but
+        # only before the alloc: after it, order itself is the breach
+        store.append_grid("ep2", parent="ep1", epoch=2, edges=edges)
+        store.append_alloc("ep2", fn_offset=2, n_fn=1, round_samples=RS)
+        store.append_deposits([_dep(store, "ep2", 0, 1)])
+        store.close()
+        report = streams.audit_state_dir(state_dir)
+        assert report.ok, report.summary()
+        assert report.streams == 3
 
     def test_snapshot_plus_journal_chain(self, state_dir):
         store = _store(state_dir)

@@ -1,0 +1,148 @@
+"""Hypothesis properties of the VEGAS importance grid (``repro.core.adaptive``).
+
+The adaptive service path (``docs/adaptive.md``) leans on four facts
+about the grid, asserted here over generated boxes and pilot weights:
+
+* the inverse-CDF map is **monotone and bijective** on [0, 1) per axis —
+  it spans the box exactly and never folds, so adapted sampling stays an
+  unbiased reparametrization;
+* the returned Jacobian equals the analytic **bin-width product**
+  ``prod_d n_bins * width(selected bin)`` — the unbiasedness weight the
+  in-kernel ``adapted_body`` stage must reproduce;
+* an **un-refined grid is plain uniform sampling**: uniform edges give
+  the affine box map with constant Jacobian = box volume;
+* **refinement is deterministic and total** — same pilot data, same new
+  edges (the resume contract refits grids from journaled state and
+  requires bit-identical results), strictly increasing with the box
+  endpoints pinned, and degenerate pilots leave the grid unchanged.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason=("property tests need hypothesis (pip install "
+            "hypothesis); the rest of the suite runs without it"))
+from hypothesis import given, settings, strategies as st
+
+from repro.core import harmonic_family, rng
+from repro.core.adaptive import (apply_map, initial_edges, pilot_weights,
+                                 refine_edges)
+
+SETTINGS = dict(max_examples=50, deadline=None)
+
+# bin widths bounded well away from 0 so f32 interpolation inside a bin
+# stays strictly monotone at the test's u spacing
+width = st.floats(min_value=0.01, max_value=10.0,
+                  allow_nan=False, width=32)
+
+
+@st.composite
+def grids(draw, min_dim=1, max_dim=3, min_bins=2, max_bins=8):
+    """(1, dim, n_bins + 1) strictly increasing edges over a random box."""
+    dim = draw(st.integers(min_dim, max_dim))
+    n_bins = draw(st.integers(min_bins, max_bins))
+    lo = draw(st.floats(min_value=-50.0, max_value=50.0,
+                        allow_nan=False, width=32))
+    widths = np.asarray(
+        [[draw(width) for _ in range(n_bins)] for _ in range(dim)],
+        np.float64)
+    edges = lo + np.concatenate(
+        [np.zeros((dim, 1)), np.cumsum(widths, axis=1)], axis=1)
+    return edges.astype(np.float32)[None]
+
+
+def _u_grid(dim, n=65):
+    """(n, dim) probe uniforms: the same [0, 1) ramp on every axis."""
+    return np.tile(np.linspace(0.0, 1.0 - 1e-6, n,
+                               dtype=np.float32)[:, None], (1, dim))
+
+
+@given(edges=grids())
+@settings(**SETTINGS)
+def test_map_is_monotone_and_spans_the_box(edges):
+    e = edges[0]
+    u = _u_grid(e.shape[0])
+    x, _ = apply_map(u, e)
+    x = np.asarray(x)
+    assert np.all(np.diff(x, axis=0) > 0), "inverse-CDF map folded"
+    np.testing.assert_array_equal(x[0], e[:, 0])      # u=0 -> lo exactly
+    assert np.all(x <= e[:, -1])                      # never exits the box
+
+
+@given(edges=grids())
+@settings(**SETTINGS)
+def test_jacobian_is_the_bin_width_product(edges):
+    e = edges[0]
+    dim, n_bins = e.shape[0], e.shape[1] - 1
+    u = _u_grid(dim)
+    _, jac = apply_map(u, e)
+    idx = np.minimum((u * n_bins).astype(np.int32), n_bins - 1)
+    widths = np.take_along_axis(e.T, idx + 1, axis=0) \
+        - np.take_along_axis(e.T, idx, axis=0)
+    analytic = np.prod(n_bins * widths.astype(np.float64), axis=-1)
+    np.testing.assert_allclose(np.asarray(jac, np.float64), analytic,
+                               rtol=1e-4)
+
+
+@given(dim=st.integers(1, 3), n_bins=st.integers(2, 16))
+@settings(**SETTINGS)
+def test_uniform_grid_is_plain_uniform_sampling(dim, n_bins):
+    domains = np.stack([-np.ones(dim), 3 * np.ones(dim)],
+                       axis=-1)[None].astype(np.float32)
+    e = initial_edges(domains, n_bins)[0]
+    u = _u_grid(dim)
+    x, jac = apply_map(u, e)
+    np.testing.assert_allclose(np.asarray(x), -1.0 + 4.0 * u, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jac), 4.0 ** dim, rtol=1e-5)
+
+
+@given(edges=grids(),
+       data=st.data())
+@settings(**SETTINGS)
+def test_refine_is_deterministic_increasing_endpoint_preserving(
+        edges, data):
+    n_fn, dim, n_edges = edges.shape
+    w = data.draw(st.lists(
+        st.floats(min_value=0.0, max_value=1e6, allow_nan=False,
+                  width=32),
+        min_size=n_fn * dim * (n_edges - 1),
+        max_size=n_fn * dim * (n_edges - 1)))
+    weights = np.asarray(w, np.float64).reshape(n_fn, dim, n_edges - 1)
+    new = refine_edges(edges, weights)
+    np.testing.assert_array_equal(new, refine_edges(edges, weights))
+    assert new.shape == edges.shape and new.dtype == np.float32
+    assert np.all(np.diff(new, axis=-1) > 0), "refit collapsed a bin"
+    np.testing.assert_array_equal(new[..., 0], edges[..., 0])
+    np.testing.assert_array_equal(new[..., -1], edges[..., -1])
+
+
+def test_degenerate_pilots_leave_the_grid_unchanged():
+    edges = initial_edges(np.asarray([[[0.0, 1.0], [0.0, 2.0]]]), 4)
+    for bad in (np.zeros((1, 2, 4)),
+                np.full((1, 2, 4), np.nan),
+                np.asarray([[[1.0, np.inf, 1.0, 1.0]] * 2])):
+        np.testing.assert_array_equal(refine_edges(edges, bad), edges)
+    with pytest.raises(ValueError, match="do not match"):
+        refine_edges(edges, np.ones((1, 2, 5)))
+
+
+def test_pilot_and_refit_are_deterministic():
+    """Same (family, edges, key) -> identical weights and refit edges.
+
+    This is the resume contract's load-bearing half: a crashed planner
+    re-runs the pilot from the journaled seed and must land on the very
+    grid the dead engine journaled."""
+    fam = harmonic_family(3, 2)
+    edges = initial_edges(np.asarray(fam.domains), 8)
+    key = rng.fold_key(7, 12345)
+    w1 = pilot_weights(fam, edges, key, 1024)
+    w2 = pilot_weights(fam, edges, key, 1024)
+    np.testing.assert_array_equal(w1, w2)
+    assert w1.shape == (3, 2, 8) and np.all(w1 >= 0)
+    np.testing.assert_array_equal(refine_edges(edges, w1),
+                                  refine_edges(edges, w2))
+    # a different key is a different pilot (the fold is not a no-op)
+    w3 = pilot_weights(fam, edges, rng.fold_key(7, 54321), 1024)
+    assert not np.array_equal(w1, w3)

@@ -95,6 +95,54 @@ def test_cache_topup_matches_resumable_driver(use_kernel):
     np.testing.assert_array_equal(topped.stderrs, driver.stderrs[0])
 
 
+def test_adaptive_resume_bit_identical(tmp_path):
+    """An adapted run killed mid-flight resumes to the same bytes.
+
+    The grid epoch chain is journaled (grid record before child alloc)
+    and the refit trigger reads only durable per-stream state, so an
+    engine restarted from the state dir re-adopts the recorded grid —
+    never refits a new one — and the finished result is *bit-identical*
+    to an uninterrupted run: same means, stderrs, sample counts and
+    epoch stream ids.
+    """
+    from repro.core import gaussian_family
+    from repro.service import (IntegrationClient, IntegrationEngine,
+                               IntegrationRequest)
+
+    fams = [gaussian_family(2, 2, sigma=np.asarray([0.15, 0.25]))]
+    target = 5e-4
+
+    def engine(state_dir):
+        return IntegrationEngine(seed=3, round_samples=4096,
+                                 state_dir=str(state_dir),
+                                 adapt_rounds_per_epoch=1,
+                                 adapt_max_epochs=3,
+                                 adapt_pilot_samples=1024)
+
+    eng = engine(tmp_path / "uninterrupted")
+    clean = IntegrationClient(eng).integrate(
+        fams, target_stderr=target, adaptive=True)
+    eng.close()
+
+    eng = engine(tmp_path / "interrupted")
+    eng.submit(IntegrationRequest.make(
+        fams, target_stderr=target, adaptive=True))
+    for _ in range(2):
+        eng.step()
+    del eng             # abandoned mid-wave: journal only, no snapshot
+
+    eng = engine(tmp_path / "interrupted")
+    resumed = IntegrationClient(eng).integrate(
+        fams, target_stderr=target, adaptive=True)
+    eng.close()
+
+    assert resumed.means.tobytes() == clean.means.tobytes()
+    assert resumed.stderrs.tobytes() == clean.stderrs.tobytes()
+    assert resumed.n_per_family == clean.n_per_family
+    assert resumed.stream_ids == clean.stream_ids
+    assert np.all(resumed.stderrs <= target)
+
+
 def test_work_queue_reissue():
     from repro.distributed.fault_tolerance import WorkQueue
     q = WorkQueue(total_samples=100, chunk=30)

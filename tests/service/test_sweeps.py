@@ -126,6 +126,57 @@ def test_sweep_partial_streams_before_completion(make_engine):
     np.testing.assert_array_equal(done.means, engine.poll(ticket).means)
 
 
+def test_sweep_partial_since_final_partial_slice(make_engine):
+    """65 points under a 64-point slice quantum: [64, 1] slices.
+
+    Regression for the final-slice off-by-one: the ``since`` mask must
+    align point-exactly with the short last slice — a stale mask offset
+    either misreads the last slice as seen (dropping its only point) or
+    reads past the mask.  Asserted here: the 65th point streams like any
+    other, an all-seen poll placeholders everything, and a mask covering
+    only the full slice re-finalizes just the final point.
+    """
+    engine = make_engine(max_rounds_per_wave=1)
+    a65 = np.linspace(0.5, 2.0, 65).astype(np.float32)
+    ticket = engine.submit(SweepRequest.make(
+        harmonic_family(1, 2), {"a": a65}, n_samples=2 * R))
+    assert engine.step()
+
+    first = engine.sweep_partial(ticket)
+    assert first.n_points == 65 and first.points_done.all()
+    assert np.isfinite(first.means).all() and not first.complete
+
+    # all 65 points seen: both slices done, pure placeholders
+    seen = engine.sweep_partial(ticket, since=first.points_done)
+    assert seen.points_done.all()
+    assert np.isnan(seen.means).all() and np.isinf(seen.stderrs).all()
+
+    # only the full 64-point slice seen: its points placeholder out,
+    # the single-point final slice finalizes for real
+    mask = first.points_done.copy()
+    mask[-1] = False
+    tail = engine.sweep_partial(ticket, since=mask)
+    assert tail.points_done.all()
+    assert np.isnan(tail.means[:64]).all()
+    np.testing.assert_array_equal(tail.means[64:], first.means[64:])
+    np.testing.assert_array_equal(tail.stderrs[64:], first.stderrs[64:])
+
+    # a partially-seen full slice is NOT skipped: every unseen point of
+    # it re-finalizes (slice granularity, point-exact mask)
+    mask2 = np.zeros(65, bool)
+    mask2[:32] = True
+    mid = engine.sweep_partial(ticket, since=mask2)
+    np.testing.assert_array_equal(mid.means, first.means)
+
+    with pytest.raises(ValueError, match="since mask"):
+        engine.sweep_partial(ticket, since=np.ones(64, bool))
+
+    _drain(engine)
+    done = engine.sweep_partial(ticket, since=np.zeros(65, bool))
+    assert done.complete
+    np.testing.assert_array_equal(done.means, engine.poll(ticket).means)
+
+
 def test_sweep_partial_rejects_non_sweep_tickets(make_engine):
     from repro.service import IntegrationRequest
     engine = make_engine()
